@@ -1,0 +1,65 @@
+"""Shared benchmark scaffolding: workload construction + CSV rows.
+
+All benchmarks run REDUCED workloads sized for this single-CPU container but
+keep the paper's structure (same method code paths, same ratios of
+points/observations). Rows: ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import distributions as d
+from repro.core import ml_predict as mlp
+from repro.core.pipeline import PDFComputer, PDFConfig
+from repro.core.regions import CubeGeometry
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def small_sim(num_simulations: int = 300, lines: int = 12, ppl: int = 40,
+              slices: int = 8, **kw) -> SeismicSimulation:
+    return SeismicSimulation(
+        SimulationConfig(
+            geometry=CubeGeometry(slices, lines, ppl),
+            num_simulations=num_simulations, **kw,
+        )
+    )
+
+
+def train_type_tree(sim, types=d.TYPES_4, slices=(0, 1, 2, 3),
+                    window_lines: int = 4) -> mlp.DecisionTree:
+    """§5.3.1 flow via the shared pipeline helper (slices cover all types)."""
+    from repro.core.pipeline import train_type_tree as _ttt
+
+    return _ttt(sim, types=types, slices=slices, window_lines=window_lines)
+
+
+def run_method(sim, method: str, types, window_lines: int, slice_i: int,
+               tree=None, mode: str = "faithful", warmup: bool = True):
+    # rep_bucket sized for the reduced workloads (the default 256 would pad
+    # grouped batches past the baseline's size on these small windows)
+    cfg = PDFConfig(types=types, window_lines=window_lines, method=method,
+                    mode=mode, rep_bucket=32)
+    if warmup:
+        # trigger jit compilation for this method's shapes on another slice
+        PDFComputer(cfg, sim, tree=tree).run_slice(
+            (slice_i + 1) % sim.geometry.num_slices
+        )
+    comp = PDFComputer(cfg, sim, tree=tree)
+    t0 = time.perf_counter()
+    res = comp.run_slice(slice_i)
+    wall = time.perf_counter() - t0
+    return res, wall

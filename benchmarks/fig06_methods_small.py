@@ -1,0 +1,39 @@
+"""Fig. 6 analog: PDF-computation time per method on a small workload,
+4-types vs 10-types (paper: 6 lines x 3006 points, 235 GB input; here a
+proportionally reduced cube, faithful cost mode).
+
+Derived metric: speedup over Baseline — the paper reports Grouping ~3.2x/3.5x,
+ML ~1.9x/4.5x, Grouping+ML ~8x/17x on this workload.
+"""
+
+from __future__ import annotations
+
+from repro.core import distributions as d
+from benchmarks.common import Row, run_method, small_sim, train_type_tree
+
+METHODS = ["baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml"]
+
+
+def run(quick: bool = True):
+    sim = small_sim(num_simulations=200 if quick else 1000)
+    rows = []
+    for types, tag in [(d.TYPES_4, "4types"), (d.TYPES_10, "10types")]:
+        tree = train_type_tree(sim, types)
+        base_wall = None
+        for method in METHODS:
+            res, wall = run_method(
+                sim, method, types, window_lines=3, slice_i=2,
+                tree=tree if "ml" in method else None,
+            )
+            compute = res.total_compute_seconds
+            if method == "baseline":
+                base_wall = compute
+            speedup = base_wall / max(compute, 1e-9)
+            rows.append(
+                Row(
+                    f"fig06/{tag}/{method}",
+                    compute * 1e6,
+                    f"speedup={speedup:.2f}x err={res.avg_error:.4f}",
+                )
+            )
+    return rows

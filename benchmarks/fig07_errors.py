@@ -1,0 +1,25 @@
+"""Fig. 7/11 analog: average Eq.-6 error, NoML vs WithML, 4-types vs
+10-types. Paper: WithML error exceeds NoML by <= 0.017; 10-types+ML can
+beat 4-types NoML."""
+
+from __future__ import annotations
+
+from repro.core import distributions as d
+from benchmarks.common import Row, run_method, small_sim, train_type_tree
+
+
+def run(quick: bool = True):
+    sim = small_sim(num_simulations=300 if quick else 1000)
+    rows = []
+    errs = {}
+    for types, tag in [(d.TYPES_4, "4types"), (d.TYPES_10, "10types")]:
+        tree = train_type_tree(sim, types)
+        for label, method in [("NoML", "baseline"), ("WithML", "ml")]:
+            res, wall = run_method(
+                sim, method, types, 4, 3, tree=tree if method == "ml" else None
+            )
+            errs[(tag, label)] = res.avg_error
+            rows.append(Row(f"fig07/{tag}/{label}", wall * 1e6, f"E={res.avg_error:.4f}"))
+    delta4 = errs[("4types", "WithML")] - errs[("4types", "NoML")]
+    rows.append(Row("fig07/ml_error_penalty_4types", 0.0, f"delta={delta4:.4f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 8/9 analog: average per-line PDF-computation time vs window size
+(Grouping). The paper finds a U-curve with the optimum at 25 lines; our
+reduced cube reproduces the shape: bigger windows amortize grouping until
+the per-window dedup/transfer overhead wins."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, run_method, small_sim
+from repro.core import distributions as d
+
+
+def run(quick: bool = True):
+    sim = small_sim(lines=24, ppl=30, num_simulations=200 if quick else 1000)
+    rows = []
+    best = (None, float("inf"))
+    for wl in [1, 2, 4, 8, 12, 24]:
+        res, wall = run_method(sim, "grouping", d.TYPES_4, wl, 2)
+        per_line = res.total_compute_seconds / 24
+        if per_line < best[1]:
+            best = (wl, per_line)
+        rows.append(
+            Row(f"fig08/window_{wl:02d}_lines", per_line * 1e6,
+                f"fitted={sum(s.num_fitted for s in res.stats)}")
+        )
+    rows.append(Row("fig08/optimal_window", best[1] * 1e6, f"lines={best[0]}"))
+    return rows

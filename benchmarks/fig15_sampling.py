@@ -1,0 +1,83 @@
+"""Fig. 15/16/17 analog: sampling — random vs k-means, rate sweep.
+
+Paper: data-loading time falls ~linearly with rate; PDF-computation stays
+~constant (tree prediction only); k-means costs more than random at the same
+rate; the type-percentage distance to the full population shrinks with rate
+(random) while k-means is better at tiny rates.
+
+The population mixes two slices of different dominant types so the
+type-percentage vector is non-trivial (our synthetic slices are type-pure).
+Moment computation per rate is warmed up before timing (jit compile excluded,
+as for every other figure).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributions as d
+from repro.core import sampling as smp
+from repro.core.regions import Window
+from benchmarks.common import Row, small_sim, train_type_tree
+from repro.kernels.moments import moments
+
+
+def run(quick: bool = True):
+    sim = small_sim(lines=16, ppl=40, num_simulations=250 if quick else 1000)
+    tree = train_type_tree(sim)
+    geom = sim.geometry
+    # mixed population: slice 2 (exponential) + slice 3 (uniform)
+    vals = np.concatenate(
+        [
+            sim.load_window(Window(s, 0, geom.lines_per_slice))
+            for s in (2, 3)
+        ]
+    )
+    m_all = moments(jnp.asarray(vals))
+    mean_all = np.asarray(m_all.mean)
+    std_all = np.asarray(m_all.std)
+    sk_all = np.asarray(m_all.skew)
+    ku_all = np.asarray(m_all.kurt)
+    full = smp.slice_features_from_moments(
+        mean_all, std_all, tree, d.TYPES_4, skew=sk_all, kurt=ku_all
+    )
+
+    rows = []
+    for rate in [0.001, 0.01, 0.1, 0.5, 1.0]:
+        idx = smp.sample_indices_random(len(mean_all), rate, seed=1)
+        sub = jnp.asarray(vals[idx])
+        jax.block_until_ready(moments(sub))  # warm the (len(idx), n) shape
+        t0 = time.perf_counter()
+        m = jax.block_until_ready(moments(sub))
+        t_load = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        f = smp.slice_features_from_moments(
+            np.asarray(m.mean), np.asarray(m.std), tree, d.TYPES_4,
+            skew=np.asarray(m.skew), kurt=np.asarray(m.kurt),
+        )
+        t_pdf = time.perf_counter() - t1
+        dist = smp.type_percentage_distance(f.type_percentage, full.type_percentage)
+        rows.append(
+            Row(f"fig15/random_rate_{rate}", (t_load + t_pdf) * 1e6,
+                f"load={t_load*1e3:.1f}ms pdf={t_pdf*1e3:.1f}ms dist={dist:.4f} "
+                f"pts={len(idx)}")
+        )
+    # k-means sampling (fig 16/17)
+    feats = np.stack([mean_all, std_all], 1)
+    for rate in [0.01, 0.1, 0.2]:
+        t0 = time.perf_counter()
+        idx = smp.sample_indices_kmeans(feats, rate, iters=5, seed=1)
+        t_kmeans = time.perf_counter() - t0
+        f = smp.slice_features_from_moments(
+            mean_all[idx], std_all[idx], tree, d.TYPES_4,
+            skew=sk_all[idx], kurt=ku_all[idx],
+        )
+        dist = smp.type_percentage_distance(f.type_percentage, full.type_percentage)
+        rows.append(
+            Row(f"fig16/kmeans_rate_{rate}", t_kmeans * 1e6, f"dist={dist:.4f}")
+        )
+    return rows

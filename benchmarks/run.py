@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale observation counts")
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig06_methods_small,
+        fig07_errors,
+        fig08_window_size,
+        fig10_slice,
+        fig13_scalability,
+        fig15_sampling,
+        fig18_bigdata,
+        kernel_bench,
+    )
+
+    modules = [
+        fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
+        fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
+    ]
+    print("name,us_per_call,derived")
+    for mod in modules:
+        if args.only and args.only not in mod.__name__:
+            continue
+        t0 = time.perf_counter()
+        rows = mod.run(quick=not args.full)
+        for r in rows:
+            print(r.csv())
+        print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a batch of prompts, decode with donated
+caches. Demonstrates the O(1)-state decode of the SSM family vs the KV-cache
+decode of the attention family.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ["mamba2-780m", "granite-3-8b", "hymba-1.5b"]:
+        print(f"=== {arch} (reduced) ===")
+        serve.main(["--arch", arch, "--batch", "4", "--prompt-len", "24",
+                    "--tokens", "16"])
+
+
+if __name__ == "__main__":
+    main()

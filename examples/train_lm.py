@@ -1,0 +1,41 @@
+"""Train a reduced LM config end to end on CPU (loss goes down), with
+checkpoint/resume. Any of the 10 assigned archs works via --arch.
+
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m --steps 60
+"""
+
+import argparse
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        loss = train.main([
+            "--arch", args.arch, "--reduced",
+            "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", ckpt, "--ckpt-every", str(max(args.steps // 2, 1)),
+            "--lr", "1e-3",
+        ])
+        print(f"final loss {loss:.4f}")
+        # resume from the checkpoint for a few more steps (restart path)
+        train.main([
+            "--arch", args.arch, "--reduced",
+            "--steps", str(args.steps + 10),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", ckpt, "--resume",
+            "--lr", "1e-3",
+        ])
+
+
+if __name__ == "__main__":
+    main()

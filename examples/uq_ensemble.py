@@ -1,0 +1,59 @@
+"""The paper's technique applied to the LM substrate: uncertainty
+quantification of an *ensemble* of model outputs.
+
+Each "point" is one logit coordinate; each "observation" is that logit under
+one ensemble member (different init seeds — a stand-in for checkpoint
+ensembles / MC-dropout in production). The same core engine (moments ->
+grouping -> fit/ML -> Eq.-5 error) that processes the seismic cube processes
+the logit tensor. See DESIGN.md §5 (Arch-applicability).
+
+  PYTHONPATH=src python examples/uq_ensemble.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import distributions as d
+from repro.core import fitting
+from repro.core.grouping import group_host
+from repro.kernels.moments import moments
+from repro.models import transformer as T
+
+
+def main():
+    cfg = registry.get("granite-3-8b").reduced()
+    ensemble = 64
+    toks = jax.random.randint(jax.random.PRNGKey(9), (1, 16), 0, cfg.vocab)
+
+    # ensemble of logits at the last position: (points=vocab, obs=ensemble)
+    outs = []
+    for seed in range(ensemble):
+        p = T.init_params(cfg, jax.random.PRNGKey(seed))
+        outs.append(np.asarray(T.forward(p, toks, cfg)[0, -1]))
+    obs = np.stack(outs, axis=1).astype(np.float32)  # (vocab, ensemble)
+    print(f"ensemble logit matrix: {obs.shape}")
+
+    m = moments(jnp.asarray(obs))
+    keys = np.stack(
+        [np.round(np.asarray(m.mean) / 1e-3), np.round(np.asarray(m.std) / 1e-3)], 1
+    ).astype(np.int64)
+    g = group_host(keys)
+    print(f"grouping: {g.num_groups} groups for {len(keys)} logits "
+          f"({len(keys) / g.num_groups:.1f}x dedup)")
+
+    r = fitting.compute_pdf_and_error(jnp.asarray(obs), m, d.TYPES_4, 16)
+    pct = np.bincount(np.asarray(r.type_idx), minlength=4) / obs.shape[0]
+    print("logit distribution types across the vocab:")
+    for t, p_ in zip(d.TYPES_4, pct):
+        print(f"  {t:12s} {p_:6.1%}")
+    print(f"avg Eq.-5 error: {float(np.asarray(r.error).mean()):.4f}")
+    # the classic CLT sanity check: sums of many random features -> normal
+    assert pct[0] > 0.5, "ensemble logits should be predominantly normal"
+    print("OK: ensemble logits are predominantly normal (CLT), "
+          "with per-coordinate PDFs + errors available for UQ.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, BlockDef
+
+__all__ = ["ArchConfig", "BlockDef"]

@@ -1,0 +1,126 @@
+"""Architecture config schema shared by the model zoo, launchers and tests.
+
+Every assigned architecture instantiates ``ArchConfig`` (one file per arch in
+this package); ``reduced()`` derives the CPU smoke-test variant. The paper's
+own workload (the PDF pipeline) has its own config in pdf_seismic.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One layer's shape inside the repeating pattern."""
+
+    mixer: str = "attn"  # attn | ssm | hybrid | cross_attn
+    window: int | None = None  # sliding-window size for attn mixers
+    ffn: str = "dense"  # dense | moe | moe_dense (MoE + parallel dense) | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    q_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # layer structure: `prefix` layers run unscanned (e.g. kimi's dense layer
+    # 0), then `pattern` repeats (num_layers - len(prefix)) / len(pattern)
+    # times under lax.scan.
+    pattern: tuple[BlockDef, ...] = (BlockDef(),)
+    prefix: tuple[BlockDef, ...] = ()
+
+    # MoE
+    num_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared_ff: int = 0  # shared-expert FFN width (kimi-k2 style), 0 = off
+
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # VLM / enc-dec
+    num_patches: int = 0  # stub image-patch sequence length (frontend is a stub)
+    enc_layers: int = 0
+    dec_layers: int = 0
+
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    norm_eps: float = 1e-6
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"  # none | full | dots
+    scan_unroll: int = 1  # 0 = full unroll (dry-run analysis lowering)
+    fsdp: bool = False  # additionally shard big param dims over the data axis
+
+    # -- beyond-paper optimization knobs (EXPERIMENTS.md §Perf) --------------
+    block_local_attn: bool = False  # banded O(S*W) kernel for windowed layers
+    moe_scan_dispatch: bool = False  # log-depth scan for MoE position assign
+    pad_vocab_to_multiple: int = 0  # pad embed/lm_head so vocab shards
+    gqa_repeat_kv: bool = False  # repeat KV to q_heads (full head sharding)
+    adam_moments_bf16: bool = False  # halve optimizer HBM
+    use_adafactor: bool = False  # factored second moment (kimi memory)
+    flash_decode: bool = False  # shard_map partial-KV decode attention
+    sequence_parallel: bool = False  # shard seq dim of activations over model
+    notes: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.pad_vocab_to_multiple
+        if m <= 0:
+            return self.vocab
+        return -(-self.vocab // m) * m
+
+    @property
+    def num_repeats(self) -> int:
+        body = self.num_layers - len(self.prefix)
+        if body % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: {body} body layers not divisible by pattern "
+                f"of {len(self.pattern)}"
+            )
+        return body // len(self.pattern)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/pattern, tiny dims."""
+        kv = min(self.kv_heads, 2)
+        q = max(kv * 2, 4) if self.q_heads else 0
+        pat_len = len(self.pattern)
+        return self.replace(
+            num_layers=len(self.prefix) + 2 * pat_len,
+            d_model=64,
+            q_heads=q,
+            kv_heads=kv,
+            head_dim=16,
+            d_ff=128,
+            vocab=512,
+            num_experts=min(self.num_experts, 8) if self.num_experts else 0,
+            moe_top_k=min(self.moe_top_k, 2) if self.moe_top_k else 0,
+            moe_shared_ff=64 if self.moe_shared_ff else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8 if self.ssm_state else 256,
+            num_patches=16 if self.num_patches else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            dec_layers=2 if self.dec_layers else 0,
+            param_dtype=jnp.float32,
+            compute_dtype=jnp.float32,
+            remat="none",
+        )

@@ -1,0 +1,123 @@
+"""Assigned input shapes x applicability, and ShapeDtypeStruct input specs.
+
+Shapes (identical set for every LM arch):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token, KV cache of seq)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid only
+
+``input_specs`` returns (kwargs of ShapeDtypeStruct, matching PartitionSpec
+kwargs) for the step function chosen by the shape — weak-type-correct,
+shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeDef] = {
+    "train_4k": ShapeDef("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeDef("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeDef("long_500k", "decode", 524_288, 1),
+}
+
+# Encoder-decoder prefill uses a short decoder prompt against the long
+# encoder memory (the 32k is the audio-frame sequence).
+ENCDEC_PROMPT = 128
+
+
+def applicable(cfg: ArchConfig, shape: ShapeDef) -> tuple[bool, str]:
+    """(runs?, reason-if-skip). long_500k needs sub-quadratic attention:
+    only the SSM/hybrid families qualify (DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "skip(full-attn)"
+    return True, ""
+
+
+def _batch_axes(mesh: Mesh):
+    axes = tuple(a for a in mesh.axis_names if a != sh.MODEL_AXIS)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeDef, mesh: Mesh):
+    """Returns (args: dict[str, ShapeDtypeStruct], pspecs: dict[str, P-tree]).
+
+    Keys depend on (family, shape.kind):
+      train:   tokens, targets [, memory | frames]
+      prefill: tokens [, memory | frames]
+      decode:  token, caches, pos [, memory]
+    """
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_p = P(ba, None)
+    f32 = jnp.float32
+
+    if shape.kind == "train":
+        args = {"tokens": tok, "targets": tok}
+        specs = {"tokens": tok_p, "targets": tok_p}
+        if cfg.family == "vlm":
+            args["memory"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), f32)
+            specs["memory"] = P(ba, None, None)
+        if cfg.family == "encdec":
+            args["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f32)
+            specs["frames"] = P(ba, None, None)
+        return args, specs
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            args = {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, ENCDEC_PROMPT), jnp.int32),
+            }
+            specs = {"frames": P(ba, None, None), "tokens": tok_p}
+            return args, specs
+        args = {"tokens": tok}
+        specs = {"tokens": tok_p}
+        if cfg.family == "vlm":
+            args["memory"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), f32)
+            specs["memory"] = P(ba, None, None)
+        return args, specs
+
+    if shape.kind == "decode":
+        from repro.models import encdec as ED
+        from repro.models import transformer as T
+
+        cdt = cfg.compute_dtype
+        dprod = 1
+        for a in mesh.axis_names:
+            if a != sh.MODEL_AXIS:
+                dprod *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        tok_ba = ba if b % dprod == 0 else None
+        if cfg.family == "encdec":
+            cache = jax.eval_shape(
+                lambda: ED.init_cache(cfg, b, s, mem_len=s, dtype=cdt)
+            )
+        else:
+            cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s, dtype=cdt))
+        cache_specs = sh.cache_pspecs(mesh, cache, b)
+        args = {"token": jax.ShapeDtypeStruct((b,), jnp.int32), "caches": cache}
+        specs = {"token": P(tok_ba), "caches": cache_specs}
+        if cfg.family == "vlm":
+            args["memory"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), f32)
+            specs["memory"] = P(tok_ba, None, None)
+        return args, specs
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,314 @@
+"""Candidate distribution types (§6.1 of the paper): fitters, PDFs, CDFs.
+
+The paper fits each candidate type with an external R program per point.
+On TPU we replace that with *closed-form method-of-moments fitters* that are
+pure jnp functions of the per-point moment vector, so the whole fit for a
+window of points is one fused, vectorized XLA computation (see DESIGN.md §2).
+
+Every distribution is parameterized by a fixed-width ``(..., 3)`` parameter
+slot so that all types stack into a single ``(..., T, 3)`` array — this keeps
+the fit-all-types path (Algorithm 3) a dense batched computation with an
+``argmin`` over the type axis, and the ML-predicted path (Algorithm 4) a
+``take_along_axis`` on the same array.
+
+Moment conventions: ``mean``, ``var`` (unbiased, n-1), ``skew`` (g1 =
+m3/sigma^3), ``kurt`` (excess, m4/sigma^4 - 3), ``vmin``, ``vmax``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+# The paper's two candidate sets (§6.1).
+TYPES_4: tuple[str, ...] = ("normal", "uniform", "exponential", "lognormal")
+TYPES_10: tuple[str, ...] = TYPES_4 + (
+    "cauchy",
+    "gamma",
+    "geometric",
+    "logistic",
+    "student_t",
+    "weibull",
+)
+
+_EPS = 1e-12
+_BIG = 1e30
+
+
+class Moments(NamedTuple):
+    """Per-point summary statistics; every field has the same leading shape."""
+
+    mean: jax.Array
+    var: jax.Array
+    skew: jax.Array
+    kurt: jax.Array
+    vmin: jax.Array
+    vmax: jax.Array
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(jnp.maximum(self.var, 0.0))
+
+
+def moments_from_values(values: jax.Array, axis: int = -1) -> Moments:
+    """Reference moment computation (the Pallas kernel in kernels/moments
+    computes the same thing tiled; tests assert allclose against this)."""
+    n = values.shape[axis]
+    mean = jnp.mean(values, axis=axis)
+    centered = values - jnp.expand_dims(mean, axis)
+    m2 = jnp.mean(centered**2, axis=axis)
+    m3 = jnp.mean(centered**3, axis=axis)
+    m4 = jnp.mean(centered**4, axis=axis)
+    var = m2 * n / max(n - 1, 1)  # unbiased, Eq. 2 of the paper
+    sig = jnp.sqrt(jnp.maximum(m2, _EPS))
+    skew = m3 / sig**3
+    kurt = m4 / jnp.maximum(m2, _EPS) ** 2 - 3.0
+    return Moments(mean, var, skew, kurt, jnp.min(values, axis=axis), jnp.max(values, axis=axis))
+
+
+# ---------------------------------------------------------------------------
+# Per-type method-of-moments fitters. Each returns (..., 3) params.
+# Parameter slot layout is documented per function; unused slots are zero.
+# ---------------------------------------------------------------------------
+
+
+def _pack(*ps: jax.Array) -> jax.Array:
+    ps = ps + (jnp.zeros_like(ps[0]),) * (3 - len(ps))
+    return jnp.stack(ps, axis=-1)
+
+
+def fit_normal(m: Moments) -> jax.Array:
+    """[mu, sigma, 0]"""
+    return _pack(m.mean, jnp.maximum(m.std, _EPS))
+
+
+def fit_uniform(m: Moments) -> jax.Array:
+    """[a, b, 0] — observed support, as the paper's R fitter uses the data range."""
+    return _pack(m.vmin, jnp.maximum(m.vmax, m.vmin + _EPS))
+
+
+def fit_exponential(m: Moments) -> jax.Array:
+    """[rate, 0, 0] — rate = 1/mean (the paper names `rate` explicitly)."""
+    return _pack(1.0 / jnp.maximum(m.mean, _EPS))
+
+
+def fit_lognormal(m: Moments) -> jax.Array:
+    """[mu, sigma, 0] of log-space."""
+    mean = jnp.maximum(m.mean, _EPS)
+    sigma2 = jnp.log1p(jnp.maximum(m.var, 0.0) / mean**2)
+    mu = jnp.log(mean) - 0.5 * sigma2
+    return _pack(mu, jnp.sqrt(jnp.maximum(sigma2, _EPS)))
+
+
+def fit_cauchy(m: Moments) -> jax.Array:
+    """[loc, scale, 0]. Cauchy has no moments; the standard quantile fit needs
+    the median/IQR which the moment pipeline doesn't carry, so we use the
+    common robust fallback loc=mean, scale=std/2 — a deliberately weak fit
+    whose Eq.-5 error deselects it unless the data really is heavy-tailed."""
+    return _pack(m.mean, jnp.maximum(0.5 * m.std, _EPS))
+
+
+def fit_gamma(m: Moments) -> jax.Array:
+    """[k (shape), theta (scale), 0]."""
+    mean = jnp.maximum(m.mean, _EPS)
+    var = jnp.maximum(m.var, _EPS)
+    k = mean**2 / var
+    theta = var / mean
+    return _pack(jnp.maximum(k, _EPS), jnp.maximum(theta, _EPS))
+
+
+def fit_geometric(m: Moments) -> jax.Array:
+    """[p, 0, 0] on support {0,1,2,...}: p = 1/(1+mean)."""
+    p = 1.0 / (1.0 + jnp.maximum(m.mean, 0.0))
+    return _pack(jnp.clip(p, _EPS, 1.0))
+
+
+def fit_logistic(m: Moments) -> jax.Array:
+    """[loc, s, 0]: s = std*sqrt(3)/pi."""
+    s = m.std * jnp.sqrt(3.0) / jnp.pi
+    return _pack(m.mean, jnp.maximum(s, _EPS))
+
+
+def fit_student_t(m: Moments) -> jax.Array:
+    """[loc, scale, nu] — location-scale t; nu from excess kurtosis
+    (gamma2 = 6/(nu-4) => nu = 4 + 6/gamma2), clamped to (4.5, 50)."""
+    g2 = jnp.maximum(m.kurt, _EPS)
+    nu = jnp.clip(4.0 + 6.0 / g2, 4.5, 50.0)
+    scale = jnp.sqrt(jnp.maximum(m.var, _EPS) * (nu - 2.0) / nu)
+    return _pack(m.mean, jnp.maximum(scale, _EPS), nu)
+
+
+def _weibull_cv2(k: jax.Array) -> jax.Array:
+    """Squared coefficient of variation of Weibull(k, 1)."""
+    lg1 = jsp.gammaln(1.0 + 1.0 / k)
+    lg2 = jsp.gammaln(1.0 + 2.0 / k)
+    return jnp.exp(lg2 - 2.0 * lg1) - 1.0
+
+
+def fit_weibull(m: Moments, iters: int = 20) -> jax.Array:
+    """[k (shape), lam (scale), 0] — solve CV^2(k) = var/mean^2 by bisection
+    (fixed iteration count keeps the graph static; 20 halvings of (0.2, 50)
+    give k to ~1e-4 relative)."""
+    mean = jnp.maximum(m.mean, _EPS)
+    target = jnp.clip(jnp.maximum(m.var, _EPS) / mean**2, 1e-6, 1e4)
+
+    lo = jnp.full_like(mean, 0.2)
+    hi = jnp.full_like(mean, 50.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        # CV^2 is decreasing in k.
+        too_small_k = _weibull_cv2(mid) < target  # need smaller k
+        hi = jnp.where(too_small_k, mid, hi)
+        lo = jnp.where(too_small_k, lo, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    k = 0.5 * (lo + hi)
+    lam = mean / jnp.exp(jsp.gammaln(1.0 + 1.0 / k))
+    return _pack(k, lam)
+
+
+_FITTERS = {
+    "normal": fit_normal,
+    "uniform": fit_uniform,
+    "exponential": fit_exponential,
+    "lognormal": fit_lognormal,
+    "cauchy": fit_cauchy,
+    "gamma": fit_gamma,
+    "geometric": fit_geometric,
+    "logistic": fit_logistic,
+    "student_t": fit_student_t,
+    "weibull": fit_weibull,
+}
+
+
+def fit_all(types: Sequence[str], m: Moments) -> jax.Array:
+    """Algorithm 3 line 3 for every candidate type: (..., T, 3) params."""
+    return jnp.stack([_FITTERS[t](m) for t in types], axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# CDFs. cdf_<type>(params (...,3), x (...)) -> (...). Broadcasting applies.
+# ---------------------------------------------------------------------------
+
+
+def _phi(z: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + jax.lax.erf(z / jnp.sqrt(2.0)))
+
+
+def cdf_normal(p: jax.Array, x: jax.Array) -> jax.Array:
+    return _phi((x - p[..., 0]) / p[..., 1])
+
+
+def cdf_uniform(p: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.clip((x - p[..., 0]) / (p[..., 1] - p[..., 0]), 0.0, 1.0)
+
+
+def cdf_exponential(p: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.where(x <= 0, 0.0, 1.0 - jnp.exp(-p[..., 0] * jnp.maximum(x, 0.0)))
+
+
+def cdf_lognormal(p: jax.Array, x: jax.Array) -> jax.Array:
+    safe_x = jnp.maximum(x, _EPS)
+    return jnp.where(x <= 0, 0.0, _phi((jnp.log(safe_x) - p[..., 0]) / p[..., 1]))
+
+
+def cdf_cauchy(p: jax.Array, x: jax.Array) -> jax.Array:
+    return 0.5 + jnp.arctan((x - p[..., 0]) / p[..., 1]) / jnp.pi
+
+
+def cdf_gamma(p: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.where(x <= 0, 0.0, jsp.gammainc(p[..., 0], jnp.maximum(x, 0.0) / p[..., 1]))
+
+
+def cdf_geometric(p: jax.Array, x: jax.Array) -> jax.Array:
+    # Support {0,1,...}: F(x) = 1 - (1-p)^(floor(x)+1) for x >= 0.
+    k = jnp.floor(jnp.maximum(x, 0.0))
+    return jnp.where(x < 0, 0.0, 1.0 - jnp.exp((k + 1.0) * jnp.log1p(-jnp.minimum(p[..., 0], 1 - _EPS))))
+
+
+def cdf_logistic(p: jax.Array, x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid((x - p[..., 0]) / p[..., 1])
+
+
+def cdf_student_t(p: jax.Array, x: jax.Array) -> jax.Array:
+    loc, scale, nu = p[..., 0], p[..., 1], p[..., 2]
+    t = (x - loc) / scale
+    ib = jsp.betainc(0.5 * nu, 0.5, nu / (nu + t**2))
+    return jnp.where(t >= 0, 1.0 - 0.5 * ib, 0.5 * ib)
+
+
+def cdf_weibull(p: jax.Array, x: jax.Array) -> jax.Array:
+    k, lam = p[..., 0], p[..., 1]
+    z = jnp.maximum(x, 0.0) / lam
+    return jnp.where(x <= 0, 0.0, -jnp.expm1(-(z**k)))
+
+
+_CDFS = {
+    "normal": cdf_normal,
+    "uniform": cdf_uniform,
+    "exponential": cdf_exponential,
+    "lognormal": cdf_lognormal,
+    "cauchy": cdf_cauchy,
+    "gamma": cdf_gamma,
+    "geometric": cdf_geometric,
+    "logistic": cdf_logistic,
+    "student_t": cdf_student_t,
+    "weibull": cdf_weibull,
+}
+
+
+def cdf(type_name: str, params: jax.Array, x: jax.Array) -> jax.Array:
+    return _CDFS[type_name](params, x)
+
+
+def cdf_all(types: Sequence[str], params: jax.Array, x: jax.Array) -> jax.Array:
+    """params (..., T, 3), x (..., K) -> (..., T, K): every type's CDF at x.
+
+    Used by the fit-all path: T is small and static so evaluating all types
+    densely is cheaper than any gather on TPU.
+    """
+    # params[..., t, None, :] is (..., 1, 3); its param columns broadcast
+    # (..., 1) against x (..., K) -> (..., K). Stack over the T types.
+    return jnp.stack(
+        [_CDFS[t](params[..., i, None, :], x) for i, t in enumerate(types)], axis=-2
+    )
+
+
+# Samplers (for the data substrate + tests) -----------------------------------
+
+
+def sample(type_name: str, params, key: jax.Array, shape) -> jax.Array:
+    """Draw samples; used by data/simulation.py and property tests."""
+    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0 - 1e-6)
+    p = jnp.asarray(params, dtype=jnp.float32)
+    if type_name == "normal":
+        return p[0] + p[1] * jax.random.normal(key, shape)
+    if type_name == "uniform":
+        return p[0] + (p[1] - p[0]) * u
+    if type_name == "exponential":
+        return -jnp.log1p(-u) / p[0]
+    if type_name == "lognormal":
+        return jnp.exp(p[0] + p[1] * jax.random.normal(key, shape))
+    if type_name == "cauchy":
+        return p[0] + p[1] * jnp.tan(jnp.pi * (u - 0.5))
+    if type_name == "gamma":
+        return p[1] * jax.random.gamma(key, p[0], shape)
+    if type_name == "geometric":
+        return jnp.floor(jnp.log1p(-u) / jnp.log1p(-p[0]))
+    if type_name == "logistic":
+        return p[0] + p[1] * (jnp.log(u) - jnp.log1p(-u))
+    if type_name == "student_t":
+        return p[0] + p[1] * jax.random.t(key, p[2], shape)
+    if type_name == "weibull":
+        return p[1] * (-jnp.log1p(-u)) ** (1.0 / p[0])
+    raise ValueError(f"unknown distribution type {type_name!r}")
+
+
+def type_index(types: Sequence[str], name: str) -> int:
+    return list(types).index(name)

@@ -1,0 +1,130 @@
+"""Data grouping (§5.2): points sharing (quantized) mean/std fit once.
+
+Three layers, mirroring how the paper's Spark shuffle decomposes on a TPU
+mesh (DESIGN.md §2):
+
+* ``quantize_keys``       — device: (mu, sigma) -> integer key pair.
+* ``group_host``          — host: np.unique over a window's keys; returns the
+  representative indices + inverse map. This is the honest analog of the
+  paper's Aggregate: grouping is *data movement + dedup*, then the expensive
+  fit runs only on representatives (real compute savings, since the host
+  re-dispatches a smaller padded batch to the device).
+* ``group_device_global`` — device: all_gather over the mesh + sort-based
+  dedup, used by the dry-run to expose the *collective* cost of global
+  grouping (the paper's "shuffle kills grouping at scale" finding shows up
+  in the roofline's collective term).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TOL = 1e-6
+
+
+def quantize_keys(mean: jax.Array, std: jax.Array, tol: float = DEFAULT_TOL) -> jax.Array:
+    """(P,) mu/sigma -> (P, 2) int32 quantized keys. tol is the paper's
+    'acceptable fluctuation' (§5.2); exact grouping is tol -> 0."""
+    qm = jnp.round(mean / tol).astype(jnp.int32)
+    qs = jnp.round(std / tol).astype(jnp.int32)
+    return jnp.stack([qm, qs], axis=-1)
+
+
+class HostGroups(NamedTuple):
+    rep_indices: np.ndarray  # (G,) indices of one representative per group
+    inverse: np.ndarray  # (P,) group id of every point
+    num_groups: int
+
+
+def group_host(keys: np.ndarray) -> HostGroups:
+    """Window-level dedup on host (the shuffle boundary). keys: (P, 2) int."""
+    keys = np.asarray(keys)
+    _, rep_indices, inverse = np.unique(
+        keys, axis=0, return_index=True, return_inverse=True
+    )
+    return HostGroups(rep_indices.astype(np.int64), inverse.reshape(-1).astype(np.int64), len(rep_indices))
+
+
+def pad_representatives(rep_indices: np.ndarray, bucket: int = 256) -> np.ndarray:
+    """Pad the representative list to a bucket multiple so the fit step's jit
+    cache stays small across windows (padded slots repeat rep 0; their results
+    are discarded by the inverse map)."""
+    g = len(rep_indices)
+    padded = int(np.ceil(max(g, 1) / bucket) * bucket)
+    out = np.full((padded,), rep_indices[0] if g else 0, dtype=np.int64)
+    out[:g] = rep_indices
+    return out
+
+
+class DeviceGroups(NamedTuple):
+    """Static-shape device grouping: every point learns its group's
+    representative (the first point, in (key, index) sort order, holding an
+    identical key)."""
+
+    rep_for_point: jax.Array  # (P,) index of the point's representative
+    is_rep: jax.Array  # (P,) bool
+    num_groups: jax.Array  # () int32
+
+
+def group_device(keys: jax.Array) -> DeviceGroups:
+    """Sort-based dedup with static shapes (single shard).
+
+    Sorts by (key_mu, key_sigma, index), marks segment heads, and propagates
+    each segment head's original index with a cumulative max — O(P log P),
+    no dynamic shapes, fully jit-able.
+    """
+    p = keys.shape[0]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    order = jnp.lexsort((idx, keys[:, 1], keys[:, 0]))
+    sk = keys[order]
+    same_as_prev = jnp.concatenate(
+        [jnp.array([False]), jnp.all(sk[1:] == sk[:-1], axis=-1)]
+    )
+    sorted_orig = order.astype(jnp.int32)
+    # Segment head keeps its own index; followers inherit via cumulative max
+    # (valid because within a segment the head has the smallest index only if
+    # we seed followers with -1 and take a running max of head indices).
+    head_idx = jnp.where(same_as_prev, -1, sorted_orig)
+    seg_id = jnp.cumsum(jnp.logical_not(same_as_prev).astype(jnp.int32)) - 1
+    # For each segment, the head value; scatter-max into (P,) segment table.
+    seg_head = jnp.full((p,), -1, dtype=jnp.int32).at[seg_id].max(head_idx)
+    rep_sorted = seg_head[seg_id]
+    rep_for_point = jnp.zeros((p,), jnp.int32).at[order].set(rep_sorted)
+    is_rep = rep_for_point == idx
+    return DeviceGroups(rep_for_point, is_rep, jnp.sum(is_rep).astype(jnp.int32))
+
+
+def group_device_global(keys: jax.Array, axis_names: tuple[str, ...]) -> DeviceGroups:
+    """Global grouping across mesh axes — the paper's cross-node shuffle.
+
+    all_gathers every shard's keys (this is the collective the roofline's
+    collective term prices), dedups the gathered table, and maps each local
+    point to its *global* representative index (flattened across shards).
+    Call inside shard_map with ``axis_names`` bound.
+    """
+    gathered = keys
+    for ax in axis_names:
+        gathered = jax.lax.all_gather(gathered, ax, tiled=True)
+    groups = group_device(gathered)
+    # Local shard's slice of the global table:
+    shard_index = 0
+    total = 1
+    for ax in axis_names:
+        shard_index = shard_index * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        total *= jax.lax.axis_size(ax)
+    p_local = keys.shape[0]
+    start = shard_index * p_local
+    local_rep = jax.lax.dynamic_slice_in_dim(groups.rep_for_point, start, p_local)
+    local_is_rep = jax.lax.dynamic_slice_in_dim(groups.is_rep, start, p_local)
+    return DeviceGroups(local_rep, local_is_rep, groups.num_groups)
+
+
+def scatter_group_results(
+    rep_results: jax.Array, inverse: jax.Array
+) -> jax.Array:
+    """Representative results (G, ...) + inverse (P,) -> per-point (P, ...)."""
+    return rep_results[inverse]

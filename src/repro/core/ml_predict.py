@@ -1,0 +1,185 @@
+"""ML prediction (§5.3): decision-tree classification of distribution types.
+
+The paper trains an MLlib decision tree on previously generated output data
+(features: mean and standard deviation; labels: distribution type) and uses
+it to skip Algorithm 3's try-all-types loop. Here:
+
+* ``train_tree``        — host-side exact CART/Gini trainer over maxBins
+  histogram candidate splits (the same hyper-parameters MLlib exposes:
+  ``depth`` and ``maxBins``). Training is seconds even in the paper (1-20 s),
+  so host training changes nothing material (DESIGN.md §8.4).
+* ``DecisionTree``      — a *complete-binary-tree array layout* (feature,
+  threshold per internal node; label per leaf) so prediction is a fixed
+  ``depth``-step vectorized descent: branch-free, jit-able, broadcastable to
+  millions of points. Early leaves are expanded downward (children repeat the
+  leaf), keeping the descent static.
+* ``tune_hyperparameters`` — §5.3.1 grid search on a validation split.
+
+The trained arrays are tiny (2^depth nodes) and fully replicated across the
+mesh — the analog of the paper broadcasting the model to all Spark workers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DecisionTree:
+    """Complete binary tree of given depth in array form.
+
+    feature[i], threshold[i] for internal nodes i in [0, 2^depth - 1);
+    leaf_label[j] for leaves j in [0, 2^depth). Descent: go left iff
+    x[feature] <= threshold.
+    """
+
+    depth: int
+    feature: np.ndarray  # (2^depth - 1,) int32
+    threshold: np.ndarray  # (2^depth - 1,) float32
+    leaf_label: np.ndarray  # (2^depth,) int32
+
+    def as_device(self):
+        return (
+            jnp.asarray(self.feature),
+            jnp.asarray(self.threshold),
+            jnp.asarray(self.leaf_label),
+        )
+
+
+def predict(tree_arrays, features: jax.Array) -> jax.Array:
+    """features (..., F) -> (...,) predicted class. Fixed-depth descent."""
+    feat, thr, leaf = tree_arrays
+    depth = int(np.log2(leaf.shape[0]) + 0.5)
+    node = jnp.zeros(features.shape[:-1], dtype=jnp.int32)
+    for _ in range(depth):
+        f = feat[node]
+        t = thr[node]
+        x = jnp.take_along_axis(features, f[..., None], axis=-1)[..., 0]
+        go_left = x <= t
+        node = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+    leaf_idx = node - (leaf.shape[0] - 1)
+    return leaf[leaf_idx]
+
+
+def _gini_split(labels: np.ndarray, num_classes: int, left_mask: np.ndarray) -> float:
+    def gini(sub):
+        if len(sub) == 0:
+            return 0.0
+        counts = np.bincount(sub, minlength=num_classes).astype(np.float64)
+        p = counts / len(sub)
+        return 1.0 - np.sum(p * p)
+
+    n = len(labels)
+    nl = left_mask.sum()
+    return (nl / n) * gini(labels[left_mask]) + ((n - nl) / n) * gini(labels[~left_mask])
+
+
+def train_tree(
+    features: np.ndarray,
+    labels: np.ndarray,
+    num_classes: int,
+    depth: int = 4,
+    max_bins: int = 32,
+) -> DecisionTree:
+    """Greedy CART with Gini impurity over maxBins quantile candidate splits."""
+    features = np.asarray(features, dtype=np.float32)
+    labels = np.asarray(labels, dtype=np.int32)
+    n, num_feat = features.shape
+
+    n_internal = 2**depth - 1
+    feat_arr = np.zeros((n_internal,), dtype=np.int32)
+    thr_arr = np.full((n_internal,), np.inf, dtype=np.float32)  # inf => always left
+    leaf_arr = np.zeros((2**depth,), dtype=np.int32)
+
+    def majority(idx):
+        if len(idx) == 0:
+            return 0
+        return int(np.bincount(labels[idx], minlength=num_classes).argmax())
+
+    # node -> sample indices, built level by level.
+    assignments = {0: np.arange(n)}
+    for node in range(n_internal):
+        idx = assignments.pop(node, np.empty((0,), dtype=np.int64))
+        left_child, right_child = 2 * node + 1, 2 * node + 2
+        best = None
+        if len(idx) > 1 and len(np.unique(labels[idx])) > 1:
+            sub_x, sub_y = features[idx], labels[idx]
+            for f in range(num_feat):
+                col = sub_x[:, f]
+                qs = np.unique(
+                    np.quantile(col, np.linspace(0, 1, min(max_bins, len(col)) + 1)[1:-1])
+                )
+                for t in qs:
+                    lm = col <= t
+                    if lm.all() or not lm.any():
+                        continue
+                    g = _gini_split(sub_y, num_classes, lm)
+                    if best is None or g < best[0]:
+                        best = (g, f, t, lm)
+        if best is None:
+            # Early leaf: expand downward (always-left path carries the label).
+            feat_arr[node] = 0
+            thr_arr[node] = np.inf
+            assignments[left_child] = idx
+            assignments[right_child] = np.empty((0,), dtype=np.int64)
+        else:
+            _, f, t, lm = best
+            feat_arr[node] = f
+            thr_arr[node] = t
+            assignments[left_child] = idx[lm]
+            assignments[right_child] = idx[~lm]
+
+    # Leaves: majority label; empty leaves inherit from sibling/parent path.
+    first_leaf = n_internal
+    global_major = majority(np.arange(n))
+    for j in range(2**depth):
+        idx = assignments.get(first_leaf + j, np.empty((0,), dtype=np.int64))
+        leaf_arr[j] = majority(idx) if len(idx) else global_major
+
+    # Fix empty leaves under early-leaf chains: propagate the left sibling.
+    for j in range(2**depth):
+        node_idx = first_leaf + j
+        if len(assignments.get(node_idx, ())) == 0 and j % 2 == 1:
+            leaf_arr[j] = leaf_arr[j - 1]
+
+    return DecisionTree(depth, feat_arr, thr_arr, leaf_arr)
+
+
+def model_error(tree: DecisionTree, features: np.ndarray, labels: np.ndarray) -> float:
+    """Wrong-prediction rate (the paper's 'model error')."""
+    pred = np.asarray(predict(tree.as_device(), jnp.asarray(features)))
+    return float(np.mean(pred != labels))
+
+
+def tune_hyperparameters(
+    features: np.ndarray,
+    labels: np.ndarray,
+    num_classes: int,
+    depths: Sequence[int] = (2, 3, 4, 5, 6),
+    bins: Sequence[int] = (8, 16, 32, 64),
+    val_fraction: float = 0.3,
+    seed: int = 0,
+) -> tuple[int, int, float]:
+    """§5.3.1: pick the smallest (depth, maxBins) past which validation error
+    stops decreasing. Returns (depth, max_bins, best_val_error)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(labels))
+    n_val = int(len(labels) * val_fraction)
+    va, tr = perm[:n_val], perm[n_val:]
+
+    best = (depths[0], bins[0], 1.0)
+    for d in depths:
+        for b in bins:
+            tree = train_tree(features[tr], labels[tr], num_classes, d, b)
+            err = model_error(tree, features[va], labels[va])
+            # Strict improvement keeps the minimal hyper-parameters (paper:
+            # "choose the minimum values from which the error does not
+            # decrease when they increase").
+            if err < best[2] - 1e-9:
+                best = (d, b, err)
+    return best

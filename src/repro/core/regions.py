@@ -1,0 +1,56 @@
+"""Spatial cube geometry (§3): cube -> slices -> lines -> points, windows.
+
+A cube is (num_slices, lines_per_slice, points_per_line); a point's integer
+identification (the paper's RDD key) is its flattened index. A window is a
+contiguous run of lines within a slice (§4.2 principle 4: windows are
+disjoint, fixed size once configured).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, NamedTuple
+
+
+@dataclass(frozen=True)
+class CubeGeometry:
+    num_slices: int
+    lines_per_slice: int
+    points_per_line: int
+
+    @property
+    def points_per_slice(self) -> int:
+        return self.lines_per_slice * self.points_per_line
+
+    @property
+    def total_points(self) -> int:
+        return self.num_slices * self.points_per_slice
+
+    def point_id(self, slice_i: int, line: int, point: int) -> int:
+        return (slice_i * self.lines_per_slice + line) * self.points_per_line + point
+
+
+class Window(NamedTuple):
+    slice_i: int
+    line_start: int
+    line_end: int  # exclusive
+
+    @property
+    def num_lines(self) -> int:
+        return self.line_end - self.line_start
+
+
+def iter_windows(
+    geom: CubeGeometry, slice_i: int, window_lines: int, start_line: int = 0
+) -> Iterator[Window]:
+    """Disjoint sliding windows over a slice; ``start_line`` supports
+    restart-from-watermark (checkpointed window progress)."""
+    line = start_line
+    while line < geom.lines_per_slice:
+        end = min(line + window_lines, geom.lines_per_slice)
+        yield Window(slice_i, line, end)
+        line = end
+
+
+def num_windows(geom: CubeGeometry, window_lines: int) -> int:
+    return -(-geom.lines_per_slice // window_lines)

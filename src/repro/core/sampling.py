@@ -1,0 +1,108 @@
+"""Sampling (§5.4, Algorithm 5): fast slice features from a fraction of points.
+
+Estimates a slice's features — average mean, average std, distribution-type
+percentages — by sampling points, computing their moments, optionally
+grouping, and classifying types with the decision tree (no Eq.-5 fitting at
+all, which is why the paper's PDF-computation stage drops to ~2 s).
+
+Both samplers from the paper are provided: random (the recommended one) and
+k-means (Lloyd with a fixed iteration count on (mu, sigma); the point closest
+to each centroid becomes a "double sampled" point).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grouping as grp
+from repro.core import ml_predict as mlp
+
+
+class SliceFeatures(NamedTuple):
+    avg_mean: float
+    avg_std: float
+    type_percentage: np.ndarray  # (T,) fractions summing to ~1
+    num_sampled: int
+
+
+def sample_indices_random(
+    num_points: int, rate: float, seed: int = 0
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    k = max(1, int(round(num_points * rate)))
+    return np.sort(rng.choice(num_points, size=k, replace=False))
+
+
+def sample_indices_kmeans(
+    features: np.ndarray, rate: float, iters: int = 10, seed: int = 0
+) -> np.ndarray:
+    """k-means 'double sampling': k = rate * P clusters on (mu, sigma); the
+    member closest to each centroid is selected. Fixed Lloyd iterations."""
+    rng = np.random.default_rng(seed)
+    p = len(features)
+    k = max(1, int(round(p * rate)))
+    centers = features[rng.choice(p, size=k, replace=False)]
+    for _ in range(iters):
+        d2 = ((features[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        assign = d2.argmin(axis=1)
+        for c in range(k):
+            members = features[assign == c]
+            if len(members):
+                centers[c] = members.mean(axis=0)
+    d2 = ((features[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    assign = d2.argmin(axis=1)
+    chosen = []
+    for c in range(k):
+        member_idx = np.nonzero(assign == c)[0]
+        if len(member_idx):
+            chosen.append(member_idx[d2[member_idx, c].argmin()])
+    return np.sort(np.unique(np.asarray(chosen, dtype=np.int64)))
+
+
+def slice_features_from_moments(
+    mean: np.ndarray,
+    std: np.ndarray,
+    tree: mlp.DecisionTree,
+    types: Sequence[str],
+    group_first: bool = True,
+    group_tol: float = grp.DEFAULT_TOL,
+    skew: np.ndarray | None = None,
+    kurt: np.ndarray | None = None,
+) -> SliceFeatures:
+    """Algorithm 5 lines 15-26: (optionally) group, predict types, aggregate.
+
+    Note the type percentages are over *points*, so grouped predictions are
+    expanded back through the inverse map before the percentage calculation.
+    ``skew``/``kurt`` extend the features when the tree was trained with the
+    4-moment feature set (pipeline.TREE_FEATURES); they are free outputs of
+    the fused moments kernel.
+    """
+    if skew is not None:
+        from repro.core.pipeline import tree_features_np
+
+        feats = tree_features_np(mean, std, skew,
+                                 kurt if kurt is not None else np.zeros_like(skew))
+    else:  # paper-faithful 2-feature mode (tests cover it)
+        feats = np.stack([mean, std], axis=-1).astype(np.float32)
+    if group_first:
+        keys = np.stack(
+            [np.round(mean / group_tol), np.round(std / group_tol)], axis=-1
+        ).astype(np.int64)
+        groups = grp.group_host(keys)
+        rep_feats = feats[groups.rep_indices]
+        rep_pred = np.asarray(mlp.predict(tree.as_device(), jnp.asarray(rep_feats)))
+        pred = rep_pred[groups.inverse]
+    else:
+        pred = np.asarray(mlp.predict(tree.as_device(), jnp.asarray(feats)))
+
+    pct = np.bincount(pred, minlength=len(types)).astype(np.float64) / len(pred)
+    return SliceFeatures(float(mean.mean()), float(std.mean()), pct, len(mean))
+
+
+def type_percentage_distance(a: np.ndarray, b: np.ndarray) -> float:
+    """Fig. 17's Euclidean distance between type-percentage vectors."""
+    return float(np.sqrt(((a - b) ** 2).sum()))

@@ -1,0 +1,5 @@
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+from repro.data.loader import ArrayDataSource
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["SeismicSimulation", "SimulationConfig", "ArrayDataSource", "TokenPipeline"]

@@ -1,0 +1,4 @@
+from repro.kernels.band_attn.ops import banded_attention
+from repro.kernels.band_attn.ref import banded_attention_ref
+
+__all__ = ["banded_attention", "banded_attention_ref"]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: banded (sliding-window) causal flash attention.
+
+The §Perf hymba/gemma3 endgame: the jnp block-local path (models/layers.
+_block_local_attention) still materializes the (S/W, W, 2W) score band in
+HBM — ~13.4 GB/layer/device at hymba prefill_32k. This kernel keeps each
+query block's (W, 2W) scores in VMEM: per (batch, q-head, q-block) grid cell
+it loads the q block plus the previous+current key/value blocks, computes the
+masked band softmax in f32 on-chip, and writes only the (W, hd) output.
+
+HBM traffic per layer drops to the q/k/v/out streams (the scores never leave
+VMEM). GQA is handled in the index maps (k/v blocks indexed by h // group).
+
+VMEM budget at W=1024, hd=128 (f32 scores): q 0.5MB + 4 k/v blocks 2MB +
+2x(W, W) scores 8MB + out 0.5MB ~ 11MB of ~16MB/core. For W <= 512 the
+budget is under 3MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_valid", "interpret"))
+def banded_attention_kernel(
+    q: jax.Array,  # (B, S, H, hd) — rope already applied, S % window == 0
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    window: int,
+    s_valid: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    w = window
+    assert s % w == 0, "pad S to a window multiple in ops.py"
+    nb = s // w
+    s_valid = s if s_valid is None else s_valid
+
+    def q_idx(bi, hi, ji):
+        return (bi, ji, hi, 0)
+
+    def k_self_idx(bi, hi, ji):
+        return (bi, ji, hi // g, 0)
+
+    def k_prev_idx(bi, hi, ji):
+        return (bi, jnp.maximum(ji - 1, 0), hi // g, 0)
+
+    def kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, o_ref):
+        j = pl.program_id(2)
+        qb = q_ref[0, :, 0, :].astype(jnp.float32) * (hd**-0.5)
+        kp = kp_ref[0, :, 0, :].astype(jnp.float32)
+        ks = ks_ref[0, :, 0, :].astype(jnp.float32)
+        # (W, W) score tiles against the previous and current key blocks —
+        # VMEM-resident, never written to HBM.
+        sp = jax.lax.dot_general(qb, kp, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ss = jax.lax.dot_general(qb, ks, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (w, w), 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+        # With W == window the band condition (qpos - W < kpos <= qpos)
+        # reduces to kj > qi on the previous block (absent for block 0) and
+        # causal kj <= qi on the current block; the padded tail of the last
+        # block is masked against s_valid.
+        ok_p = (kj > qi) & (j > 0)
+        ok_s = (kj <= qi) & (j * w + kj < s_valid)
+        sp = jnp.where(ok_p, sp, -1e30)
+        ss = jnp.where(ok_s, ss, -1e30)
+        m = jnp.maximum(jnp.max(sp, axis=1), jnp.max(ss, axis=1))  # (W,)
+        ep = jnp.exp(sp - m[:, None])
+        es = jnp.exp(ss - m[:, None])
+        den = jnp.sum(ep, axis=1) + jnp.sum(es, axis=1)
+        out = jax.lax.dot_general(
+            ep, vp_ref[0, :, 0, :].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        ) + jax.lax.dot_general(
+            es, vs_ref[0, :, 0, :].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        o_ref[0, :, 0, :] = (
+            out / jnp.maximum(den, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+    spec_q = pl.BlockSpec((1, w, 1, hd), q_idx)
+    spec_ks = pl.BlockSpec((1, w, 1, hd), k_self_idx)
+    spec_kp = pl.BlockSpec((1, w, 1, hd), k_prev_idx)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nb),
+        in_specs=[spec_q, spec_kp, spec_ks, spec_kp, spec_ks],
+        out_specs=pl.BlockSpec((1, w, 1, hd), q_idx),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, k, v, v)

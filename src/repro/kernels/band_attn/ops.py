@@ -1,0 +1,30 @@
+"""Jitted wrapper for the banded attention kernel: padding + dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.band_attn.kernel import banded_attention_kernel
+
+
+def banded_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    window: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, S, H, hd) sliding-window causal attention; any S (padded to a
+    window multiple internally, padded keys masked in-kernel)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, h, hd = q.shape
+    pad = (-s) % window
+    if pad:
+        cfg = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, cfg), jnp.pad(k, cfg), jnp.pad(v, cfg)
+    out = banded_attention_kernel(
+        q, k, v, window, s_valid=s, interpret=interpret
+    )
+    return out[:, :s]

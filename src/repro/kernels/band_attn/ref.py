@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the banded attention kernel: full masked attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int
+) -> jax.Array:
+    """(B, S, H, hd) x (B, S, KV, hd) -> (B, S, H, hd); causal sliding-window
+    attention over the full S^2 masked score matrix (small inputs only)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, k).astype(jnp.float32)
+    scores *= hd**-0.5
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    ok = (kj <= qi) & (kj > qi - window)
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,4 @@
+from repro.kernels.hist.ops import histogram
+from repro.kernels.hist.ref import hist_ref
+
+__all__ = ["histogram", "hist_ref"]

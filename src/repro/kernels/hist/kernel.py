@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: Eq.-5 interval histogram.
+
+The second O(n) hot loop of the PDF pipeline: per point, count observations
+per interval of the evenly split [min, max] range (L intervals). The fitted
+CDF masses are O(L) per type and are computed *outside* the kernel — this
+kernel only streams the data once.
+
+Per (point-tile, obs-chunk) grid cell: compute each observation's bin index
+and accumulate a one-hot sum into the (bp, L) output block, which stays
+resident in VMEM across the sequential obs-chunk axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(n_valid: int, num_bins: int, x_ref, lo_ref, hi_ref, out_ref):
+    j = pl.program_id(1)
+    bp, bn = x_ref.shape
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    lo = lo_ref[...]  # (bp, 1)
+    hi = hi_ref[...]
+    span = jnp.maximum(hi - lo, 1e-12)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (bp, bn), 1) + j * bn
+    valid = col < n_valid
+    idx = jnp.floor((x - lo) / span * num_bins)
+    idx = jnp.clip(idx, 0, num_bins - 1).astype(jnp.int32)
+    # Invalid (padding) columns vote for bin -1 => match nothing.
+    idx = jnp.where(valid, idx, -1)
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, num_bins), 2)
+    onehot = (idx[:, :, None] == bins).astype(jnp.float32)  # (bp, bn, L)
+    out_ref[...] += jnp.sum(onehot, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_bins", "block_points", "block_obs", "interpret")
+)
+def hist_counts(
+    values: jax.Array,
+    vmin: jax.Array,
+    vmax: jax.Array,
+    num_bins: int,
+    block_points: int = 8,
+    block_obs: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """values (P, n), vmin/vmax (P,) -> counts (P, num_bins) f32.
+    P % block_points == 0 required (ops.py pads); n masked in-kernel."""
+    p, n = values.shape
+    bp = min(block_points, p)
+    bn = min(block_obs, max(128, 128 * ((n + 127) // 128)))
+    grid = (p // bp, -(-n // bn))
+    n_padded = grid[1] * bn
+    if n_padded != n:
+        values = jnp.pad(values, ((0, 0), (0, n_padded - n)))
+
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n, num_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, num_bins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, num_bins), jnp.float32),
+        interpret=interpret,
+    )(values, vmin.reshape(p, 1).astype(jnp.float32), vmax.reshape(p, 1).astype(jnp.float32))

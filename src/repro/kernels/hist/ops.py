@@ -1,0 +1,41 @@
+"""Jitted wrapper for the histogram kernel (padding + backend dispatch).
+
+Signature matches repro.core.pdf_error.histogram so fitting.py can swap it in
+via ``histogram_fn=``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist.kernel import hist_counts
+
+
+def histogram(
+    values: jax.Array,
+    vmin: jax.Array,
+    vmax: jax.Array,
+    num_bins: int,
+    block_points: int = 8,
+    block_obs: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(..., n) values + (...,) min/max -> (..., num_bins) counts."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    shape = values.shape
+    flat = values.reshape(-1, shape[-1])
+    flo = vmin.reshape(-1)
+    fhi = vmax.reshape(-1)
+    p = flat.shape[0]
+    bp = min(block_points, max(1, p))
+    pad = (-p) % bp
+    if pad:
+        flat = jnp.concatenate([flat, flat[-1:].repeat(pad, axis=0)], axis=0)
+        flo = jnp.concatenate([flo, flo[-1:].repeat(pad, axis=0)])
+        fhi = jnp.concatenate([fhi, fhi[-1:].repeat(pad, axis=0)])
+    counts = hist_counts(
+        flat, flo, fhi, num_bins, block_points=bp, block_obs=block_obs, interpret=interpret
+    )[:p]
+    return counts.reshape(shape[:-1] + (num_bins,)).astype(values.dtype)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the histogram kernel: repro.core.pdf_error.histogram."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.pdf_error import histogram as _histogram
+
+
+def hist_ref(values: jax.Array, vmin: jax.Array, vmax: jax.Array, num_bins: int) -> jax.Array:
+    return _histogram(values, vmin, vmax, num_bins)

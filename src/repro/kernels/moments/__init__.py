@@ -1,0 +1,4 @@
+from repro.kernels.moments.ops import moments
+from repro.kernels.moments.ref import moments_ref, stats_ref
+
+__all__ = ["moments", "moments_ref", "stats_ref"]

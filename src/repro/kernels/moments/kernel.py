@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused streaming moments over the observation axis.
+
+The PDF pipeline's first O(n) hot loop (Algorithm 2 lines 11-12 plus the
+skew/kurt/min/max the fitters need). One HBM->VMEM pass per (point-tile,
+obs-chunk) computes shifted power sums s1..s4 and min/max; the final chunk
+converts shifted sums to central moments. Shifting by each point's first
+observation kills the float32 catastrophic cancellation of raw power sums
+(Vp ~ 3000 m/s with std ~ 10 would lose all variance bits unshifted).
+
+Grid: (P/bp, n/bn), obs-chunk axis innermost (sequential on TPU), so the
+VMEM scratch accumulators carry across chunks of the same point tile.
+Block shapes are (bp, bn) with bn a multiple of 128 (lane width) and bp a
+multiple of 8 (sublanes) — MXU is not involved; this is a VPU reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NUM_STATS = 8  # mean, var(unbiased), skew, kurt, min, max, (2 pad lanes)
+
+
+def _moments_kernel(n_valid: int, x_ref, out_ref, acc_ref, shift_ref):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    bp, bn = x_ref.shape
+
+    x = x_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bp, bn), 1) + j * bn
+    valid = col < n_valid
+
+    @pl.when(j == 0)
+    def _init():
+        # Shift = first observation of each point (any in-range value works).
+        shift_ref[...] = x[:, 0:1]
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    shift = shift_ref[...]  # (bp, 1)
+    d = jnp.where(valid, x - shift, 0.0)
+    big = jnp.float32(3.4e38)
+    xmin = jnp.min(jnp.where(valid, x, big), axis=1)
+    xmax = jnp.max(jnp.where(valid, x, -big), axis=1)
+
+    acc = acc_ref[...]
+    s1 = acc[:, 0] + jnp.sum(d, axis=1)
+    s2 = acc[:, 1] + jnp.sum(d * d, axis=1)
+    s3 = acc[:, 2] + jnp.sum(d * d * d, axis=1)
+    s4 = acc[:, 3] + jnp.sum(d * d * d * d, axis=1)
+    mn = jnp.where(j == 0, xmin, jnp.minimum(acc[:, 4], xmin))
+    mx = jnp.where(j == 0, xmax, jnp.maximum(acc[:, 5], xmax))
+    acc_ref[...] = jnp.stack([s1, s2, s3, s4, mn, mx, s1, s1], axis=1)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        n = jnp.float32(n_valid)
+        md = s1 / n  # mean of shifted values
+        m2 = jnp.maximum(s2 / n - md * md, 0.0)
+        m3 = s3 / n - 3.0 * md * (s2 / n) + 2.0 * md**3
+        m4 = s4 / n - 4.0 * md * (s3 / n) + 6.0 * md * md * (s2 / n) - 3.0 * md**4
+        mean = shift[:, 0] + md
+        var = m2 * n / jnp.maximum(n - 1.0, 1.0)
+        sig = jnp.sqrt(jnp.maximum(m2, 1e-12))
+        skew = m3 / sig**3
+        kurt = m4 / jnp.maximum(m2, 1e-12) ** 2 - 3.0
+        out_ref[...] = jnp.stack(
+            [mean, var, skew, kurt, mn, mx, jnp.zeros_like(mean), jnp.zeros_like(mean)],
+            axis=1,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_points", "block_obs", "interpret"))
+def moments_stats(
+    values: jax.Array,
+    block_points: int = 8,
+    block_obs: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """values (P, n) -> stats (P, NUM_STATS) f32. P % bp == 0 required
+    (ops.py pads); n is masked in-kernel so any n works."""
+    p, n = values.shape
+    bp = min(block_points, p)
+    bn = min(block_obs, max(128, 128 * ((n + 127) // 128)))
+    grid = (p // bp, -(-n // bn))
+    n_padded = grid[1] * bn
+    if n_padded != n:
+        values = jnp.pad(values, ((0, 0), (0, n_padded - n)))
+
+    return pl.pallas_call(
+        functools.partial(_moments_kernel, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bp, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bp, NUM_STATS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, NUM_STATS), jnp.float32),
+        scratch_shapes=[
+            # VMEM accumulators persist across the sequential obs-chunk axis.
+            pltpu.VMEM((bp, NUM_STATS), jnp.float32),
+            pltpu.VMEM((bp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values)

@@ -1,0 +1,38 @@
+"""Jitted wrapper for the moments kernel: padding, backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import Moments
+from repro.kernels.moments.kernel import NUM_STATS, moments_stats
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def moments(
+    values: jax.Array,
+    block_points: int = 8,
+    block_obs: int = 512,
+    interpret: bool | None = None,
+) -> Moments:
+    """(P, n) or (..., n) -> Moments. Pads P to the point-tile multiple;
+    interpret defaults to True on CPU (kernel body executed in Python) and
+    False on TPU (Mosaic compile)."""
+    if interpret is None:
+        interpret = _is_cpu()
+    shape = values.shape
+    flat = values.reshape(-1, shape[-1])
+    p = flat.shape[0]
+    bp = min(block_points, max(1, p))
+    pad = (-p) % bp
+    if pad:
+        flat = jnp.concatenate([flat, flat[-1:].repeat(pad, axis=0)], axis=0)
+    stats = moments_stats(
+        flat, block_points=bp, block_obs=block_obs, interpret=interpret
+    )[:p]
+    lead = shape[:-1]
+    return Moments(*(stats[:, i].reshape(lead) for i in range(6)))

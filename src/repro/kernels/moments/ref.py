@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the moments kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import Moments, moments_from_values
+
+
+def moments_ref(values: jax.Array) -> Moments:
+    """(P, n) -> Moments of each row; two-pass centered reference."""
+    return moments_from_values(values.astype(jnp.float32), axis=-1)
+
+
+def stats_ref(values: jax.Array) -> jax.Array:
+    """(P, n) -> (P, 8) in the kernel's packed stats layout."""
+    m = moments_ref(values)
+    z = jnp.zeros_like(m.mean)
+    return jnp.stack([m.mean, m.var, m.skew, m.kurt, m.vmin, m.vmax, z, z], axis=1)

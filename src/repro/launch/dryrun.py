@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, parse
+collective traffic, and emit the roofline JSON that EXPERIMENTS.md reads.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices. Do not import this module from tests/benches.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import SHAPES, ShapeDef, applicable, input_specs, ENCDEC_PROMPT
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec as ED
+from repro.models import sharding as sh
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+# -- step builders ---------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig):
+    opt_cfg = AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.adam_moments_bf16 else jnp.float32
+    )
+
+    def step(params, opt, batch):
+        def loss(p):
+            if cfg.family == "encdec":
+                return ED.loss_fn(p, batch["frames"], batch["tokens"], batch["targets"], cfg)
+            extras = {"memory": batch["memory"]} if "memory" in batch else None
+            return T.loss_fn(p, batch["tokens"], batch["targets"], cfg, extras)
+
+        l, g = jax.value_and_grad(loss)(params)
+        if cfg.use_adafactor:
+            from repro.optim.adafactor import adafactor_update
+
+            new_p, new_o = adafactor_update(g, opt, params)
+            return new_p, new_o, l, jnp.zeros(())
+        new_p, new_o, gnorm = adamw_update(g, opt, params, opt_cfg)
+        return new_p, new_o, l, gnorm
+
+    return step
+
+
+def make_prefill(cfg: ArchConfig, shape: ShapeDef):
+    def fn(params, batch):
+        if cfg.family == "encdec":
+            return ED.prefill(params, batch["frames"], batch["tokens"], cfg,
+                              max_len=shape.seq_len)
+        extras = {"memory": batch["memory"]} if "memory" in batch else None
+        return T.prefill(params, batch["tokens"], cfg, extras, max_len=shape.seq_len)
+
+    return fn
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeDef, mesh=None):
+    pos = shape.seq_len - 1  # one new token against a full cache
+
+    def fn(params, batch):
+        if cfg.family == "encdec":
+            return ED.decode_step(params, batch["token"], batch["caches"], pos, cfg)
+        extras = {"memory": batch["memory"]} if "memory" in batch else {}
+        if cfg.flash_decode and mesh is not None:
+            extras["mesh"] = mesh
+            extras["batch_axes"] = tuple(
+                a for a in mesh.axis_names if a != "model"
+            )
+        return T.decode_step(params, batch["token"], batch["caches"], pos, cfg, extras)
+
+    return fn
+
+
+# -- lower + compile + analyse ------------------------------------------------------
+
+
+def param_structs(cfg: ArchConfig):
+    init = ED.init_params if cfg.family == "encdec" else T.init_params
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeDef, mesh):
+    """Build + lower the cell's step function. Returns the Lowered object."""
+    args, specs = input_specs(cfg, shape, mesh)
+    p_struct = param_structs(cfg)
+    p_shard = sh.make_shardings(cfg, mesh, p_struct)
+    p_spec = sh.make_pspecs(cfg, mesh, p_struct)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        step = make_train_step(cfg)
+        if cfg.use_adafactor:
+            from repro.optim.adafactor import FactoredState, adafactor_init
+
+            o_struct = jax.eval_shape(adafactor_init, p_struct)
+            is_spec = lambda x: isinstance(x, P)
+
+            def vr_spec(ps, leaf):
+                return P(*ps[:-1]) if leaf.ndim >= 2 else ps
+
+            def vc_spec(ps, leaf):
+                if leaf.ndim >= 2:
+                    return P(*(list(ps[:-2]) + [ps[-1]]))
+                return P(None)
+
+            o_spec = FactoredState(
+                step=P(),
+                vr=jax.tree.map(vr_spec, p_spec, p_struct, is_leaf=is_spec),
+                vc=jax.tree.map(vc_spec, p_spec, p_struct, is_leaf=is_spec),
+            )
+        else:
+            ocfg = AdamWConfig(
+                moment_dtype=jnp.bfloat16 if cfg.adam_moments_bf16 else jnp.float32
+            )
+            o_struct = jax.eval_shape(lambda p: adamw_init(p, ocfg), p_struct)
+            # OptState is a NamedTuple: moments inherit each param's spec.
+            from repro.optim.adamw import OptState
+            o_spec = OptState(step=P(), mu=p_spec, nu=p_spec)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, ns(o_spec), ns(specs)),
+            out_shardings=(p_shard, ns(o_spec), None, None),
+            donate_argnums=(0, 1),
+        )
+        return jitted.lower(p_struct, o_struct, args)
+    if shape.kind == "prefill":
+        fn = make_prefill(cfg, shape)
+        jitted = jax.jit(fn, in_shardings=(p_shard, ns(specs)))
+        return jitted.lower(p_struct, args)
+    # decode
+    fn = make_decode_step(cfg, shape, mesh)
+    cache_shardings = ns(specs["caches"])
+    in_shardings = (p_shard, {**{k: ns(v) for k, v in specs.items() if k != "caches"},
+                              "caches": cache_shardings})
+    jitted = jax.jit(
+        fn,
+        in_shardings=in_shardings,
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(p_struct, args)
+
+
+def truncate_cfg(cfg: ArchConfig, r: int) -> ArchConfig:
+    """Same architecture with r pattern repeats (fully unrolled) — the
+    analysis lowering. Affine in r, so two points extrapolate exactly."""
+    if cfg.family == "encdec":
+        return cfg.replace(enc_layers=r, dec_layers=r, num_layers=2 * r, scan_unroll=0)
+    return cfg.replace(
+        num_layers=len(cfg.prefix) + len(cfg.pattern) * r, scan_unroll=0
+    )
+
+
+def _repeats(cfg: ArchConfig) -> int:
+    return cfg.enc_layers if cfg.family == "encdec" else cfg.num_repeats
+
+
+def _compile_costs(cfg: ArchConfig, shape: ShapeDef, mesh) -> dict:
+    """flops/bytes per device + per-op collective traffic for one lowering."""
+    compiled = lower_cell(cfg, shape, mesh).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = rl.parse_collectives(compiled.as_text(), mesh.devices.size)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_traffic": coll.per_device_traffic_bytes,
+        "coll_by_op": dict(coll.op_traffic),
+        "coll_counts": dict(coll.op_counts),
+    }
+
+
+def analysis_costs(cfg: ArchConfig, shape: ShapeDef, mesh) -> dict:
+    """Exact per-step costs: XLA's HloCostAnalysis counts while bodies once,
+    so the analysis lowering unrolls the layer scan. For R > 4 repeats, two
+    truncated unrolled compiles (r=2, r=4) are extrapolated affinely in r —
+    exact because every repeat is structurally identical."""
+    r_full = _repeats(cfg)
+    if r_full <= 4:
+        c = _compile_costs(cfg.replace(scan_unroll=0), shape, mesh)
+        c["extrapolated"] = False
+        return c
+    c2 = _compile_costs(truncate_cfg(cfg, 2), shape, mesh)
+    c4 = _compile_costs(truncate_cfg(cfg, 4), shape, mesh)
+
+    def extra(a2, a4):
+        slope = (a4 - a2) / 2.0
+        return a2 + slope * (r_full - 2)
+
+    ops = set(c2["coll_by_op"]) | set(c4["coll_by_op"])
+    by_op = {
+        op: max(extra(c2["coll_by_op"].get(op, 0.0), c4["coll_by_op"].get(op, 0.0)), 0.0)
+        for op in ops
+    }
+    counts = {
+        op: int(round(extra(c2["coll_counts"].get(op, 0), c4["coll_counts"].get(op, 0))))
+        for op in (set(c2["coll_counts"]) | set(c4["coll_counts"]))
+    }
+    return {
+        "flops": extra(c2["flops"], c4["flops"]),
+        "bytes": extra(c2["bytes"], c4["bytes"]),
+        "coll_traffic": sum(by_op.values()),
+        "coll_by_op": by_op,
+        "coll_counts": counts,
+        "extrapolated": True,
+    }
+
+
+def run_cell(cfg: ArchConfig, shape: ShapeDef, mesh, verbose: bool = True) -> dict:
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+
+    # 1) production lowering (rolled scan): memory analysis + compile proof.
+    lowered = lower_cell(cfg, shape, mesh)
+    t_lower = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter()
+    mem = compiled.memory_analysis()
+
+    # 2) analysis lowering (unrolled / extrapolated): roofline terms.
+    costs = analysis_costs(cfg, shape, mesh)
+    t_analysis = time.perf_counter()
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = rl.model_flops_train(cfg, tokens)
+    elif shape.kind == "prefill":
+        model_flops = rl.model_flops_prefill(cfg, shape.global_batch, shape.seq_len)
+    else:
+        model_flops = rl.model_flops_decode(cfg, shape.global_batch, shape.seq_len)
+
+    flops_dev = costs["flops"]
+    bytes_dev = costs["bytes"]
+    coll = rl.CollectiveStats(
+        per_device_traffic_bytes=costs["coll_traffic"],
+        op_counts=costs["coll_counts"],
+        op_traffic=costs["coll_by_op"],
+    )
+    roof = rl.make_roofline(flops_dev, bytes_dev, coll, chips, model_flops)
+
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+
+    rec = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "chips": chips,
+        "ok": True,
+        "lower_seconds": round(t_lower - t0, 2),
+        "compile_seconds": round(t_compile - t_lower, 2),
+        "analysis_seconds": round(t_analysis - t_compile, 2),
+        "costs_extrapolated": costs.get("extrapolated", False),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_traffic_per_device": coll.per_device_traffic_bytes,
+        "collective_ops": coll.op_counts,
+        "collective_traffic_by_op": coll.op_traffic,
+        "memory_analysis": mem_fields,
+        "model_flops": model_flops,
+        "total_params": rl.total_param_count(cfg),
+        "active_params": rl.active_param_count(cfg),
+        "terms_seconds": {
+            "compute": roof.compute_s,
+            "memory": roof.memory_s,
+            "collective": roof.collective_s,
+        },
+        "dominant": roof.dominant,
+        "useful_ratio": roof.useful_ratio,
+        "roofline_fraction": roof.roofline_fraction,
+    }
+    if verbose:
+        print(f"[{cfg.name} x {shape.name} x {'x'.join(map(str, mesh.devices.shape))}]")
+        print(f"  lower {rec['lower_seconds']}s compile {rec['compile_seconds']}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  flops/dev {flops_dev:.3e}  bytes/dev {bytes_dev:.3e}  "
+              f"coll/dev {coll.per_device_traffic_bytes:.3e}B {coll.op_counts}")
+        t = rec["terms_seconds"]
+        print(f"  terms: compute {t['compute']:.4f}s  memory {t['memory']:.4f}s  "
+              f"collective {t['collective']:.4f}s  -> dominant {rec['dominant']}")
+        print(f"  useful_ratio {roof.useful_ratio:.3f}  roofline_fraction "
+              f"{roof.roofline_fraction:.3f}")
+    return rec
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument(
+        "--override", default="",
+        help="comma-separated ArchConfig overrides, e.g. "
+        "'block_local_attn=True,ssm_chunk=128' (python literals)",
+    )
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args()
+
+    import ast
+
+    _DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+    overrides = {}
+    if args.override:
+        for kv in args.override.split(","):
+            k, v = kv.split("=", 1)
+            v = ast.literal_eval(v)
+            if isinstance(v, str) and v in _DTYPES:
+                v = _DTYPES[v]
+            overrides[k.strip()] = v
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    archs = registry.names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi_pod in pods:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            cfg = registry.get(arch)
+            if overrides:
+                cfg = cfg.replace(**overrides)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                ok, reason = applicable(cfg, shape)
+                cid = cell_id(arch, shape_name, multi_pod) + (
+                    f"__{args.tag}" if args.tag else ""
+                )
+                path = out / f"{cid}.json"
+                if not ok:
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "ok": False,
+                        "skipped": True, "reason": reason,
+                        "mesh": list(mesh.devices.shape),
+                    }))
+                    print(f"[{arch} x {shape_name}] {reason}")
+                    continue
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    if rec.get("ok"):
+                        print(f"[{arch} x {shape_name}] cached")
+                        continue
+                try:
+                    rec = run_cell(cfg, shape, mesh)
+                except Exception as e:  # noqa: BLE001 - record & continue
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch, "shape": shape_name, "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "mesh": list(mesh.devices.shape),
+                    }
+                    failures.append(cid)
+                path.write_text(json.dumps(rec, indent=1))
+
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module constant) so importing
+this module never touches jax device state — required because the dry-run
+sets XLA_FLAGS before any jax initialization, while tests/benches must see
+the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """Arbitrary mesh (tests, elastic restarts)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,254 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e, per the assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Terms (seconds, per-step):
+  compute    = FLOPs / (chips x peak)        [global FLOPs]
+  memory     = bytes / (chips x hbm_bw)      [global HBM bytes accessed]
+  collective = per-device link traffic / link_bw
+               (ring model: all_gather (n-1)x shard, all_reduce 2(n-1)/n x,
+                reduce_scatter/all_to_all (n-1)/n x, permute 1x)
+
+collective bytes are NOT in cost_analysis — they are parsed out of the
+post-SPMD optimized HLO text (every *-start op counted once).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [G,S]<=[N]: G groups of S participants.
+        return int(m.group(2))
+    return total_devices
+
+
+@dataclass
+class CollectiveStats:
+    per_device_traffic_bytes: float = 0.0
+    op_counts: dict = field(default_factory=dict)
+    op_traffic: dict = field(default_factory=dict)
+
+    def add(self, op: str, traffic: float):
+        self.op_counts[op] = self.op_counts.get(op, 0) + 1
+        self.op_traffic[op] = self.op_traffic.get(op, 0.0) + traffic
+        self.per_device_traffic_bytes += traffic
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    """Sum per-device link traffic over every collective in the optimized HLO.
+
+    Post-SPMD HLO prints (per-partition) shapes on the *result* side only
+    (operands are bare names), so traffic is derived from result bytes with
+    ring-model factors:
+
+      all-gather       result x (n-1)/n   (result is the gathered buffer)
+      all-reduce       2 x result x (n-1)/n
+      reduce-scatter   result x (n-1)     (result is the scattered shard)
+      all-to-all       result x (n-1)/n
+      collective-permute  result
+
+    ``-done`` ops are skipped (their ``-start`` was counted)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result shapes: everything left of the opcode occurrence.
+        left = line[: m.start()]
+        results = _SHAPE_RE.findall(left)
+        op_bytes = sum(_shape_bytes(dt, dims) for dt, dims in results)
+        n = max(_group_size(line, total_devices), 1)
+        if n == 1 or op_bytes == 0:
+            stats.add(op, 0.0)
+            continue
+        if op == "all-gather":
+            traffic = op_bytes * (n - 1) / n
+        elif op == "all-reduce":
+            traffic = 2.0 * op_bytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            traffic = float(op_bytes) * (n - 1)
+        elif op == "all-to-all":
+            traffic = op_bytes * (n - 1) / n
+        else:  # collective-permute
+            traffic = float(op_bytes)
+        stats.add(op, traffic)
+    return stats
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_global: float
+    bytes_global: float
+    collective_traffic_per_device: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute time / achievable step time: how close the step is
+        to the compute roofline if perfectly overlapped."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (PEAK_FLOPS * self._chips)
+        return ideal / self.bound_s
+
+    _chips: int = 1
+
+
+def make_roofline(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll: CollectiveStats,
+    chips: int,
+    model_flops: float,
+) -> Roofline:
+    flops_global = flops_per_device * chips
+    bytes_global = bytes_per_device * chips
+    r = Roofline(
+        compute_s=flops_global / (chips * PEAK_FLOPS),
+        memory_s=bytes_global / (chips * HBM_BW),
+        collective_s=coll.per_device_traffic_bytes / LINK_BW,
+        flops_global=flops_global,
+        bytes_global=bytes_global,
+        collective_traffic_per_device=coll.per_device_traffic_bytes,
+        model_flops=model_flops,
+        useful_ratio=model_flops / flops_global if flops_global else 0.0,
+    )
+    r._chips = chips
+    return r
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6*N_active*D for one training step (fwd+bwd)."""
+    n = active_param_count(cfg)
+    return 6.0 * n * tokens
+
+
+def model_flops_decode(cfg, batch: int, context: int) -> float:
+    """2*N_active per token forward + attention reads over the context."""
+    n = active_param_count(cfg)
+    flops = 2.0 * n * batch
+    # attention over cached context (full-attn layers only)
+    attn_layers = _full_attn_layers(cfg)
+    flops += 4.0 * attn_layers * batch * context * cfg.kv_heads * cfg.head_dim
+    return flops
+
+
+def model_flops_prefill(cfg, batch: int, seq: int) -> float:
+    n = active_param_count(cfg)
+    return 2.0 * n * batch * seq
+
+
+def _full_attn_layers(cfg) -> int:
+    if cfg.family == "encdec":
+        return cfg.dec_layers * 2
+    total = 0
+    for bd in cfg.prefix:
+        if bd.mixer in ("attn", "hybrid", "cross_attn") and bd.window is None:
+            total += 1
+    reps = cfg.num_repeats
+    for bd in cfg.pattern:
+        if bd.mixer in ("attn", "hybrid", "cross_attn") and bd.window is None:
+            total += reps
+    return total
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count: MoE counts top_k of num_experts."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    attn = d * (cfg.q_heads + 2 * cfg.kv_heads) * cfg.head_dim + cfg.q_heads * cfg.head_dim * d
+
+    def ssm_params():
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim if cfg.ssm_head_dim else 0
+        gn = cfg.ssm_groups * cfg.ssm_state
+        return d * (2 * d_inner + 2 * gn + h) + d_inner * d
+
+    def block_params(bd) -> float:
+        p = 0.0
+        if bd.mixer in ("attn", "cross_attn"):
+            p += attn
+        elif bd.mixer == "ssm":
+            p += ssm_params()
+        elif bd.mixer == "hybrid":
+            p += attn + ssm_params()
+        if bd.ffn == "dense":
+            p += 3 * d * ff
+        elif bd.ffn == "moe":
+            p += cfg.moe_top_k * 3 * d * ff + d * cfg.num_experts
+            p += 3 * d * cfg.moe_shared_ff
+        elif bd.ffn == "moe_dense":
+            p += cfg.moe_top_k * 3 * d * ff + d * cfg.num_experts + 3 * d * ff
+        return p
+
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + 3 * d * ff)
+        dec = cfg.dec_layers * (2 * attn + 3 * d * ff)
+        return enc + dec + 2 * d * v
+    total = sum(block_params(bd) for bd in cfg.prefix)
+    total += cfg.num_repeats * sum(block_params(bd) for bd in cfg.pattern)
+    return total + 2 * d * v
+
+
+def total_param_count(cfg) -> float:
+    """Total stored parameters (MoE counts all experts)."""
+    if not cfg.num_experts:
+        return active_param_count(cfg)
+    extra = (cfg.num_experts - cfg.moe_top_k) * 3 * cfg.d_model * cfg.d_ff
+    per_moe_layer_extra = extra
+    moe_layers = sum(1 for bd in cfg.pattern if bd.ffn in ("moe", "moe_dense"))
+    return active_param_count(cfg) + cfg.num_repeats * moe_layers * per_moe_layer_extra

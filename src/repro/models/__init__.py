@@ -1,0 +1,3 @@
+from repro.models import encdec, layers, sharding, ssm, transformer
+
+__all__ = ["encdec", "layers", "sharding", "ssm", "transformer"]

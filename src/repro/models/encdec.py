@@ -1,0 +1,225 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+Per the assignment spec, the modality frontend is a STUB: the encoder input
+is a precomputed frame-embedding sequence at d_model (provided by
+``input_specs()``); the decoder is a standard text decoder with cross
+attention over the encoder output.
+
+Entry points mirror transformer.py: init_params / loss_fn / encode /
+prefill / decode_step. Decode caches both the decoder self-attention KV and
+the (computed-once) cross KV of the encoder memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def _scan(cfg, body, init, xs):
+    """lax.scan with the config's unroll factor (see transformer._scan)."""
+    unroll = cfg.scan_unroll
+    if unroll == 0:
+        unroll = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, unroll=max(unroll, 1))
+
+
+def _init_enc_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "lnx": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "cross_attn": L.init_attention(ks[1], cfg, cross=True),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.dec_layers)
+    return {
+        "embed": L._dense_init(ks[2], (cfg.padded_vocab, cfg.d_model), cfg.param_dtype, 1.0),
+        "encoder": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "lm_head": L._dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.param_dtype),
+    }
+
+
+def _remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames (B, S_enc, d_model) stub embeddings -> encoder memory."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = frames.astype(cfg.compute_dtype)
+
+    def body(h, p):
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        h = h + L.attention(p["attn"], x, cfg=cfg, positions=positions, causal=False)
+        x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        return h + L.mlp(p["mlp"], x, cfg), None
+
+    h, _ = _scan(cfg, _remat(body, cfg), h, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decode_body(cfg, memory, positions):
+    def body(h, p):
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        h = h + L.attention(p["self_attn"], x, cfg=cfg, positions=positions)
+        x = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+        h = h + L.attention(
+            p["cross_attn"], x, cfg=cfg, positions=positions,
+            kv_x=memory, causal=False, use_rope=False,
+        )
+        x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        return h + L.mlp(p["mlp"], x, cfg), None
+
+    return body
+
+
+def forward(params: Params, frames: jax.Array, tokens: jax.Array, cfg: ArchConfig):
+    memory = encode(params, frames, cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    h, _ = _scan(cfg, 
+        _remat(_decode_body(cfg, memory, positions), cfg), h, params["decoder"]
+    )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h.astype(cfg.compute_dtype),
+        params["lm_head"].astype(cfg.compute_dtype),
+    ).astype(jnp.float32)
+    from repro.models.transformer import _mask_padded_logits
+    return _mask_padded_logits(logits, cfg)
+
+
+def loss_fn(params, frames, tokens, targets, cfg) -> jax.Array:
+    logits = forward(params, frames, tokens, cfg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, mem_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    kv = (batch, max_len, cfg.kv_heads, cfg.head_dim)
+    xm = (batch, mem_len, cfg.kv_heads, cfg.head_dim)
+    n = cfg.dec_layers
+    return {
+        "self": {
+            "k": jnp.zeros((n,) + kv, dtype),
+            "v": jnp.zeros((n,) + kv, dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((n,) + xm, dtype),
+            "v": jnp.zeros((n,) + xm, dtype),
+        },
+    }
+
+
+def prefill(params, frames, tokens, cfg, max_len=None):
+    """Encode + run the decoder prompt, building self/cross caches."""
+    cdt = cfg.compute_dtype
+    memory = encode(params, frames, cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params["embed"][tokens].astype(cdt)
+
+    def body(h, p):
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        k = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["self_attn"]["wk"].astype(cdt))
+        v = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["self_attn"]["wv"].astype(cdt))
+        k = L.rope(k, positions, cfg.rope_theta)
+        pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+        ck = jnp.einsum("btd,dhk->bthk", memory, p["cross_attn"]["wk"].astype(cdt))
+        cv = jnp.einsum("btd,dhk->bthk", memory, p["cross_attn"]["wv"].astype(cdt))
+        h = h + L.attention(p["self_attn"], x, cfg=cfg, positions=positions)
+        x2 = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+        h = h + L.attention(
+            p["cross_attn"], x2, cfg=cfg, positions=positions,
+            kv_x=memory, causal=False, use_rope=False,
+        )
+        x3 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp(p["mlp"], x3, cfg)
+        return h, {"sk": jnp.pad(k, pad), "sv": jnp.pad(v, pad), "ck": ck, "cv": cv}
+
+    h, st = _scan(cfg, _remat(body, cfg), h, params["decoder"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    from repro.models.transformer import _mask_padded_logits
+    logits = _mask_padded_logits(
+        (h[:, -1].astype(cdt) @ params["lm_head"].astype(cdt)).astype(jnp.float32), cfg)
+    caches = {
+        "self": {"k": st["sk"], "v": st["sv"]},
+        "cross": {"k": st["ck"], "v": st["cv"]},
+    }
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg):
+    """token (B,) -> (logits (B, V), caches'). Self-attn KV written at pos;
+    cross KV reused as-is."""
+    cdt = cfg.compute_dtype
+    h = params["embed"][token[:, None]].astype(cdt)
+
+    def body(h, xs):
+        p, sk, sv, ck, cv = xs
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        y, c2 = L.decode_attention(p["self_attn"], x, {"k": sk, "v": sv}, pos, cfg=cfg)
+        h = h + y
+        x2 = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x2.astype(cdt), p["cross_attn"]["wq"].astype(cdt))
+        b, _, hh, hd = q.shape
+        kvh = ck.shape[2]
+        qr = q.reshape(b, 1, kvh, hh // kvh, hd)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qr, ck.astype(cdt)).astype(jnp.float32)
+        w = jax.nn.softmax(sc * hd**-0.5, axis=-1).astype(cdt)
+        o = jnp.einsum("bkgst,btkd->bskgd", w, cv.astype(cdt)).reshape(b, 1, hh, hd)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, p["cross_attn"]["wo"].astype(cdt))
+        x3 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp(p["mlp"], x3, cfg)
+        return h, (c2["k"], c2["v"])
+
+    h, (nk, nv) = _scan(cfg, 
+        body,
+        h,
+        (
+            params["decoder"],
+            caches["self"]["k"], caches["self"]["v"],
+            caches["cross"]["k"], caches["cross"]["v"],
+        ),
+    )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    from repro.models.transformer import _mask_padded_logits
+    logits = _mask_padded_logits(
+        (h[:, 0].astype(cdt) @ params["lm_head"].astype(cdt)).astype(jnp.float32), cfg)
+    return logits, {
+        "self": {"k": nk, "v": nv},
+        "cross": caches["cross"],
+    }

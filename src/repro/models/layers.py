@@ -1,0 +1,493 @@
+"""Model-zoo building blocks: norm, RoPE, GQA attention (causal / sliding /
+cross), gated MLP, top-k MoE (capacity-based dispatch), all as pure functions
+over param pytrees (dicts of jnp arrays). No framework dependency.
+
+Conventions:
+* params are stored in ``cfg.param_dtype`` (f32 by default) and cast to
+  ``cfg.compute_dtype`` (bf16) at use — the production mixed-precision recipe.
+* every init fn takes an ``ArchConfig``-like cfg (duck-typed fields).
+* attention caches: full causal layers use a (B, S_max, KV, hd) buffer
+  indexed by absolute position; sliding-window layers use a ring buffer of
+  the window size (position mod W).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# -- initializers -------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# -- normalization ------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd), positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+
+def init_attention(key, cfg, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), dt),
+        "wk": _dense_init(ks[1], (d, kv, hd), dt),
+        "wv": _dense_init(ks[2], (d, kv, hd), dt),
+        "wo": _dense_init(ks[3], (h, hd, d), dt, scale=(h * hd) ** -0.5),
+    }
+    if getattr(cfg, "qk_norm", False):
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _attn_scores_mask(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int | None
+) -> jax.Array:
+    """(..., S_q) x (..., S_k) -> (..., S_q, S_k) additive mask in f32."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), dtype=bool)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg,
+    positions: jax.Array,
+    kv_x: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full (prefill/train) attention. x (B, S, d) -> (B, S, d).
+
+    ``kv_x`` switches to cross-attention (no mask, no rope on kv side unless
+    kv_positions given)."""
+    cdt = cfg.compute_dtype
+    xq = x.astype(cdt)
+    xkv = (kv_x if kv_x is not None else x).astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    k = jnp.einsum("btd,dhk->bthk", xkv, p["wk"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", xkv, p["wv"].astype(cdt))
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, positions, cfg.rope_theta)
+        elif kv_positions is not None:
+            k = rope(k, kv_positions, cfg.rope_theta)
+
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+
+    if (
+        kv_x is None
+        and window is not None
+        and getattr(cfg, "block_local_attn", False)
+        and s > window
+    ):
+        out = _block_local_attention(q, k, v, window, cdt)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+    if getattr(cfg, "gqa_repeat_kv", False) and kvh < h:
+        # Repeat KV to the q-head count so the score einsum keeps a single
+        # head dim sharded over `model` (the (kv, g) reshape below defeats
+        # the SPMD partitioner's head sharding for kv % mesh != 0).
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+        scores *= hd**-0.5
+        if kv_x is None:
+            mask = _attn_scores_mask(positions, positions, causal, window)
+            scores = scores + mask[:, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        out = jnp.einsum("bhst,bthd->bshd", w, v)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores *= hd**-0.5
+    if kv_x is None:  # self-attention: causal / sliding mask
+        kpos = positions
+        mask = _attn_scores_mask(positions, kpos, causal, window)
+        scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+def _block_local_attention(q, k, v, window: int, cdt):
+    """Banded sliding-window attention: O(S * 2W) instead of O(S^2).
+
+    Queries are split into blocks of W; block i attends to key blocks i-1
+    and i, which covers every key in (pos-W, pos]. With W == block size the
+    static relative mask is: j > i' (window) and j <= i' + W (causal), for
+    key column j in [0, 2W) and query row i' in [0, W); block 0 additionally
+    masks its (nonexistent) previous block.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    w = window
+    pad = (-s) % w
+    if pad:
+        cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, cfgpad), jnp.pad(k, cfgpad), jnp.pad(v, cfgpad)
+    sp = s + pad
+    nb = sp // w
+
+    qb = q.reshape(b, nb, w, kvh, g, hd)
+    kb = k.reshape(b, nb, w, kvh, hd)
+    vb = v.reshape(b, nb, w, kvh, hd)
+    # NOTE (§Perf hymba iteration 3, refuted): replacing these concats with
+    # sliced einsums + pad + scatter-add *increased* bytes by 38% — the
+    # out-of-place pad/add copies cost more than the 2W-wide K/V views.
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (b, nb, 2w, kvh, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    scores = jnp.einsum("bnikgd,bnjkd->bnkgij", qb, k2).astype(jnp.float32)
+    scores *= hd**-0.5
+    qi = jnp.arange(w)[:, None]
+    kj = jnp.arange(2 * w)[None, :]
+    ok = (kj > qi) & (kj <= qi + w)  # (w, 2w) window+causal band
+    block0_ok = kj >= w  # no previous block for block 0
+    mask = jnp.where(ok[None], 0.0, -1e30) + jnp.where(
+        (jnp.arange(nb)[:, None, None] > 0) | block0_ok[None], 0.0, -1e30
+    )
+    scores = scores + mask[None, :, None, None, :, :]
+    wts = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = jnp.einsum("bnkgij,bnjkd->bnikgd", wts, v2)
+    out = out.reshape(b, sp, h, hd)
+    return out[:, :s]
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window: int | None, dtype):
+    w = min(window, max_len) if window else max_len
+    shape = (batch, w, cfg.kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,
+    cache: Params,
+    pos: jax.Array,
+    *,
+    cfg,
+    window: int | None = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, Params]:
+    """One-token decode. x (B, 1, d), pos scalar int32 -> (B, 1, d), cache'.
+
+    Full layers write at ``pos``; sliding layers write at ``pos mod W`` (ring)
+    and mask out slots older than the window.
+    """
+    cdt = cfg.compute_dtype
+    xq = x.astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xq, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xq, p["wv"].astype(cdt))
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    posv = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    if use_rope:
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+
+    buf_len = cache["k"].shape[1]
+    slot = pos % buf_len if window else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    b, _, h, hd = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, ck.astype(cdt)).astype(jnp.float32)
+    scores *= hd**-0.5
+
+    slots = jnp.arange(buf_len)
+    if window:
+        # Ring buffer: valid iff the slot holds a position in (pos-W, pos].
+        age = (slot - slots) % buf_len  # 0 = current token
+        valid = (age <= pos) & (age < buf_len)
+    else:
+        valid = slots <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cv.astype(cdt)).reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return y, {"k": ck, "v": cv}
+
+
+def flash_decode_attention(
+    p: Params,
+    x: jax.Array,
+    cache: Params,
+    pos: int,
+    *,
+    cfg,
+    mesh,
+    batch_axes=("data",),
+    seq_axis: str = "model",
+) -> tuple[jax.Array, Params]:
+    """Flash-decode: one-token attention against a sequence-sharded KV cache
+    WITHOUT gathering it (the baseline pjit lowering all-gathers K and V per
+    layer — see EXPERIMENTS.md §Perf, llama-3.2-vision-90b decode_32k).
+
+    shard_map over (batch_axes x seq_axis): each seq shard computes partial
+    (max, exp-sum, weighted-V) statistics over its KV slice; a 3-term
+    psum/pmax combine reconstructs the exact softmax. The cache write lands
+    on the one shard owning ``pos`` (static at trace time).
+
+    Requires ``pos`` static and no sliding window (ring caches are small and
+    stay on the plain path).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    cdt = cfg.compute_dtype
+    b, _, d = x.shape
+    s_total = cache["k"].shape[1]
+    n_seq = mesh.shape[seq_axis]
+    shard_len = s_total // n_seq
+    owner = pos // shard_len
+    local_slot = pos % shard_len
+
+    xq = x.astype(cdt)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    k_new = jnp.einsum("bsd,dhk->bshk", xq, p["wk"].astype(cdt))
+    v_new = jnp.einsum("bsd,dhk->bshk", xq, p["wv"].astype(cdt))
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k_new = rmsnorm(p["k_norm"], k_new)
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    qspec = P(ba, None, None, None)
+    cspec = P(ba, seq_axis, None, None)
+
+    def kernel(q_l, kn_l, vn_l, ck_l, cv_l):
+        idx = jax.lax.axis_index(seq_axis)
+
+        def write(buf, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), local_slot, axis=1
+            )
+
+        ck_l = jax.lax.cond(idx == owner, lambda: write(ck_l, kn_l), lambda: ck_l)
+        cv_l = jax.lax.cond(idx == owner, lambda: write(cv_l, vn_l), lambda: cv_l)
+
+        bl, _, h, hd = q_l.shape
+        kvh = ck_l.shape[2]
+        g = h // kvh
+        qr = q_l.reshape(bl, 1, kvh, g, hd)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qr, ck_l.astype(cdt)).astype(jnp.float32)
+        sc = sc * hd**-0.5
+        kpos = idx * shard_len + jnp.arange(shard_len)
+        sc = jnp.where(kpos[None, None, None, None, :] <= pos, sc, -1e30)
+
+        m_loc = jnp.max(sc, axis=-1, keepdims=True)  # (b,kv,g,1,1)
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        w = jnp.exp(sc - m_glob)
+        den = jax.lax.psum(jnp.sum(w, axis=-1), seq_axis)  # (b,kv,g,1)
+        num = jnp.einsum("bkgst,btkd->bskgd", w.astype(cdt), cv_l.astype(cdt))
+        num = jax.lax.psum(num, seq_axis)  # (b,1,kv,g,hd)
+        # den (b,kv,g,s=1) -> (b,1,kv,g,1) to broadcast against num.
+        den_r = den.transpose(0, 3, 1, 2)[..., None]
+        out = num / jnp.maximum(den_r, 1e-30)
+        return out.reshape(bl, 1, h, hd).astype(cdt), ck_l, cv_l
+
+    f = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(qspec, qspec, qspec, cspec, cspec),
+        out_specs=(qspec, cspec, cspec),
+        check_rep=False,
+    )
+    out, ck, cv = f(q, k_new, v_new, cache["k"], cache["v"])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return y, {"k": ck, "v": cv}
+
+
+# -- gated MLP ----------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: int | None = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, ff), dt),
+        "w_in": _dense_init(ks[1], (d, ff), dt),
+        "w_out": _dense_init(ks[2], (ff, d), dt, scale=ff**-0.5),
+    }
+
+
+def mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
+    cdt = cfg.compute_dtype
+    x = x.astype(cdt)
+    g = jax.nn.silu(x @ p["w_gate"].astype(cdt))
+    u = x @ p["w_in"].astype(cdt)
+    return (g * u) @ p["w_out"].astype(cdt)
+
+
+# -- mixture of experts ---------------------------------------------------------
+
+
+def init_moe(key, cfg) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": _dense_init(ks[1], (e, d, ff), dt),
+        "w_in": _dense_init(ks[2], (e, d, ff), dt),
+        "w_out": _dense_init(ks[3], (e, ff, d), dt, scale=ff**-0.5),
+    }
+    if getattr(cfg, "moe_shared_ff", 0):
+        p["shared"] = init_mlp(jax.random.fold_in(key, 7), cfg, cfg.moe_shared_ff)
+    return p
+
+
+def moe(p: Params, x: jax.Array, cfg, capacity_factor: float | None = None) -> jax.Array:
+    """Top-k MoE with capacity-based scatter dispatch (MaxText-style
+    'dropping' implementation): tokens beyond an expert's capacity are
+    dropped (contribute zero), which keeps every shape static and makes the
+    expert matmuls dense (E, C, d) x (E, d, f) einsums — the production
+    expert-parallel formulation (experts sharded over the `model` axis).
+
+    Capacity policy: small token counts (decode steps) get a drop-free
+    capacity (= T, worst case all tokens on one expert — the buffer is tiny
+    there); large token counts (training/prefill) use the standard
+    capacity-factor dropping.
+    """
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.moe_top_k
+    if capacity_factor is None:
+        cap = t if t <= 256 else max(1, int(k * t / e * 1.25))
+    else:
+        cap = max(1, int(k * t / e * capacity_factor))
+
+    xt = x.reshape(t, d).astype(cdt)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    if getattr(cfg, "moe_scan_dispatch", False):
+        # Hierarchical log-depth prefix sum (== cumsum, cheaper twice over):
+        # 1. XLA lowers jnp.cumsum to an O(n^2) reduce-window whose cost
+        #    model poisons the roofline (kimi §Perf iteration 1);
+        # 2. a flat scan over the token axis spans the data shards, costing
+        #    all-to-alls (iteration 2). Blocking by the DP degree keeps each
+        #    scan shard-local; only the (blocks, E) totals cross shards.
+        nb = 16 if (t * k) % 16 == 0 else 1
+        r = flat_oh.reshape(nb, (t * k) // nb, e)
+        local = jax.lax.associative_scan(jnp.add, r, axis=1)
+        totals = local[:, -1, :]  # (nb, E)
+        offsets = jnp.cumsum(totals, axis=0) - totals  # exclusive, tiny
+        csum = (local + offsets[:, None, :]).reshape(t * k, e)
+    else:
+        csum = jnp.cumsum(flat_oh, axis=0)
+    pos_in_expert = (csum - flat_oh).reshape(t, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (T, k)
+    keep = pos < cap
+
+    # Scatter tokens into (E, C, d); dropped tokens go to a trash row.
+    buf = jnp.zeros((e, cap + 1, d), cdt)
+    slot = jnp.where(keep, pos, cap)
+    buf = buf.at[expert_idx.reshape(-1), slot.reshape(-1)].add(
+        jnp.repeat(xt, k, axis=0)
+    )
+    buf = buf[:, :cap]  # (E, C, d)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(cdt)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(cdt))
+    out_buf = jnp.einsum("ecf,efd->ecd", g * u, p["w_out"].astype(cdt))  # (E, C, d)
+
+    # Gather back with gate weighting.
+    gathered = out_buf[expert_idx.reshape(-1), jnp.minimum(slot, cap - 1).reshape(-1)]
+    gathered = gathered.reshape(t, k, d) * (gate_vals * keep)[..., None].astype(cdt)
+    y = gathered.sum(axis=1)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xt, cfg)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(frac * imp)

@@ -1,0 +1,147 @@
+"""Sharding rules: param pytree -> PartitionSpec pytree for a given mesh.
+
+TP over the ``model`` axis (attention heads / ffn / experts / vocab), DP over
+``data`` (+ ``pod``), optional FSDP (large param dims additionally sharded
+over ``data``, ZeRO-3 style — XLA inserts the per-layer all-gathers).
+
+Rules are (path, shape) driven: the key path disambiguates e.g. a dense MLP
+``w_gate`` (d, ff) from an expert ``w_gate`` (E, d, ff), and any extra
+leading dims are scan stacks (replicated). Dims that don't divide the mesh
+axis fall back to replication (e.g. 8 KV heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+
+
+def _rule(names: tuple[str, ...], shape: tuple[int, ...], cfg: ArchConfig, mesh_shape: dict) -> P:
+    name = names[-1]
+    in_moe = "moe" in names[:-1]
+    msize = mesh_shape.get(MODEL_AXIS, 1)
+    dsize = mesh_shape.get(DATA_AXIS, 1)
+
+    def m(dim: int):  # model axis if divisible
+        return MODEL_AXIS if shape[dim] % msize == 0 else None
+
+    def f(dim: int):  # fsdp: data axis if enabled and divisible
+        return DATA_AXIS if cfg.fsdp and shape[dim] % dsize == 0 else None
+
+    def spec(base_rank: int, *axes) -> P:
+        lead = len(shape) - base_rank
+        return P(*([None] * lead + list(axes)))
+
+    if name == "embed":
+        return P(m(0), None)
+    if name == "lm_head":
+        return P(None, m(1))
+    if name == "wq":
+        return spec(3, f(-3), m(-2), None)  # (d, H, hd)
+    if name in ("wk", "wv"):
+        return spec(3, f(-3), m(-2), None)  # (d, KV, hd); replicates if KV % m != 0
+    if name == "wo":
+        return spec(3, m(-3), None, f(-1))  # (H, hd, d)
+    if name in ("w_gate", "w_in"):
+        if in_moe:
+            return spec(3, m(-3), f(-2), None)  # (E, d, ff): EP on experts
+        return spec(2, f(-2), m(-1))  # (d, ff): TP on ff
+    if name == "w_out":
+        if in_moe:
+            return spec(3, m(-3), None, f(-1))  # (E, ff, d)
+        return spec(2, m(-2), f(-1))  # (ff, d)
+    if name == "in_proj":
+        return spec(2, f(-2), m(-1))  # (d, packed): TP on the packed dim
+    if name == "out_proj":
+        return spec(2, m(-2), f(-1))  # (d_inner, d)
+    if name == "router":
+        return spec(2, None, None)
+    # conv / norms / scalars: replicate (tiny).
+    return P(*([None] * len(shape)))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def make_pspecs(cfg: ArchConfig, mesh: Mesh, params):
+    """Pytree of PartitionSpec matching ``params`` (leaves may be arrays or
+    ShapeDtypeStructs — only .shape is read)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _rule(_path_names(path), leaf.shape, cfg, mesh_shape) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_shardings(cfg: ArchConfig, mesh: Mesh, params):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), make_pspecs(cfg, mesh, params)
+    )
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """Token batches shard over every non-model axis (pod x data)."""
+    axes = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    return P(axes if len(axes) > 1 else axes[0], None)
+
+
+def cache_pspec(mesh: Mesh, seq_over_model: bool = True) -> P:
+    """KV caches (B, S, KV, hd): batch over data axes; sequence over model
+    (flash-decode-style partial-KV attention; XLA inserts the softmax psums)."""
+    axes = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    batch_axes = axes if len(axes) > 1 else axes[0]
+    return P(batch_axes, MODEL_AXIS if seq_over_model else None, None, None)
+
+
+def cache_pspecs(mesh: Mesh, cache, batch: int):
+    """PartitionSpec pytree for a decode-cache pytree (path-name driven).
+
+    * attention k/v  (..., B, S, KV, hd): batch over data axes (when it
+      divides), sequence over model (flash-decode partial-KV attention).
+    * ssm state      (..., B, H, N, P):   batch over data, heads over model.
+    * ssm conv       (..., B, K-1, C):    batch over data, channels over model.
+    * cross k/v      (..., B, M, KV, hd): like attention (memory over model).
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = mesh_shape.get(MODEL_AXIS, 1)
+    data_axes = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    dprod = 1
+    for a in data_axes:
+        dprod *= mesh_shape[a]
+    ba = (data_axes if len(data_axes) > 1 else data_axes[0]) if batch % dprod == 0 else None
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shp = leaf.shape
+        if "conv" in names[-1:]:
+            lead = len(shp) - 3
+            ch = MODEL_AXIS if shp[-1] % msize == 0 else None
+            return P(*([None] * lead), ba, None, ch)
+        if "state" in names[-1:]:
+            lead = len(shp) - 4
+            hx = MODEL_AXIS if shp[-3] % msize == 0 else None
+            return P(*([None] * lead), ba, hx, None, None)
+        # attention-like: (..., B, S, KV, hd)
+        lead = len(shp) - 4
+        seq = MODEL_AXIS if shp[-3] % msize == 0 else None
+        return P(*([None] * lead), ba, seq, None, None)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(path, leaf) for path, leaf in flat]
+    )

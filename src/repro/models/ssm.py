@@ -1,0 +1,210 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked train/prefill form +
+O(1)-state decode step.
+
+The chunked algorithm (Dao & Gu, 2024): within a chunk of length Q the
+output is a masked quadratic form (matmul-friendly — this is what the MXU
+wants); across chunks a tiny (H, N, P) state is carried by an associative
+scan. Decode keeps only that state plus a (K-1)-deep conv ring: cache size
+is independent of sequence length, which is why the `long_500k` shape is
+runnable for SSM/hybrid archs only.
+
+Shapes: B batch, S seq, H ssm heads, P head dim, N state dim, G groups
+(B/C shared across H/G heads), Q chunk length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads
+
+
+def init_ssd(key, cfg) -> Params:
+    d = cfg.d_model
+    n, g, k = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    d_inner, h = ssm_dims(cfg)
+    dt = cfg.param_dtype
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj packs [z, x, B, C, dt].
+        "in_proj": _dense_init(ks[0], (d, 2 * d_inner + 2 * g * n + h), dt),
+        "conv_w": _dense_init(ks[1], (k, conv_dim), dt, scale=k**-0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1 at init
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dt),
+        "out_proj": _dense_init(ks[2], (d_inner, d), dt, scale=d_inner**-0.5),
+    }
+
+
+def _split_proj(p: Params, x: jax.Array, cfg):
+    d_inner, h = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt  # (..., d_inner), (..., conv_dim), (..., H)
+
+
+def _causal_conv(p: Params, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. xbc (B, S, C)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1]] * p["conv_w"][i].astype(xbc.dtype)
+        for i in range(k)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def ssd(
+    p: Params,
+    x_in: jax.Array,
+    cfg,
+    return_final_state: bool = False,
+):
+    """Chunked SSD forward. x_in (B, S, d_model) -> (B, S, d_model)
+    [+ (state (B,H,N,P), conv_tail (B,K-1,conv_dim)) if requested]."""
+    cdt = cfg.compute_dtype
+    b, orig_s, _ = x_in.shape
+    g, n, q = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_chunk
+    d_inner, h = ssm_dims(cfg)
+    pdim = cfg.ssm_head_dim
+    # Pad S to a chunk multiple; padded steps get dt = 0 (identity state
+    # transition, zero input) so outputs and the final state are exact.
+    pad = (-orig_s) % q
+    x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0))) if pad else x_in
+    s = orig_s + pad
+    nc = s // q
+
+    z, xbc_raw, dt_raw = _split_proj(p, x_in.astype(cdt), cfg)
+    xbc = _causal_conv(p, xbc_raw)
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if pad:
+        valid = (jnp.arange(s) < orig_s)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    da = dt * a  # (B,S,H) log-decay per step
+
+    # chunk reshapes
+    xh = x.reshape(b, nc, q, h, pdim)
+    bm = bmat.reshape(b, nc, q, g, n)
+    cm = cmat.reshape(b, nc, q, g, n)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+
+    ca = jnp.cumsum(dac, axis=2)  # (B,Nc,Q,H) inclusive cumsum of log decay
+    xdt = xh * dtc[..., None].astype(cdt)
+
+    heads_per_group = h // g
+    # intra-chunk: M[i,j] = (C_i . B_j) * exp(ca_i - ca_j) for j <= i
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cm, bm)  # (B,Nc,G,Q,Q)
+    cb = jnp.repeat(cb, heads_per_group, axis=2)  # (B,Nc,H,Q,Q)
+    decay = ca[..., :, None, :] - ca[..., None, :, :]  # (B,Nc,Q,Q,H) i,j
+    decay = jnp.moveaxis(decay, -1, 2)  # (B,Nc,H,Q,Q)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(causal, cb.astype(jnp.float32) * jnp.exp(decay), 0.0).astype(cdt)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m, xdt)
+
+    # chunk states: S_c = sum_j exp(ca_last - ca_j) B_j (dt_j x_j)^T
+    tail = jnp.exp(ca[..., -1:, :] - ca)  # (B,Nc,Q,H)
+    bx = jnp.einsum(
+        "bcqhn,bcqhp->bchnp",
+        jnp.repeat(bm, heads_per_group, axis=3),
+        xdt * tail[..., None].astype(cdt),
+    )
+    gamma = jnp.exp(ca[:, :, -1, :])  # (B,Nc,H) chunk total decay
+
+    # inter-chunk associative scan: h_after_c = gamma_c * h_before_c + S_c
+    def combine(left, right):
+        gl, sl = left
+        gr, sr = right
+        return gl * gr, sr + sl * gr[..., None, None].astype(sl.dtype)
+
+    g_scan, s_scan = jax.lax.associative_scan(
+        combine, (gamma.astype(jnp.float32), bx.astype(jnp.float32)), axis=1
+    )
+    # state *before* chunk c = state after c-1; before chunk 0 = 0.
+    h_before = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1
+    ).astype(cdt)
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp", jnp.repeat(cm, heads_per_group, axis=3), h_before
+    ) * jnp.exp(ca)[..., None].astype(cdt)
+
+    y = (y_intra + y_inter + xh * p["d_skip"].astype(cdt)[..., None]).reshape(
+        b, s, d_inner
+    )
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = (y @ p["out_proj"].astype(cdt))[:, :orig_s]
+
+    if not return_final_state:
+        return out
+    final_state = s_scan[:, -1].astype(cdt)  # (B,H,N,P) exact: padded dt = 0
+    k = cfg.ssm_conv
+    conv_tail = xbc_raw[:, orig_s - (k - 1) : orig_s, :]  # pre-conv activations
+    return out, (final_state, conv_tail)
+
+
+def init_ssd_cache(cfg, batch: int, dtype):
+    d_inner, h = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, cfg.ssm_state, cfg.ssm_head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(p: Params, x_in: jax.Array, cache: Params, cfg):
+    """Single-token SSD step. x_in (B, 1, d_model) -> (B, 1, d_model), cache'.
+
+    State update: h <- exp(dt*A) h + B (dt*x)^T ; y = C.h + D*x.
+    """
+    cdt = cfg.compute_dtype
+    b = x_in.shape[0]
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    d_inner, h = ssm_dims(cfg)
+    pdim = cfg.ssm_head_dim
+    hpg = h // g
+
+    z, xbc_raw, dt_raw = _split_proj(p, x_in.astype(cdt), cfg)
+    # conv over ring of the last K-1 raw inputs + current
+    hist = jnp.concatenate([cache["conv"].astype(cdt), xbc_raw], axis=1)  # (B,K,conv)
+    k = cfg.ssm_conv
+    conv_out = sum(hist[:, i] * p["conv_w"][i].astype(cdt) for i in range(k))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(cdt))[:, None, :]  # (B,1,conv)
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * -jnp.exp(p["a_log"]))  # (B,H)
+    xh = x[:, 0].reshape(b, h, pdim)
+    bmg = jnp.repeat(bmat[:, 0].reshape(b, g, n), hpg, axis=1)  # (B,H,N)
+    cmg = jnp.repeat(cmat[:, 0].reshape(b, g, n), hpg, axis=1)
+
+    xdt = xh * dt[..., None].astype(cdt)
+    new_state = cache["state"].astype(cdt) * decay[..., None, None].astype(cdt) + (
+        bmg[..., :, None] * xdt[..., None, :]
+    )  # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", cmg, new_state) + xh * p["d_skip"].astype(cdt)[
+        ..., None
+    ]
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(cdt)
+    new_cache = {
+        "state": new_state.astype(cache["state"].dtype),
+        "conv": hist[:, 1:].astype(cache["conv"].dtype),
+    }
+    return out, new_cache

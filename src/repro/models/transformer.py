@@ -1,0 +1,421 @@
+"""Generic decoder LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+A model is ``prefix`` blocks (unscanned) followed by a repeating ``pattern``
+of blocks executed under ``lax.scan`` over stacked per-repeat parameters —
+the production trick that keeps HLO size O(pattern) instead of O(layers),
+with a configurable remat policy on the scan body.
+
+Entry points:
+  init_params(cfg, key)                    -> param pytree
+  forward(params, tokens, cfg, extras)     -> (B, S, V) f32 logits
+  loss_fn(params, tokens, targets, cfg)    -> scalar CE (+ MoE aux)
+  prefill(params, tokens, cfg, extras)     -> (last-position logits, caches)
+  decode_step(params, token, caches, pos)  -> (logits, caches')
+
+``extras['memory']`` carries the stub modality memory (image patches for the
+VLM cross-attention layers), already embedded at d_model per the spec.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockDef
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = dict[str, Any]
+
+
+def _scan(cfg, body, init, xs):
+    """lax.scan with the config's unroll factor. ``scan_unroll=0`` means full
+    unroll — used by the dry-run's *analysis* lowering because XLA's
+    HloCostAnalysis counts a while-loop body once instead of trip-count
+    times; production lowering keeps the rolled loop (small HLO)."""
+    unroll = cfg.scan_unroll
+    if unroll == 0:
+        unroll = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, unroll=max(unroll, 1))
+
+
+def _mask_padded_logits(logits: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Vocab padding (pad_vocab_to_multiple) adds never-trained columns so the
+    embed/lm_head shard over `model`; mask them out of softmax/argmax."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab, logits, -1e30)
+
+
+# -- per-block init/apply -------------------------------------------------------
+
+
+def init_block(key, bd: BlockDef, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if bd.mixer in ("attn", "cross_attn"):
+        p["attn"] = L.init_attention(ks[0], cfg, cross=bd.mixer == "cross_attn")
+    elif bd.mixer == "ssm":
+        p["ssm"] = S.init_ssd(ks[1], cfg)
+    elif bd.mixer == "hybrid":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ssm"] = S.init_ssd(ks[1], cfg)
+        p["norm_attn"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["norm_ssm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    else:
+        raise ValueError(bd.mixer)
+
+    if bd.ffn != "none":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if bd.ffn == "dense":
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    elif bd.ffn == "moe":
+        p["moe"] = L.init_moe(ks[3], cfg)
+    elif bd.ffn == "moe_dense":  # arctic: MoE + parallel dense residual branch
+        p["moe"] = L.init_moe(ks[3], cfg)
+        p["mlp"] = L.init_mlp(ks[4], cfg)
+    return p
+
+
+def _mixer(bd: BlockDef, p: Params, h: jax.Array, cfg, positions, extras) -> jax.Array:
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if bd.mixer == "attn":
+        return L.attention(p["attn"], x, cfg=cfg, positions=positions, window=bd.window)
+    if bd.mixer == "cross_attn":
+        return L.attention(
+            p["attn"], x, cfg=cfg, positions=positions,
+            kv_x=extras["memory"], causal=False, use_rope=False,
+        )
+    if bd.mixer == "ssm":
+        return S.ssd(p["ssm"], x, cfg)
+    if bd.mixer == "hybrid":
+        a = L.attention(p["attn"], x, cfg=cfg, positions=positions, window=bd.window)
+        m = S.ssd(p["ssm"], x, cfg)
+        # Hymba-style fusion: per-path normalization, then mean.
+        return 0.5 * (
+            L.rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+            + L.rmsnorm(p["norm_ssm"], m, cfg.norm_eps)
+        )
+    raise ValueError(bd.mixer)
+
+
+def _ffn(bd: BlockDef, p: Params, h: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Returns (ffn output, aux loss contribution)."""
+    zero = jnp.zeros((), jnp.float32)
+    if bd.ffn == "none":
+        return jnp.zeros_like(h), zero
+    x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if bd.ffn == "dense":
+        return L.mlp(p["mlp"], x, cfg), zero
+    if bd.ffn == "moe":
+        return L.moe(p["moe"], x, cfg), L.moe_aux_loss(p["moe"], x, cfg)
+    if bd.ffn == "moe_dense":
+        return (
+            L.moe(p["moe"], x, cfg) + L.mlp(p["mlp"], x, cfg),
+            L.moe_aux_loss(p["moe"], x, cfg),
+        )
+    raise ValueError(bd.ffn)
+
+
+def apply_block(bd, p, h, cfg, positions, extras):
+    h = h + _mixer(bd, p, h, cfg, positions, extras)
+    f, aux = _ffn(bd, p, h, cfg)
+    return h + f, aux
+
+
+# -- model init -------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 4 + len(cfg.prefix))
+    params: Params = {
+        "embed": L._dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), cfg.param_dtype, 1.0),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "lm_head": L._dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), cfg.param_dtype),
+    }
+    params["prefix"] = [
+        init_block(ks[4 + i], bd, cfg) for i, bd in enumerate(cfg.prefix)
+    ]
+    r = cfg.num_repeats
+    groups = []
+    for j, bd in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(ks[2], j), r)
+        groups.append(jax.vmap(lambda k: init_block(k, bd, cfg))(keys))
+    params["groups"] = groups
+    return params
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(cfg.remat)
+
+
+# -- training forward ---------------------------------------------------------------
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig, extras=None) -> jax.Array:
+    extras = extras or {}
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for bd, p in zip(cfg.prefix, params["prefix"]):
+        h, aux = apply_block(bd, p, h, cfg, positions, extras)
+        aux_total += aux
+
+    def body(carry, xs):
+        h, aux = carry
+        for bd, p in zip(cfg.pattern, xs):
+            h, a = apply_block(bd, p, h, cfg, positions, extras)
+            aux += a
+        return (h, aux), None
+
+    (h, aux_total), _ = _scan(cfg, 
+        _remat(body, cfg), (h, aux_total), tuple(params["groups"])
+    )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h.astype(cfg.compute_dtype), params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    return _mask_padded_logits(logits, cfg)
+
+
+def loss_fn(
+    params: Params,
+    tokens: jax.Array,
+    targets: jax.Array,
+    cfg: ArchConfig,
+    extras=None,
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    extras = extras or {}
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for bd, p in zip(cfg.prefix, params["prefix"]):
+        h, aux = apply_block(bd, p, h, cfg, positions, extras)
+        aux_total += aux
+
+    def body(carry, xs):
+        h, aux = carry
+        for bd, p in zip(cfg.pattern, xs):
+            h, a = apply_block(bd, p, h, cfg, positions, extras)
+            aux += a
+        return (h, aux), None
+
+    (h, aux_total), _ = _scan(cfg, 
+        _remat(body, cfg), (h, aux_total), tuple(params["groups"])
+    )
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h.astype(cfg.compute_dtype), params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    logits = _mask_padded_logits(logits, cfg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux_total / max(cfg.num_layers, 1)
+
+
+# -- serving: prefill + decode --------------------------------------------------------
+
+
+def init_block_cache(bd: BlockDef, cfg: ArchConfig, batch: int, max_len: int, dtype):
+    c: Params = {}
+    if bd.mixer in ("attn", "hybrid"):
+        c["attn"] = L.init_attn_cache(cfg, batch, max_len, bd.window, dtype)
+    if bd.mixer in ("ssm", "hybrid"):
+        c["ssm"] = S.init_ssd_cache(cfg, batch, dtype)
+    if bd.mixer == "cross_attn":
+        c["cross"] = {
+            "k": jnp.zeros((batch, cfg.num_patches, cfg.kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.num_patches, cfg.kv_heads, cfg.head_dim), dtype),
+        }
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "prefix": [
+            init_block_cache(bd, cfg, batch, max_len, dtype) for bd in cfg.prefix
+        ],
+        "groups": [
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.num_repeats,) + x.shape).copy()
+                if hasattr(x, "shape")
+                else x,
+                init_block_cache(bd, cfg, batch, max_len, dtype),
+            )
+            for bd in cfg.pattern
+        ],
+    }
+
+
+def _decode_mixer(bd, p, h, cache, pos, cfg, extras):
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if bd.mixer == "attn":
+        if cfg.flash_decode and bd.window is None and "mesh" in extras:
+            y, c2 = L.flash_decode_attention(
+                p["attn"], x, cache["attn"], pos, cfg=cfg, mesh=extras["mesh"],
+                batch_axes=extras.get("batch_axes", ("data",)),
+            )
+        else:
+            y, c2 = L.decode_attention(
+                p["attn"], x, cache["attn"], pos, cfg=cfg, window=bd.window
+            )
+        return y, {**cache, "attn": c2}
+    if bd.mixer == "ssm":
+        y, c2 = S.ssd_decode(p["ssm"], x, cache["ssm"], cfg)
+        return y, {**cache, "ssm": c2}
+    if bd.mixer == "hybrid":
+        a, ca = L.decode_attention(p["attn"], x, cache["attn"], pos, cfg=cfg, window=bd.window)
+        m, cs = S.ssd_decode(p["ssm"], x, cache["ssm"], cfg)
+        y = 0.5 * (
+            L.rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+            + L.rmsnorm(p["norm_ssm"], m, cfg.norm_eps)
+        )
+        return y, {**cache, "attn": ca, "ssm": cs}
+    if bd.mixer == "cross_attn":
+        # Cross K/V were computed at prefill; decode is one cached attention.
+        cdt = cfg.compute_dtype
+        q = jnp.einsum("bsd,dhk->bshk", x.astype(cdt), p["attn"]["wq"].astype(cdt))
+        ck, cv = cache["cross"]["k"].astype(cdt), cache["cross"]["v"].astype(cdt)
+        b, _, hh, hd = q.shape
+        kvh = ck.shape[2]
+        qr = q.reshape(b, 1, kvh, hh // kvh, hd)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qr, ck).astype(jnp.float32) * hd**-0.5
+        w = jax.nn.softmax(sc, axis=-1).astype(cdt)
+        o = jnp.einsum("bkgst,btkd->bskgd", w, cv).reshape(b, 1, hh, hd)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(cdt))
+        return y, cache
+    raise ValueError(bd.mixer)
+
+
+def decode_block(bd, p, h, cache, pos, cfg, extras):
+    y, cache = _decode_mixer(bd, p, h, cache, pos, cfg, extras)
+    h = h + y
+    f, _ = _ffn(bd, p, h, cfg)
+    return h + f, cache
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, extras=None, max_len: int | None = None):
+    """Full-sequence pass building the decode cache; returns (logits at the
+    last position (B, V), caches). ``max_len`` sizes full-attention caches
+    for subsequent decode_step writes (defaults to the prompt length)."""
+    extras = extras or {}
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    cdt = cfg.compute_dtype
+
+    def block_with_cache(bd, p, h):
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        cache: Params = {}
+        if bd.mixer in ("attn", "hybrid"):
+            k = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["attn"]["wk"].astype(cdt))
+            v = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["attn"]["wv"].astype(cdt))
+            if "q_norm" in p["attn"]:
+                k = L.rmsnorm(p["attn"]["k_norm"], k)
+            k = L.rope(k, positions, cfg.rope_theta)
+            w = bd.window
+            if w:
+                # Ring layout: position p lives at slot p % w. The last
+                # min(s, w) positions are a contiguous run, so a roll (s>=w)
+                # or right-padding (s<w) produces the ring.
+                cov = min(s, w)
+                ks_, vs_ = k[:, -cov:], v[:, -cov:]
+                if s >= w:
+                    ks_ = jnp.roll(ks_, s % w, axis=1)
+                    vs_ = jnp.roll(vs_, s % w, axis=1)
+                else:
+                    pad = ((0, 0), (0, w - s), (0, 0), (0, 0))
+                    ks_, vs_ = jnp.pad(ks_, pad), jnp.pad(vs_, pad)
+                cache["attn"] = {"k": ks_, "v": vs_}
+            else:
+                buf = max_len or s
+                pad = ((0, 0), (0, buf - s), (0, 0), (0, 0))
+                cache["attn"] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        if bd.mixer in ("ssm", "hybrid"):
+            _, (state, conv_tail) = S.ssd(p["ssm"], x, cfg, return_final_state=True)
+            cache["ssm"] = {"state": state, "conv": conv_tail}
+        if bd.mixer == "cross_attn":
+            mem = extras["memory"].astype(cdt)
+            cache["cross"] = {
+                "k": jnp.einsum("btd,dhk->bthk", mem, p["attn"]["wk"].astype(cdt)),
+                "v": jnp.einsum("btd,dhk->bthk", mem, p["attn"]["wv"].astype(cdt)),
+            }
+        h, _ = apply_block(bd, p, h, cfg, positions, extras)
+        return h, cache
+
+    prefix_caches = []
+    for bd, p in zip(cfg.prefix, params["prefix"]):
+        h, c = block_with_cache(bd, p, h)
+        prefix_caches.append(c)
+
+    group_caches = []
+
+    def body(h, xs):
+        caches = []
+        for bd, p in zip(cfg.pattern, xs):
+            h, c = block_with_cache(bd, p, h)
+            caches.append(c)
+        return h, tuple(caches)
+
+    h, stacked = _scan(cfg, _remat(body, cfg), h, tuple(params["groups"]))
+    group_caches = list(stacked)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    last = h[:, -1].astype(cfg.compute_dtype)
+    logits = (last @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return _mask_padded_logits(logits, cfg), {"prefix": prefix_caches, "groups": group_caches}
+
+
+def decode_step(params: Params, token: jax.Array, caches, pos, cfg: ArchConfig, extras=None):
+    """token (B,) int32, pos scalar -> (logits (B, V) f32, caches')."""
+    extras = extras or {}
+    h = params["embed"][token[:, None]].astype(cfg.compute_dtype)  # (B,1,d)
+
+    new_prefix = []
+    for bd, p, c in zip(cfg.prefix, params["prefix"], caches["prefix"]):
+        h, c2 = decode_block(bd, p, h, c, pos, cfg, extras)
+        new_prefix.append(c2)
+
+    new_groups = []
+
+    def body(h, xs):
+        params_sl, cache_sl = xs
+        new_caches = []
+        for bd, p, c in zip(cfg.pattern, params_sl, cache_sl):
+            h, c2 = decode_block(bd, p, h, c, pos, cfg, extras)
+            new_caches.append(c2)
+        return h, tuple(new_caches)
+
+    h, stacked = _scan(cfg, 
+        body, h, (tuple(params["groups"]), tuple(caches["groups"]))
+    )
+    new_groups = list(stacked)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (
+        h[:, 0].astype(cfg.compute_dtype) @ params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    return _mask_padded_logits(logits, cfg), {"prefix": new_prefix, "groups": new_groups}
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

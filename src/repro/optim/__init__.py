@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, OptState
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import compress_int8, decompress_int8, pod_allreduce_compressed
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "OptState",
+    "adafactor_init", "adafactor_update",
+    "cosine_schedule",
+    "compress_int8", "decompress_int8", "pod_allreduce_compressed",
+]

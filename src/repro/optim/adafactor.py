@@ -1,0 +1,74 @@
+"""Adafactor (factored second moment) — the memory-term hillclimb option for
+the trillion-parameter configs: O(r+c) optimizer state per matrix instead of
+O(r*c), no first moment. See EXPERIMENTS.md §Perf (kimi-k2 memory iteration).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FactoredState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row second-moment (or full moment for rank<2 leaves)
+    vc: Any  # col second-moment (zeros placeholder for rank<2 leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> FactoredState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return FactoredState(
+        jnp.zeros((), jnp.int32), jax.tree.map(vr, params), jax.tree.map(vc, params)
+    )
+
+
+def adafactor_update(
+    grads,
+    state: FactoredState,
+    params,
+    lr: float = 1e-3,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    step = state.step + 1
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            new_vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            new_vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = new_vr / jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), eps)
+            u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :])
+        else:
+            new_vr = decay * vr + (1 - decay) * g2
+            new_vc = vc
+            u = g32 / jnp.sqrt(new_vr)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_vr, new_vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    leaf = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+        FactoredState(
+            step,
+            jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+            jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
+        ),
+    )

@@ -1,0 +1,4 @@
+from repro.runtime.monitor import StepMonitor, StragglerPolicy
+from repro.runtime.elastic import ElasticPlan, plan_remesh
+
+__all__ = ["StepMonitor", "StragglerPolicy", "ElasticPlan", "plan_remesh"]

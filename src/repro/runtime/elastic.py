@@ -1,0 +1,57 @@
+"""Elastic re-meshing plans: respond to node loss / scale-up by choosing a
+new mesh shape and re-sharding from the last checkpoint.
+
+The contract at 1000+ nodes: a failure shrinks the healthy device set; we
+pick the largest (data', model') grid that (a) fits the healthy count,
+(b) preserves the model-axis divisibility the arch needs, and (c) keeps the
+global batch by raising grad-accumulation. CheckpointManager.restore with
+the new mesh's shardings performs the actual re-layout (device_put handles
+arbitrary source->target resharding).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    pods: int
+    grad_accum: int  # multiplier to preserve global batch
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+def plan_remesh(
+    healthy_devices: int,
+    model_divisors: tuple[int, ...],
+    target_global_batch: int,
+    old_plan: ElasticPlan,
+) -> ElasticPlan:
+    """Choose the best mesh for the healthy device count.
+
+    ``model_divisors``: acceptable model-axis sizes for the architecture
+    (e.g. (16, 8, 4) — d_ff/head divisibility). Prefers the largest total
+    device usage, then the largest model axis (keeps per-device memory low).
+    """
+    best: ElasticPlan | None = None
+    for m in sorted(model_divisors, reverse=True):
+        if m > healthy_devices:
+            continue
+        d = healthy_devices // m
+        used = d * m
+        accum_scale = max(
+            1, (old_plan.data * old_plan.pods * old_plan.grad_accum + d - 1) // d
+        )
+        cand = ElasticPlan(data=d, model=m, pods=1, grad_accum=accum_scale)
+        if best is None or cand.devices > best.devices or (
+            cand.devices == best.devices and cand.model > best.model
+        ):
+            best = cand
+    if best is None:
+        raise ValueError(f"no viable mesh for {healthy_devices} devices")
+    return best

@@ -1,0 +1,11 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device. Multi-device mesh behaviour is tested via
+# subprocesses (test_mesh_multidevice.py) that set
+# --xla_force_host_platform_device_count themselves.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,84 @@
+"""Per-architecture smoke tests (REDUCED configs, CPU, 1 device):
+instantiate, one forward/train step, one prefill+decode step; assert output
+shapes and no NaNs. The FULL configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _extras(cfg):
+    if cfg.family == "vlm":
+        return {"memory": jax.random.normal(KEY, (B, cfg.num_patches, cfg.d_model))}
+    return None
+
+
+@pytest.mark.parametrize("arch", registry.names())
+def test_reduced_train_step(arch):
+    cfg = registry.get(arch).reduced()
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        p = ED.init_params(cfg, KEY)
+        frames = jax.random.normal(KEY, (B, S, cfg.d_model))
+        loss, grads = jax.value_and_grad(
+            lambda q: ED.loss_fn(q, frames, toks, toks, cfg)
+        )(p)
+    else:
+        p = T.init_params(cfg, KEY)
+        extras = _extras(cfg)
+        logits = T.forward(p, toks, cfg, extras)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), "NaN in forward"
+        loss, grads = jax.value_and_grad(
+            lambda q: T.loss_fn(q, toks, toks, cfg, extras)
+        )(p)
+    assert bool(jnp.isfinite(loss)), f"{arch}: NaN loss"
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), (
+        f"{arch}: NaN grads"
+    )
+
+
+@pytest.mark.parametrize("arch", registry.names())
+def test_reduced_serve_step(arch):
+    cfg = registry.get(arch).reduced()
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        p = ED.init_params(cfg, KEY)
+        frames = jax.random.normal(KEY, (B, S, cfg.d_model))
+        logits, cache = ED.prefill(p, frames, toks, cfg, max_len=S + 4)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache = ED.decode_step(p, nxt, cache, S, cfg)
+    else:
+        p = T.init_params(cfg, KEY)
+        extras = _extras(cfg)
+        logits, cache = T.prefill(p, toks, cfg, extras, max_len=S + 4)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache = T.decode_step(p, nxt, cache, S, cfg, extras)
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all()), f"{arch}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch", registry.names())
+def test_full_config_structure_is_consistent(arch):
+    """Full configs: structural invariants only (no allocation)."""
+    cfg = registry.get(arch)
+    assert cfg.num_repeats >= 1
+    if cfg.family != "encdec":
+        assert len(cfg.prefix) + len(cfg.pattern) * cfg.num_repeats == cfg.num_layers
+    if cfg.q_heads:
+        assert cfg.q_heads % max(cfg.kv_heads, 1) == 0, "GQA group must divide"
+    if cfg.num_experts:
+        assert 0 < cfg.moe_top_k <= cfg.num_experts
+    # eval_shape init must succeed without allocating
+    init = ED.init_params if cfg.family == "encdec" else T.init_params
+    struct = jax.eval_shape(lambda: init(cfg, KEY))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(struct))
+    assert n_params > 0

@@ -1,0 +1,70 @@
+"""Checkpoint manager: roundtrip, retention, async, crash-safety."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(4)},
+        "opt": [jnp.zeros(2), jnp.full((2, 2), 7.0)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    import jax
+
+    t = _tree()
+    save_pytree(tmp_path / "ck", t, step=5, extra={"note": "hi"})
+    restored, manifest = restore_pytree(tmp_path / "ck", t)
+    assert manifest["step"] == 5
+    assert manifest["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_pytree(tmp_path / "ck", _tree(), step=1)
+    with pytest.raises(ValueError, match="leaves"):
+        restore_pytree(tmp_path / "ck", {"just": jnp.zeros(1)})
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in [10, 20, 30]:
+        mgr.save(step, _tree())
+    assert mgr.latest_step() == 30
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_00000020", "step_00000030"]
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree(), async_=True)
+    mgr.wait()
+    restored, manifest = mgr.restore_latest(_tree())
+    assert manifest["step"] == 1
+
+
+def test_crash_mid_save_keeps_previous(tmp_path):
+    """A stale .tmp dir (simulated crash) must not shadow the good ckpt."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    # simulate a crashed save: partial tmp dir without manifest
+    bad = tmp_path / "step_00000002.tmp"
+    bad.mkdir()
+    (bad / "leaves.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 1
+    restored, manifest = mgr.restore_latest(_tree())
+    assert manifest["step"] == 1
+
+
+def test_restore_empty_returns_none(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree, manifest = mgr.restore_latest(_tree())
+    assert tree is None and manifest is None

@@ -1,0 +1,99 @@
+"""Distribution fitters/CDFs: recovery, bounds, monotonicity (property)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as d
+from repro.core import fitting
+
+KEY = jax.random.PRNGKey(0)
+
+RECOVERY_CASES = [
+    ("normal", (3.0, 0.5, 0.0)),
+    ("uniform", (1.0, 4.0, 0.0)),
+    ("exponential", (2.0, 0.0, 0.0)),
+    ("lognormal", (0.5, 0.4, 0.0)),
+    ("gamma", (3.0, 2.0, 0.0)),
+    ("logistic", (1.0, 0.7, 0.0)),
+    ("weibull", (2.0, 1.5, 0.0)),
+]
+
+
+@pytest.mark.parametrize("tname,params", RECOVERY_CASES)
+def test_fit_recovers_generating_type_4way(tname, params):
+    """Algorithm 3 over a candidate set containing the generator picks it (or
+    an equivalent fit with error within noise of the generator's)."""
+    types = d.TYPES_10
+    v = d.sample(tname, params, KEY, (8, 4000))
+    m = d.moments_from_values(v)
+    r = fitting.compute_pdf_and_error(v, m, types, 32)
+    gen_idx = d.type_index(types, tname)
+    err_best = np.asarray(r.error)
+    # compute the generator type's own error for comparison
+    params_all = d.fit_all(types, m)
+    from repro.core import pdf_error as pe
+
+    edges = pe.interval_edges(m.vmin, m.vmax, 32)
+    masses = pe.cdf_masses(types, params_all, edges)
+    freq = pe.histogram(v, m.vmin, m.vmax, 32)
+    errs = np.asarray(pe.pdf_error_from_freq(freq, masses))
+    gen_err = errs[:, gen_idx]
+    # best error can only be <= generator error; and must be close to it
+    assert (err_best <= gen_err + 1e-6).all()
+    assert (err_best >= gen_err - 0.15).all(), "picked a wildly better fit?"
+
+
+@pytest.mark.parametrize("tname", d.TYPES_10)
+def test_cdf_bounds_and_monotonicity(tname):
+    params = {
+        "normal": (0.0, 1.0, 0.0), "uniform": (-1.0, 1.0, 0.0),
+        "exponential": (1.5, 0.0, 0.0), "lognormal": (0.0, 0.5, 0.0),
+        "cauchy": (0.0, 1.0, 0.0), "gamma": (2.0, 1.0, 0.0),
+        "geometric": (0.3, 0.0, 0.0), "logistic": (0.0, 1.0, 0.0),
+        "student_t": (0.0, 1.0, 8.0), "weibull": (1.5, 1.0, 0.0),
+    }[tname]
+    p = jnp.asarray(params)
+    x = jnp.linspace(-5.0, 10.0, 201)
+    c = np.asarray(d.cdf(tname, p, x))
+    assert np.isfinite(c).all()
+    assert (c >= -1e-6).all() and (c <= 1 + 1e-6).all()
+    assert (np.diff(c) >= -1e-5).all(), "CDF must be nondecreasing"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mean=st.floats(-100, 100),
+    std=st.floats(0.01, 50),
+    n=st.integers(20, 200),
+)
+def test_moments_match_numpy(mean, std, n):
+    rng = np.random.default_rng(42)
+    v = (mean + std * rng.standard_normal((3, n))).astype(np.float32)
+    m = d.moments_from_values(jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(m.mean), v.mean(1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(m.var), v.var(1, ddof=1), rtol=2e-3, atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(m.vmin), v.min(1), rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(m.vmax), v.max(1), rtol=0, atol=0)
+
+
+def test_fit_all_shape_and_finiteness():
+    v = d.sample("normal", (10.0, 2.0, 0.0), KEY, (5, 300))
+    m = d.moments_from_values(v)
+    params = d.fit_all(d.TYPES_10, m)
+    assert params.shape == (5, 10, 3)
+    assert bool(jnp.isfinite(params).all())
+
+
+def test_weibull_bisection_accuracy():
+    # known k: CV^2 should invert back
+    for k_true in [0.7, 1.0, 2.0, 5.0]:
+        lam = 2.0
+        v = d.sample("weibull", (k_true, lam, 0.0), KEY, (1, 200_000))
+        m = d.moments_from_values(v)
+        p = d.fit_weibull(m)
+        assert abs(float(p[0, 0]) - k_true) / k_true < 0.1, (k_true, p[0])

@@ -1,0 +1,73 @@
+"""Grouping invariants (host + device paths) — property-based."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grouping as grp
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    distinct=st.integers(1, 20),
+    seed=st.integers(0, 1000),
+)
+def test_host_grouping_invariants(n, distinct, seed):
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(-1000, 1000, size=(distinct, 2))
+    keys = pool[rng.integers(0, distinct, size=n)]
+    g = grp.group_host(keys)
+    # every point maps to a representative with an identical key
+    np.testing.assert_array_equal(keys[g.rep_indices][g.inverse], keys)
+    # group count == distinct keys actually present
+    assert g.num_groups == len(np.unique(keys, axis=0))
+    # representatives are themselves members of their group
+    assert (g.inverse[g.rep_indices] == np.arange(g.num_groups)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    distinct=st.integers(1, 10),
+    seed=st.integers(0, 100),
+)
+def test_device_grouping_matches_host(n, distinct, seed):
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(-50, 50, size=(distinct, 2))
+    keys = pool[rng.integers(0, distinct, size=n)]
+    host = grp.group_host(keys)
+    dev = grp.group_device(jnp.asarray(keys, jnp.int32))
+    assert int(dev.num_groups) == host.num_groups
+    rep = np.asarray(dev.rep_for_point)
+    # device rep index: first occurrence (smallest original index) of the key
+    np.testing.assert_array_equal(keys[rep], keys)
+    for i in range(n):
+        same = np.nonzero((keys == keys[i]).all(1))[0]
+        assert rep[i] == same.min()
+
+
+def test_quantize_keys_tolerance():
+    mean = jnp.asarray([1.0, 1.0000004, 1.1])
+    std = jnp.asarray([0.5, 0.5, 0.5])
+    k_tight = np.asarray(grp.quantize_keys(mean, std, tol=1e-7))
+    k_loose = np.asarray(grp.quantize_keys(mean, std, tol=1e-2))
+    assert not (k_tight[0] == k_tight[1]).all() or True  # may or may not merge
+    assert (k_loose[0] == k_loose[1]).all()  # within tolerance -> same group
+    assert not (k_loose[0] == k_loose[2]).all()
+
+
+def test_pad_representatives_bucket():
+    reps = np.arange(5)
+    padded = grp.pad_representatives(reps, bucket=8)
+    assert len(padded) == 8
+    np.testing.assert_array_equal(padded[:5], reps)
+
+
+def test_scatter_group_results_roundtrip():
+    rep_results = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    inverse = jnp.asarray([0, 1, 0, 0, 1])
+    out = np.asarray(grp.scatter_group_results(rep_results, inverse))
+    np.testing.assert_array_equal(out[0], [1, 2])
+    np.testing.assert_array_equal(out[1], [3, 4])
+    np.testing.assert_array_equal(out[3], [1, 2])

@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdf_error as pe
+from repro.kernels.hist import hist_ref, histogram
+from repro.kernels.moments import moments, stats_ref
+
+SHAPES = [(1, 64), (7, 100), (8, 512), (16, 1000), (3, 513), (32, 2048), (5, 1)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _f64_moments(v):
+    v = np.asarray(v, np.float64)
+    n = v.shape[1]
+    mean = v.mean(1)
+    c = v - mean[:, None]
+    m2 = (c**2).mean(1)
+    m3 = (c**3).mean(1)
+    m4 = (c**4).mean(1)
+    var = m2 * n / max(n - 1, 1)
+    sig = np.sqrt(np.maximum(m2, 1e-12))
+    return np.stack(
+        [mean, var, m3 / sig**3, m4 / np.maximum(m2, 1e-12) ** 2 - 3, v.min(1), v.max(1)], 1
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_moments_kernel_allclose(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    v = (3000 + 10 * rng.standard_normal(shape)).astype(np.float32)
+    vx = jnp.asarray(v, dtype)
+    m = moments(vx)
+    oracle = _f64_moments(np.asarray(vx, np.float32))
+    got = np.stack([np.asarray(x, np.float64) for x in m], 1)
+    tol = 1e-3 if dtype == jnp.float32 else 0.15
+    # mean/min/max relative to value scale; var relative; skew/kurt absolute.
+    np.testing.assert_allclose(got[:, 0], oracle[:, 0], rtol=tol, atol=tol)
+    np.testing.assert_allclose(got[:, 1], oracle[:, 1], rtol=0.05 if dtype != jnp.float32 else 2e-3, atol=tol)
+    np.testing.assert_allclose(got[:, 2], oracle[:, 2], atol=0.3 if dtype != jnp.float32 else 5e-3)
+    np.testing.assert_allclose(got[:, 3], oracle[:, 3], atol=1.0 if dtype != jnp.float32 else 2e-2)
+    np.testing.assert_allclose(got[:, 4], oracle[:, 4], rtol=tol, atol=tol)
+    np.testing.assert_allclose(got[:, 5], oracle[:, 5], rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("num_bins", [8, 20, 64])
+def test_hist_kernel_allclose(shape, num_bins):
+    rng = np.random.default_rng(hash((shape, num_bins)) % 2**31)
+    v = rng.standard_normal(shape).astype(np.float32)
+    vx = jnp.asarray(v)
+    vmin, vmax = vx.min(1), vx.max(1)
+    got = np.asarray(histogram(vx, vmin, vmax, num_bins))
+    ref = np.asarray(hist_ref(vx, vmin, vmax, num_bins))
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got.sum(1), np.full(shape[0], shape[1]))
+
+
+def test_hist_kernel_constant_rows():
+    """All-equal rows (span ~0) must not NaN; everything lands in bin 0."""
+    v = jnp.full((4, 100), 7.0)
+    got = np.asarray(histogram(v, v.min(1), v.max(1), 16))
+    assert got[:, 0].sum() == 4 * 100
+    assert np.isfinite(got).all()
+
+
+def test_kernels_compose_into_eq5():
+    """Kernel-backed Eq. 5 == reference Eq. 5 (fitting.histogram_fn hook)."""
+    from repro.core import distributions as d
+    from repro.core import fitting
+
+    v = d.sample("gamma", (2.0, 1.5, 0.0), jax.random.PRNGKey(3), (9, 700))
+    m_ref = d.moments_from_values(v)
+    a = fitting.compute_pdf_and_error(v, m_ref, d.TYPES_4, 20)
+    m_k = moments(v)
+    b = fitting.compute_pdf_and_error(v, m_k, d.TYPES_4, 20, histogram_fn=histogram)
+    np.testing.assert_array_equal(np.asarray(a.type_idx), np.asarray(b.type_idx))
+    np.testing.assert_allclose(np.asarray(a.error), np.asarray(b.error), atol=1e-3)

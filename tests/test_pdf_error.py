@@ -1,0 +1,81 @@
+"""Eq. 5 / Eq. 6 properties + fused-vs-faithful equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as d
+from repro.core import fitting
+from repro.core import pdf_error as pe
+
+KEY = jax.random.PRNGKey(1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 500),
+    num_bins=st.sampled_from([4, 16, 20, 64]),
+    scale=st.floats(0.1, 1000),
+)
+def test_histogram_partitions_all_values(n, num_bins, scale):
+    rng = np.random.default_rng(7)
+    v = (scale * rng.standard_normal((4, n))).astype(np.float32)
+    vmin, vmax = v.min(1), v.max(1)
+    h = np.asarray(pe.histogram(jnp.asarray(v), jnp.asarray(vmin), jnp.asarray(vmax), num_bins))
+    assert h.shape == (4, num_bins)
+    np.testing.assert_array_equal(h.sum(1), np.full(4, n))
+    assert (h >= 0).all()
+
+
+def test_error_bounded_by_two():
+    """|freq/N - mass| summed: freqs sum to 1, masses sum to <= 1 => e <= 2."""
+    v = d.sample("normal", (0.0, 1.0, 0.0), KEY, (16, 500))
+    m = d.moments_from_values(v)
+    params = d.fit_all(d.TYPES_10, m)
+    errs = np.asarray(pe.pdf_error(v, params, d.TYPES_10, 20, m))
+    assert (errs >= 0).all() and (errs <= 2.0 + 1e-6).all()
+
+
+def test_error_decreases_with_sample_size():
+    """Eq.-5 error of the true type shrinks as n grows (KS-consistency)."""
+    errs = []
+    for n in [100, 1000, 10_000]:
+        v = d.sample("normal", (5.0, 2.0, 0.0), KEY, (8, n))
+        m = d.moments_from_values(v)
+        r = fitting.compute_pdf_and_error(v, m, d.TYPES_4, 20)
+        errs.append(float(np.asarray(r.error).mean()))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_fused_equals_faithful():
+    v = d.sample("lognormal", (0.2, 0.6, 0.0), KEY, (6, 400))
+    m = d.moments_from_values(v)
+    a = fitting.compute_pdf_and_error(v, m, d.TYPES_10, 32, mode="fused")
+    b = fitting.compute_pdf_and_error(v, m, d.TYPES_10, 32, mode="faithful")
+    np.testing.assert_array_equal(np.asarray(a.type_idx), np.asarray(b.type_idx))
+    np.testing.assert_allclose(np.asarray(a.error), np.asarray(b.error), rtol=1e-6)
+
+
+def test_predicted_type_path_matches_full_path_error():
+    """Algorithm 4 with the *correct* prediction reproduces Algorithm 3's
+    error for that type exactly."""
+    v = d.sample("exponential", (1.0, 0.0, 0.0), KEY, (5, 800))
+    m = d.moments_from_values(v)
+    full = fitting.compute_pdf_and_error(v, m, d.TYPES_4, 20)
+    pred = fitting.compute_pdf_with_predicted_type(
+        v, m, full.type_idx, d.TYPES_4, 20
+    )
+    np.testing.assert_allclose(
+        np.asarray(pred.error), np.asarray(full.error), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(pred.params), np.asarray(full.params), rtol=1e-6
+    )
+
+
+def test_slice_average_error_masked():
+    e = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    assert float(pe.slice_average_error(e)) == 2.5
+    mask = jnp.asarray([True, True, False, False])
+    assert float(pe.slice_average_error(e, mask)) == 1.5

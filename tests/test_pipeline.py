@@ -1,0 +1,111 @@
+"""End-to-end pipeline (Algorithms 1-2): method equivalence, reuse, restart."""
+
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core import ml_predict as mlp
+from repro.core.pipeline import PDFComputer, PDFConfig
+from repro.core.regions import CubeGeometry
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SeismicSimulation(
+        SimulationConfig(geometry=CubeGeometry(8, 9, 12), num_simulations=300)
+    )
+
+
+@pytest.fixture(scope="module")
+def tree(sim):
+    """Train the type tree from 'previously generated output data'
+    (baseline over slices 0-3, covering all four types; §5.3.1)."""
+    from repro.core.pipeline import train_type_tree
+
+    return train_type_tree(sim, window_lines=3)
+
+
+def test_baseline_runs_and_bounds_error(sim):
+    comp = PDFComputer(
+        PDFConfig(window_lines=4, method="baseline", error_bound=1.0), sim
+    )
+    res = comp.run_slice(3)
+    assert res.type_idx.shape == (9 * 12,)
+    assert np.isfinite(res.error).all()
+    assert res.error_bound_satisfied is True
+    assert 0 <= res.avg_error <= 2
+
+
+def test_grouping_matches_baseline_exactly(sim):
+    """With exact keys, grouped PDFs == per-point PDFs (same mean/std => same
+    observations in this generator)."""
+    base = PDFComputer(PDFConfig(window_lines=3, method="baseline"), sim)
+    grup = PDFComputer(PDFConfig(window_lines=3, method="grouping"), sim)
+    rb = base.run_slice(2)
+    rg = grup.run_slice(2)
+    np.testing.assert_array_equal(rb.type_idx, rg.type_idx)
+    np.testing.assert_allclose(rb.error, rg.error, rtol=1e-6)
+    # grouping must actually reduce fitted points (generator has redundancy)
+    assert sum(s.num_fitted for s in rg.stats) < sum(s.num_fitted for s in rb.stats)
+
+
+def test_reuse_hits_across_windows(sim):
+    comp = PDFComputer(PDFConfig(window_lines=3, method="reuse"), sim)
+    res = comp.run_slice(2)
+    assert comp.cache.hits > 0, "windows share (mu, sigma) keys in this generator"
+    assert comp.cache.size > 0
+
+
+def test_ml_method_small_extra_error(sim, tree):
+    base = PDFComputer(PDFConfig(window_lines=3, method="baseline"), sim)
+    ml = PDFComputer(PDFConfig(window_lines=3, method="ml"), sim, tree=tree)
+    rb = base.run_slice(4)
+    rm = ml.run_slice(4)
+    # the paper: WithML error is slightly larger, bounded (<= 0.017 there).
+    assert rm.avg_error <= rb.avg_error + 0.05
+    agreement = (rm.type_idx == rb.type_idx).mean()
+    assert agreement > 0.9, f"tree should usually predict argmin type ({agreement})"
+
+
+def test_grouping_ml_combination(sim, tree):
+    comp = PDFComputer(PDFConfig(window_lines=3, method="grouping_ml"), sim, tree=tree)
+    res = comp.run_slice(4)
+    assert np.isfinite(res.avg_error)
+    assert sum(s.num_fitted for s in res.stats) < 9 * 12
+
+
+def test_restart_from_watermark(sim, tmp_path):
+    cfg = PDFConfig(window_lines=3, method="grouping")
+    full = PDFComputer(cfg, sim, out_dir=tmp_path / "full").run_slice(5)
+
+    out = tmp_path / "restart"
+    partial = PDFComputer(cfg, sim, out_dir=out)
+    windows_done = 0
+
+    class Stop(Exception):
+        pass
+
+    def crash_after_one(ws):
+        nonlocal windows_done
+        windows_done += 1
+        if windows_done == 1:
+            raise Stop()
+
+    with pytest.raises(Stop):
+        partial.run_slice(5, on_window=crash_after_one)
+
+    resumed = PDFComputer(cfg, sim, out_dir=out).run_slice(5, resume=True)
+    np.testing.assert_array_equal(resumed.type_idx, full.type_idx)
+    np.testing.assert_allclose(resumed.error, full.error, rtol=1e-6)
+    # resumed run did fewer windows than the full run
+    assert len(resumed.stats) < len(full.stats)
+
+
+def test_kernel_backed_pipeline_matches_reference(sim):
+    a = PDFComputer(PDFConfig(window_lines=3, method="baseline"), sim).run_slice(1)
+    b = PDFComputer(
+        PDFConfig(window_lines=3, method="baseline", use_kernels=True), sim
+    ).run_slice(1)
+    np.testing.assert_array_equal(a.type_idx, b.type_idx)
+    np.testing.assert_allclose(a.error, b.error, atol=2e-3)

@@ -1,0 +1,67 @@
+"""Sampling (Algorithm 5): estimators approach full-population features."""
+
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core import ml_predict as mlp
+from repro.core import sampling as smp
+
+
+@pytest.fixture(scope="module")
+def population():
+    rng = np.random.default_rng(0)
+    # two sub-populations with distinct (mu, sigma) signatures -> types 0/1
+    mean = np.concatenate([rng.normal(0, 0.1, 600), rng.normal(5, 0.1, 400)])
+    std = np.concatenate([rng.normal(1, 0.02, 600), rng.normal(3, 0.02, 400)])
+    labels = np.concatenate([np.zeros(600, np.int32), np.ones(400, np.int32)])
+    feats = np.stack([mean, std], 1).astype(np.float32)
+    tree = mlp.train_tree(feats, labels, len(d.TYPES_4), depth=2, max_bins=16)
+    return mean.astype(np.float32), std.astype(np.float32), labels, tree
+
+
+def test_full_rate_recovers_exact_percentages(population):
+    mean, std, labels, tree = population
+    f = smp.slice_features_from_moments(mean, std, tree, d.TYPES_4, group_first=False)
+    np.testing.assert_allclose(f.type_percentage[0], 0.6, atol=0.02)
+    np.testing.assert_allclose(f.type_percentage[1], 0.4, atol=0.02)
+    np.testing.assert_allclose(f.avg_mean, mean.mean(), rtol=1e-6)
+
+
+def test_random_sampling_distance_shrinks_with_rate(population):
+    mean, std, labels, tree = population
+    full = smp.slice_features_from_moments(mean, std, tree, d.TYPES_4, group_first=False)
+    dists = []
+    for rate in [0.01, 0.1, 0.5]:
+        idx = smp.sample_indices_random(len(mean), rate, seed=5)
+        f = smp.slice_features_from_moments(
+            mean[idx], std[idx], tree, d.TYPES_4, group_first=False
+        )
+        dists.append(smp.type_percentage_distance(f.type_percentage, full.type_percentage))
+    assert dists[2] <= dists[0] + 0.05, dists  # fig 17's trend
+
+
+def test_kmeans_sampling_selects_diverse_points(population):
+    mean, std, _, _ = population
+    feats = np.stack([mean, std], 1)
+    idx = smp.sample_indices_kmeans(feats, 0.02, iters=5, seed=0)
+    assert 1 <= len(idx) <= 0.03 * len(mean) + 2
+    # diversity: both clusters represented
+    assert (mean[idx] < 2.5).any() and (mean[idx] > 2.5).any()
+
+
+def test_grouped_percentages_weight_by_points(population):
+    """Percentages are per-point even when predictions run per-group."""
+    mean, std, labels, tree = population
+    a = smp.slice_features_from_moments(mean, std, tree, d.TYPES_4, group_first=False)
+    b = smp.slice_features_from_moments(
+        mean, std, tree, d.TYPES_4, group_first=True, group_tol=1e-6
+    )
+    np.testing.assert_allclose(a.type_percentage, b.type_percentage, atol=1e-9)
+
+
+def test_sample_indices_random_properties():
+    idx = smp.sample_indices_random(1000, 0.1, seed=1)
+    assert len(idx) == 100
+    assert len(np.unique(idx)) == 100
+    assert idx.min() >= 0 and idx.max() < 1000

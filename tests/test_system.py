@@ -1,0 +1,105 @@
+"""System-level behaviour tests: the paper's headline claims, end to end.
+
+These assert the *structural* versions of the paper's results (work
+reduction, error bounds, method orderings) — wall-clock assertions are kept
+coarse because the container CPU is shared.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core import ml_predict as mlp
+from repro.core.pipeline import PDFComputer, PDFConfig
+from repro.core.regions import CubeGeometry
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SeismicSimulation(
+        SimulationConfig(geometry=CubeGeometry(8, 12, 24), num_simulations=300)
+    )
+
+
+def _train_tree(sim, types):
+    from repro.core.pipeline import train_type_tree
+
+    return train_type_tree(sim, types=types)
+
+
+@pytest.fixture(scope="module")
+def tree(sim):
+    return _train_tree(sim, d.TYPES_4)
+
+
+def _fitted(res):
+    return sum(s.num_fitted for s in res.stats)
+
+
+def test_grouping_reduces_fit_work_without_extra_error(sim):
+    """Paper §6: 'Grouping outperforms Baseline ... without introducing
+    extra error' — work drops by the dedup factor, results identical."""
+    rb = PDFComputer(PDFConfig(window_lines=4, method="baseline"), sim).run_slice(3)
+    rg = PDFComputer(PDFConfig(window_lines=4, method="grouping"), sim).run_slice(3)
+    assert _fitted(rg) <= _fitted(rb) / 4, (_fitted(rg), _fitted(rb))
+    np.testing.assert_array_equal(rb.type_idx, rg.type_idx)
+    assert abs(rb.avg_error - rg.avg_error) < 1e-6
+
+
+def test_ml_small_error_penalty_10types(sim):
+    """Algorithm 4 runs ONE Eq.-5 pass instead of T=10; its extra error must
+    stay within the paper's observed band (<= 0.017 there; we allow 0.05)."""
+    tree10 = _train_tree(sim, d.TYPES_10)
+    rb = PDFComputer(
+        PDFConfig(window_lines=4, method="baseline", mode="faithful",
+                  types=d.TYPES_10), sim
+    ).run_slice(3)
+    rm = PDFComputer(
+        PDFConfig(window_lines=4, method="ml", mode="faithful",
+                  types=d.TYPES_10), sim, tree=tree10
+    ).run_slice(3)
+    assert _fitted(rm) == _fitted(rb)
+    assert rm.avg_error <= rb.avg_error + 0.05
+
+
+def test_grouping_ml_is_the_best_combination(sim, tree):
+    """Paper: Grouping+ML up to 33x vs baseline at small node counts. We
+    assert the structural version: it does the least total fit work."""
+    fits = {}
+    for method in ["baseline", "grouping", "ml", "grouping_ml"]:
+        comp = PDFComputer(
+            PDFConfig(window_lines=4, method=method), sim,
+            tree=tree if "ml" in method else None,
+        )
+        fits[method] = _fitted(comp.run_slice(3))
+    assert fits["grouping_ml"] <= fits["grouping"] <= fits["baseline"]
+    assert fits["grouping_ml"] < fits["baseline"] / 4
+
+
+def test_reuse_cache_carries_across_windows(sim):
+    comp = PDFComputer(PDFConfig(window_lines=3, method="reuse"), sim)
+    comp.run_slice(3)
+    assert comp.cache.hits > 0
+    assert comp.cache.hit_rate > 0.1, comp.cache.hit_rate
+
+
+def test_bounded_error_constraint_flags(sim):
+    ok = PDFComputer(
+        PDFConfig(window_lines=4, method="baseline", error_bound=1.9), sim
+    ).run_slice(1)
+    tight = PDFComputer(
+        PDFConfig(window_lines=4, method="baseline", error_bound=1e-6), sim
+    ).run_slice(1)
+    assert ok.error_bound_satisfied is True
+    assert tight.error_bound_satisfied is False
+
+
+def test_end_to_end_type_recovery(sim):
+    """The full pipeline recovers the generator's dominant distribution type
+    on most points of a slice (uncertainty quantification works)."""
+    for slice_i in range(4):
+        res = PDFComputer(PDFConfig(window_lines=4, method="grouping"), sim).run_slice(slice_i)
+        want = sim.true_type_index(slice_i)
+        frac = (res.type_idx == want).mean()
+        assert frac > 0.5, (slice_i, want, frac)
