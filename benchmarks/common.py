@@ -14,9 +14,13 @@ import numpy as np
 
 from repro.core import distributions as d
 from repro.core import ml_predict as mlp
-from repro.core.pipeline import PDFComputer, PDFConfig
+from repro.core.pipeline import ExecutorConfig, PDFComputer, PDFConfig
 from repro.core.regions import CubeGeometry
 from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+# the pre-refactor strictly serial loop (no prefetch, sync persist): the
+# reference path the staged executor's overlap is measured against
+SERIAL = ExecutorConfig(prefetch=False, async_persist=False)
 
 
 @dataclass
@@ -48,17 +52,22 @@ def train_type_tree(sim, types=d.TYPES_4, slices=(0, 1, 2, 3),
 
 
 def run_method(sim, method: str, types, window_lines: int, slice_i: int,
-               tree=None, mode: str = "faithful", warmup: bool = True):
+               tree=None, mode: str = "faithful", warmup: bool = True,
+               exec_config: ExecutorConfig | None = None):
+    """Runs one slice through the staged executor (default overlapped config;
+    pass ``exec_config=SERIAL`` for the reference serial path). Returns
+    (SliceResult, wall_seconds); per-stage totals are on
+    ``res`` stats / the computer's ``last_report``."""
     # rep_bucket sized for the reduced workloads (the default 256 would pad
     # grouped batches past the baseline's size on these small windows)
     cfg = PDFConfig(types=types, window_lines=window_lines, method=method,
                     mode=mode, rep_bucket=32)
     if warmup:
         # trigger jit compilation for this method's shapes on another slice
-        PDFComputer(cfg, sim, tree=tree).run_slice(
+        PDFComputer(cfg, sim, tree=tree, exec_config=exec_config).run_slice(
             (slice_i + 1) % sim.geometry.num_slices
         )
-    comp = PDFComputer(cfg, sim, tree=tree)
+    comp = PDFComputer(cfg, sim, tree=tree, exec_config=exec_config)
     t0 = time.perf_counter()
     res = comp.run_slice(slice_i)
     wall = time.perf_counter() - t0

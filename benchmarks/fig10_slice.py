@@ -1,13 +1,24 @@
 """Fig. 10 analog: one full slice with the tuned window size, every method.
 Paper (235 GB, Slice 201, window 25): Grouping ~10x, ML ~3x, Grouping+ML
-~27x over Baseline; Reuse+ML can trail Grouping+ML (search overhead)."""
+~27x over Baseline; Reuse+ML can trail Grouping+ML (search overhead).
+
+All methods run through the staged executor; the ``fig10/overlap/*`` rows
+compare the strictly serial reference path against the prefetching pipeline
+on the same workload — wall time must drop and the per-stage stats must
+show the load time hidden behind compute (wait << load)."""
 
 from __future__ import annotations
 
 from repro.core import distributions as d
-from benchmarks.common import Row, run_method, small_sim, train_type_tree
+from repro.data.loader import ThrottledSource
+from benchmarks.common import SERIAL, Row, run_method, small_sim, train_type_tree
 
 METHODS = ["baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml"]
+
+# Modeled NFS bandwidth for the overlap rows: windows of this reduced config
+# then cost roughly as much to load as to fit, the paper's regime (its
+# loading stage dominates the 235 GB baseline runs).
+NFS_BYTES_PER_S = 50e6
 
 
 def run(quick: bool = True):
@@ -29,4 +40,40 @@ def run(quick: bool = True):
                 f"fitted={sum(s.num_fitted for s in res.stats)}",
             )
         )
+
+    # -- executor overlap: serial reference vs prefetching pipeline ----------
+    # The paper's loading stage is NFS-bound (a large share of baseline wall
+    # time); the synthetic generator is far cheaper, so the overlap rows read
+    # through ThrottledSource at a modeled NFS bandwidth to reproduce the
+    # paper's load/compute ratio. Median-of-5 walls (shared-container
+    # jitter); per-stage stats from the median prefetch run show the device
+    # blocked on only ``wait`` of the ``load`` seconds the loader spent.
+    nfs = ThrottledSource(sim, NFS_BYTES_PER_S)
+
+    def median_run(exec_config):
+        runs = sorted(
+            (run_method(nfs, "baseline", d.TYPES_4, 8, 3, exec_config=exec_config,
+                        warmup=False) for _ in range(5)),
+            key=lambda rw: rw[1],
+        )
+        return runs[len(runs) // 2]
+
+    run_method(nfs, "baseline", d.TYPES_4, 8, 3)  # shared jit warmup
+    _, serial_wall = median_run(SERIAL)
+    pre_res, pre_wall = median_run(None)
+    hidden = max(0.0, pre_res.total_load_seconds - pre_res.total_wait_seconds)
+    rows.append(
+        Row("fig10/overlap/serial_wall", serial_wall * 1e6,
+            f"nfs_model={NFS_BYTES_PER_S / 1e6:.0f}MB/s")
+    )
+    rows.append(
+        Row(
+            "fig10/overlap/prefetch_wall",
+            pre_wall * 1e6,
+            f"speedup={serial_wall / max(pre_wall, 1e-9):.2f}x "
+            f"load={pre_res.total_load_seconds * 1e3:.1f}ms "
+            f"wait={pre_res.total_wait_seconds * 1e3:.1f}ms "
+            f"hidden={hidden / max(pre_res.total_load_seconds, 1e-9):.0%}",
+        )
+    )
     return rows

@@ -1,15 +1,21 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# and writes BENCH_pipeline.json (name -> us_per_call) so future PRs can
+# track the perf trajectory.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale observation counts")
     ap.add_argument("--only", default=None, help="substring filter on module name")
+    ap.add_argument("--json-out", default="BENCH_pipeline.json",
+                    help="where to write the name -> us_per_call map ('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -27,6 +33,7 @@ def main() -> None:
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
     ]
+    results: dict[str, float] = {}
     print("name,us_per_call,derived")
     for mod in modules:
         if args.only and args.only not in mod.__name__:
@@ -35,7 +42,22 @@ def main() -> None:
         rows = mod.run(quick=not args.full)
         for r in rows:
             print(r.csv())
+            results[r.name] = round(r.us_per_call, 1)
         print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+    if args.json_out and results:
+        # merge into any existing map so a --only run refreshes its rows
+        # without clobbering the other figures' tracked numbers
+        out_path = Path(args.json_out)
+        if out_path.exists():
+            try:
+                merged = json.loads(out_path.read_text())
+            except (json.JSONDecodeError, OSError):
+                merged = {}  # corrupt/truncated previous file: overwrite
+            merged.update(results)
+            results = merged
+        out_path.write_text(json.dumps(results, indent=1, sort_keys=True))
+        print(f"# wrote {args.json_out} ({len(results)} entries)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -70,9 +70,11 @@ def main():
         res = comp.run_slice(slice_i)
         c = res.total_compute_seconds
         base_time = c if method == "baseline" else base_time
+        rep = comp.last_report  # staged-executor per-stage totals
         print(f"[{method:12s}] compute {c:7.2f}s  speedup {base_time/max(c,1e-9):5.2f}x  "
               f"E={res.avg_error:.4f}  fitted {sum(s.num_fitted for s in res.stats)}"
               f"/{sim.geometry.points_per_slice}"
+              f"  load_hidden={rep.load_hidden_fraction:.0%}"
               + (f"  cache_hits={comp.cache.hits}" if method.startswith("reuse") else ""))
 
     # --- fault tolerance: crash after 2 windows, restart from watermark -----

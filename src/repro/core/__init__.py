@@ -1,19 +1,27 @@
 # The paper's primary contribution: parallel PDF computation on big spatial
 # data — distribution fitting (Algorithm 3/4), Eq.-5 error, grouping (§5.2),
 # reuse (§5.2.1), decision-tree ML prediction (§5.3), sampling (§5.4), and
-# the windowed pipeline (Algorithms 1-2) — all as fused JAX computations.
+# the windowed pipeline (Algorithms 1-2), run by a staged executor that
+# overlaps load / compute / persist (executor.py) — all as fused JAX
+# computations.
 from repro.core import distributions, fitting, grouping, ml_predict, pdf_error
-from repro.core import pipeline, regions, reuse, sampling
+from repro.core import executor, pipeline, regions, reuse, sampling
 from repro.core.distributions import TYPES_4, TYPES_10, Moments, moments_from_values
 from repro.core.fitting import FitResult, compute_pdf_and_error, compute_pdf_with_predicted_type
+from repro.core.executor import (
+    ExecutorConfig,
+    ExecutorReport,
+    StagedExecutor,
+)
 from repro.core.pipeline import PDFComputer, PDFConfig, SliceResult
-from repro.core.regions import CubeGeometry, Window, iter_windows
+from repro.core.regions import CubeGeometry, Plan, Window, WorkUnit, build_plan, iter_windows
 
 __all__ = [
     "TYPES_4", "TYPES_10", "Moments", "moments_from_values",
     "FitResult", "compute_pdf_and_error", "compute_pdf_with_predicted_type",
     "PDFComputer", "PDFConfig", "SliceResult",
-    "CubeGeometry", "Window", "iter_windows",
-    "distributions", "fitting", "grouping", "ml_predict", "pdf_error",
-    "pipeline", "regions", "reuse", "sampling",
+    "StagedExecutor", "ExecutorConfig", "ExecutorReport",
+    "CubeGeometry", "Window", "WorkUnit", "Plan", "build_plan", "iter_windows",
+    "distributions", "executor", "fitting", "grouping", "ml_predict",
+    "pdf_error", "pipeline", "regions", "reuse", "sampling",
 ]

@@ -1,0 +1,612 @@
+"""Staged PDF executor: load / compute / persist as decoupled stages.
+
+The paper's speedup is not only the per-point kernels — Spark overlaps data
+loading with computation and spreads slices across the cluster. This module
+is that layer for the JAX reproduction:
+
+  load stage     WindowPrefetcher (data/loader.py) pulls WorkUnits off the
+                 plan in order, loading window *k+1* from the data source
+                 and staging it host->device while the device is still
+                 fitting window *k* (device work, including the moments
+                 kernel, stays on the compute stage — see _StagedWindow).
+  compute stage  the main thread: Select (grouping / reuse / ML dispatch)
+                 on host + batched ComputePDF&Error on device — identical
+                 operations, in identical order, to the old serial loop, so
+                 results are bitwise-equal with prefetch on or off.
+  persist stage  a single writer thread appends per-window ``.npz``
+                 watermarks off the critical path; submission order is
+                 preserved so the watermark never runs ahead of a persisted
+                 window, and ``close()`` flushes before the executor
+                 returns (or re-raises), keeping the serial path's
+                 crash-consistency guarantee.
+
+Per-stage heartbeats feed ``runtime.monitor.StepMonitor`` instances (one per
+stage), so straggler flagging and stage medians come for free; the
+``ExecutorReport`` summarizes how much load time was hidden behind compute
+(``wait_seconds`` is the only part of the load the device actually blocked
+on).
+
+``PDFComputer`` (pipeline.py) is a thin facade over this executor; the
+multi-slice entry point is ``run`` on a ``regions.Plan``, which
+``runtime.scheduler`` uses for per-node slice assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributions as dists
+from repro.core import fitting
+from repro.core import grouping as grp
+from repro.core import ml_predict as mlp
+from repro.core import pdf_error as pe
+from repro.core import regions
+from repro.core.reuse import ReuseCache
+from repro.data.loader import WindowPrefetcher
+from repro.runtime.monitor import StepMonitor
+
+METHODS = ("baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml")
+
+# Tree features: scale-invariant moments (cv = sigma/|mu|, skew, excess
+# kurtosis). The paper uses (mu, sigma) and notes higher normalized moments
+# "may take additional time" — our fused moments kernel computes them in the
+# same pass, so they are free; scale-invariance makes the classifier
+# transfer across slices whose value scales differ (DESIGN.md §8).
+TREE_FEATURES = ("cv", "skew", "kurt")
+
+
+def tree_features(moments: dists.Moments):
+    cv = moments.std / jnp.maximum(jnp.abs(moments.mean), 1e-12)
+    return jnp.stack([cv, moments.skew, moments.kurt], axis=-1)
+
+
+def tree_features_np(mean, std, skew, kurt):
+    cv = std / np.maximum(np.abs(mean), 1e-12)
+    return np.stack([cv, skew, kurt], axis=-1).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class PDFConfig:
+    types: tuple[str, ...] = dists.TYPES_4
+    num_bins: int = 64
+    window_lines: int = 25
+    method: str = "baseline"
+    mode: str = "fused"  # 'faithful' reproduces the paper's per-type pass cost
+    group_tol: float = grp.DEFAULT_TOL
+    rep_bucket: int = 256  # padding bucket for representative batches
+    error_bound: float | None = None  # the paper's bounded-error constraint
+    use_kernels: bool = False  # route moments/histogram through Pallas ops
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}, got {self.method!r}")
+
+
+@dataclass(frozen=True)
+class ExecutorConfig:
+    """Staging knobs; ``prefetch=False, async_persist=False`` reproduces the
+    pre-executor strictly serial loop (the reference path for equivalence
+    tests and overlap benchmarks)."""
+
+    prefetch: bool = True
+    prefetch_depth: int = 2  # how many windows the load stage may run ahead
+    async_persist: bool = True
+
+    def __post_init__(self):
+        if self.prefetch_depth < 1:
+            raise ValueError(f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
+
+
+class WindowStats(NamedTuple):
+    window: regions.Window
+    num_points: int
+    num_fitted: int  # points actually sent through ComputePDF&Error
+    load_seconds: float
+    compute_seconds: float
+    cache_hits: int
+    wait_seconds: float = 0.0  # compute stage blocked waiting for this window
+
+
+@dataclass
+class SliceResult:
+    type_idx: np.ndarray  # (P,) int32
+    params: np.ndarray  # (P, 3)
+    error: np.ndarray  # (P,)
+    mean: np.ndarray  # (P,)
+    std: np.ndarray  # (P,)
+    skew: np.ndarray  # (P,)  (normalized 3rd moment — paper footnote 1)
+    kurt: np.ndarray  # (P,)  (excess kurtosis)
+    avg_error: float  # Eq. 6
+    stats: list[WindowStats] = field(default_factory=list)
+    error_bound_satisfied: bool | None = None
+
+    @property
+    def total_load_seconds(self) -> float:
+        return sum(s.load_seconds for s in self.stats)
+
+    @property
+    def total_compute_seconds(self) -> float:
+        return sum(s.compute_seconds for s in self.stats)
+
+    @property
+    def total_wait_seconds(self) -> float:
+        return sum(s.wait_seconds for s in self.stats)
+
+
+@dataclass(frozen=True)
+class ExecutorReport:
+    """Per-stage totals for one ``run``. ``wait_seconds`` is the time the
+    compute stage spent blocked on the load stage — with prefetch it should
+    be a small fraction of ``load_seconds`` (the rest was hidden behind
+    compute); serially the two are equal by construction."""
+
+    wall_seconds: float
+    units: int
+    load_seconds: float
+    wait_seconds: float
+    compute_seconds: float
+    persist_seconds: float
+
+    @property
+    def load_hidden_seconds(self) -> float:
+        return max(0.0, self.load_seconds - self.wait_seconds)
+
+    @property
+    def load_hidden_fraction(self) -> float:
+        return self.load_hidden_seconds / self.load_seconds if self.load_seconds > 0 else 0.0
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_fns(types: tuple, num_bins: int, mode: str, use_kernels: bool):
+    """Module-level jit cache: every executor with the same (types, bins,
+    mode, kernels) shares compiled executables — windows, slices and method
+    variants reuse them instead of recompiling per instance."""
+    mom = _moments_fn(use_kernels)
+    hist = _hist_fn(use_kernels)
+
+    @jax.jit
+    def moments_f(values):
+        return mom(values)
+
+    @jax.jit
+    def fit_all_f(values, moments):
+        r = fitting.compute_pdf_and_error(
+            values, moments, types, num_bins, mode=mode, histogram_fn=hist
+        )
+        return r.type_idx, r.params, r.error
+
+    @jax.jit
+    def fit_pred_f(values, moments, pred):
+        r = fitting.compute_pdf_with_predicted_type(
+            values, moments, pred, types, num_bins, histogram_fn=hist
+        )
+        return r.type_idx, r.params, r.error
+
+    return moments_f, fit_all_f, fit_pred_f
+
+
+def _moments_fn(use_kernels: bool):
+    if use_kernels:
+        from repro.kernels.moments import ops as mops
+
+        return mops.moments
+    return dists.moments_from_values
+
+
+def _hist_fn(use_kernels: bool):
+    if use_kernels:
+        from repro.kernels.hist import ops as hops
+
+        return hops.histogram
+    return pe.histogram
+
+
+class _StagedWindow(NamedTuple):
+    """Load-stage output: device-resident values, ready for the moments
+    kernel. Moments are deliberately NOT dispatched here: launching them
+    from the prefetch thread makes two XLA computations contend for the
+    device (a measurable slowdown on small CPU devices), while the kernel
+    itself is cheap relative to the fit — so it stays on the compute
+    stage's critical path, like every other device op."""
+
+    unit: regions.WorkUnit
+    values: jax.Array
+    load_seconds: float
+
+
+_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
+
+
+class PersistStage:
+    """Writes per-window ``.npz`` + watermark, optionally off-thread.
+
+    One writer thread drains a FIFO queue, so windows of a slice persist in
+    submission order and the watermark (``next_line``) is only advanced
+    after its window file is durable — exactly the serial path's restart
+    contract. ``flush()`` blocks until everything submitted is written;
+    the executor flushes before returning *and* before propagating any
+    compute-stage exception, so a crash loses at most the in-flight window.
+    """
+
+    def __init__(self, out_dir: str | Path | None, async_writes: bool = True,
+                 monitor: StepMonitor | None = None):
+        self.out_dir = Path(out_dir) if out_dir else None
+        self.monitor = monitor
+        self.seconds = 0.0
+        self.writes = 0
+        self._error: BaseException | None = None
+        self._async = bool(async_writes and self.out_dir is not None)
+        if self._async:
+            self._q: queue.Queue = queue.Queue()
+            self._thread = threading.Thread(
+                target=self._loop, name="window-persist", daemon=True
+            )
+            self._thread.start()
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, slice_i: int, w: regions.Window, arrays: dict[str, np.ndarray]):
+        """``arrays`` maps _FIELDS names to the window's result views; the
+        views stay valid because windows are disjoint and the output buffers
+        outlive the stage."""
+        if self.out_dir is None:
+            return
+        if self._async:
+            self._q.put((slice_i, w, arrays))
+        else:
+            self._write(slice_i, w, arrays)
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                if self._error is None:
+                    self._write(*item)
+            except BaseException as e:  # noqa: BLE001 — surfaced via flush()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, slice_i: int, w: regions.Window, arrays: dict[str, np.ndarray]):
+        uid = f"persist:s{slice_i}/l{w.line_start:05d}"
+        t0 = time.perf_counter()
+        if self.monitor is not None:
+            self.monitor.start(uid, now=t0)
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+        np.savez(
+            self.out_dir / f"slice{slice_i}_window_{w.line_start:05d}.npz",
+            line_start=w.line_start, line_end=w.line_end, **arrays,
+        )
+        (self.out_dir / f"slice{slice_i}_watermark.json").write_text(
+            json.dumps({"next_line": int(w.line_end)})
+        )
+        t1 = time.perf_counter()
+        if self.monitor is not None:
+            self.monitor.finish(uid, now=t1)
+        self.seconds += t1 - t0
+        self.writes += 1
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def flush(self):
+        if self._async:
+            self._q.join()
+
+    def raise_if_failed(self):
+        if self._error is not None:
+            raise RuntimeError("persist stage failed") from self._error
+
+    def close(self):
+        """Flush pending writes and stop the writer; never raises (call
+        ``raise_if_failed`` on the success path)."""
+        if self._async and self._thread.is_alive():
+            self._q.put(None)
+            self._q.join()
+            self._thread.join(timeout=5.0)
+
+    # -- watermark / restore (resume) -----------------------------------------
+
+    def watermark(self, slice_i: int) -> int:
+        if self.out_dir is None:
+            return 0
+        f = self.out_dir / f"slice{slice_i}_watermark.json"
+        if not f.exists():
+            return 0
+        return int(json.loads(f.read_text())["next_line"])
+
+    def restore_windows(self, slice_i: int, upto_line: int, ppl: int,
+                        outs: dict[str, np.ndarray]):
+        for f in sorted(self.out_dir.glob(f"slice{slice_i}_window_*.npz")):
+            z = np.load(f)
+            if int(z["line_end"]) <= upto_line:
+                lo, hi = int(z["line_start"]) * ppl, int(z["line_end"]) * ppl
+                for name in _FIELDS:
+                    outs[name][lo:hi] = z[name]
+
+
+class StagedExecutor:
+    """Drives Algorithms 1-2 over a Plan of (slice, window) work units.
+
+    ``data_source`` must expose ``geometry: regions.CubeGeometry`` and
+    ``load_window(window) -> np.ndarray (num_points, n_obs) float32``.
+    The reuse cache lives on the executor, so windows — and consecutive
+    slices of a multi-slice plan — share it exactly as consecutive
+    ``run_slice`` calls on one ``PDFComputer`` always have.
+    """
+
+    def __init__(
+        self,
+        config: PDFConfig,
+        data_source,
+        tree: mlp.DecisionTree | None = None,
+        out_dir: str | Path | None = None,
+        sharding: jax.sharding.Sharding | None = None,
+        exec_config: ExecutorConfig | None = None,
+    ):
+        self.config = config
+        self.data = data_source
+        self.tree = tree
+        self.out_dir = Path(out_dir) if out_dir else None
+        self.sharding = sharding
+        self.exec_config = exec_config or ExecutorConfig()
+        self.cache = ReuseCache()
+        if "ml" in config.method and tree is None:
+            raise ValueError(f"method {config.method!r} requires a decision tree")
+
+        self._moments, self._fit_all, self._fit_pred = _jitted_fns(
+            tuple(config.types), config.num_bins, config.mode, config.use_kernels
+        )
+        self._tree_arrays = tree.as_device() if tree else None
+        # One StepMonitor per stage: medians/straggler flags per stage, each
+        # touched by exactly one thread (load -> prefetch thread, compute ->
+        # caller thread, persist -> writer thread).
+        self.monitors = {
+            "load": StepMonitor(),
+            "compute": StepMonitor(),
+            "persist": StepMonitor(),
+        }
+        self.last_report: ExecutorReport | None = None
+
+    # -- load stage -----------------------------------------------------------
+
+    def _stage(self, values: np.ndarray) -> jax.Array:
+        arr = jnp.asarray(values, dtype=jnp.float32)
+        if self.sharding is not None:
+            arr = jax.device_put(arr, self.sharding)
+        return arr
+
+    def _load_unit(self, unit: regions.WorkUnit) -> _StagedWindow:
+        """Load + H2D-stage one window (host work only — device kernels stay
+        on the compute stage); runs on the prefetch thread when prefetch is
+        enabled."""
+        mon = self.monitors["load"]
+        t0 = time.perf_counter()
+        mon.start(unit.unit_id, now=t0)
+        raw = self.data.load_window(unit.window)  # (P, n_obs)
+        values = self._stage(raw)
+        t1 = time.perf_counter()
+        mon.finish(unit.unit_id, now=t1)
+        return _StagedWindow(unit, values, t1 - t0)
+
+    # -- compute stage: ComputePDF&Error dispatch per method -------------------
+
+    def _fit(self, values: jax.Array, moments: dists.Moments):
+        """Fit every row of ``values``; returns np arrays (type, params, err)."""
+        if self._tree_arrays is not None and "ml" in self.config.method:
+            feats = tree_features(moments)
+            pred = mlp.predict(self._tree_arrays, feats)
+            t, p, e = self._fit_pred(values, moments, pred)
+        else:
+            t, p, e = self._fit_all(values, moments)
+        return np.asarray(t), np.asarray(p), np.asarray(e)
+
+    def _select_and_fit(self, values: jax.Array, moments: dists.Moments):
+        """The Select step (§5.1/5.2): returns per-point results + bookkeeping."""
+        method = self.config.method
+        if method in ("baseline", "ml"):
+            t, p, e = self._fit(values, moments)
+            return t, p, e, values.shape[0], 0
+
+        # grouping / reuse variants: dedup on host, fit representatives only.
+        mean = np.asarray(moments.mean)
+        std = np.asarray(moments.std)
+        keys = np.stack(
+            [
+                np.round(mean / self.config.group_tol),
+                np.round(std / self.config.group_tol),
+            ],
+            axis=-1,
+        ).astype(np.int64)
+        groups = grp.group_host(keys)
+        rep_idx = groups.rep_indices
+        cache_hits = 0
+
+        if method.startswith("reuse"):
+            hit, cached = self.cache.lookup_window(keys[rep_idx])
+            cache_hits = int(hit.sum())
+            todo = rep_idx[~hit]
+        else:
+            hit = np.zeros((len(rep_idx),), dtype=bool)
+            cached = np.zeros((len(rep_idx), 5))
+            todo = rep_idx
+
+        rep_t = np.zeros((len(rep_idx),), dtype=np.int32)
+        rep_p = np.zeros((len(rep_idx), 3), dtype=np.float32)
+        rep_e = np.zeros((len(rep_idx),), dtype=np.float32)
+        rep_t[hit] = cached[hit, 0].astype(np.int32)
+        rep_p[hit] = cached[hit, 1:4]
+        rep_e[hit] = cached[hit, 4]
+
+        if len(todo):
+            padded = grp.pad_representatives(todo, self.config.rep_bucket)
+            sub_vals = values[jnp.asarray(padded)]
+            sub_mom = dists.Moments(*(jnp.asarray(np.asarray(f)[padded]) for f in moments))
+            t, p, e = self._fit(sub_vals, sub_mom)  # dispatches ML per method
+            t, p, e = t[: len(todo)], p[: len(todo)], e[: len(todo)]
+            rep_t[~hit], rep_p[~hit], rep_e[~hit] = t, p, e
+            if method.startswith("reuse"):
+                self.cache.insert_window(
+                    keys[todo],
+                    np.concatenate(
+                        [t[:, None], p, e[:, None]], axis=-1
+                    ).astype(np.float64),
+                )
+
+        inv = groups.inverse
+        return rep_t[inv], rep_p[inv], rep_e[inv], len(todo), cache_hits
+
+    # -- run (Algorithm 1 over a Plan) -----------------------------------------
+
+    def run(
+        self,
+        plan: regions.Plan,
+        resume: bool = False,
+        on_window: Callable[[WindowStats], None] | None = None,
+    ) -> dict[int, SliceResult]:
+        """Execute every unit of ``plan``; returns one SliceResult per slice.
+
+        Pass the *full* plan even when resuming — completed windows are
+        filtered against each slice's watermark here and their results
+        restored from the persisted ``.npz`` files.
+        """
+        geom = self.data.geometry
+        ppl = geom.points_per_line
+        total = geom.points_per_slice
+        requested = plan.slices
+
+        persist = PersistStage(
+            self.out_dir,
+            async_writes=self.exec_config.async_persist,
+            monitor=self.monitors["persist"],
+        )
+
+        outs = {
+            s: {
+                "type_idx": np.zeros((total,), dtype=np.int32),
+                "params": np.zeros((total, 3), dtype=np.float32),
+                "error": np.zeros((total,), dtype=np.float32),
+                "mean": np.zeros((total,), dtype=np.float32),
+                "std": np.zeros((total,), dtype=np.float32),
+                "skew": np.zeros((total,), dtype=np.float32),
+                "kurt": np.zeros((total,), dtype=np.float32),
+            }
+            for s in requested
+        }
+        stats: dict[int, list[WindowStats]] = {s: [] for s in requested}
+
+        units = list(plan.units)
+        if resume and self.out_dir is not None:
+            marks = {s: persist.watermark(s) for s in requested}
+            for s, mark in marks.items():
+                if mark > 0:
+                    persist.restore_windows(s, mark, ppl, outs[s])
+            units = [u for u in units if u.window.line_start >= marks[u.window.slice_i]]
+
+        load_total = wait_total = compute_total = 0.0
+        wall0 = time.perf_counter()
+        prefetcher = None
+        if self.exec_config.prefetch and units:
+            prefetcher = WindowPrefetcher(
+                units, self._load_unit, depth=self.exec_config.prefetch_depth
+            )
+            stream = iter(prefetcher)
+        else:
+            stream = (self._load_unit(u) for u in units)
+
+        cmon = self.monitors["compute"]
+        try:
+            while True:
+                w0 = time.perf_counter()
+                item = next(stream, None)
+                if item is None:
+                    break
+                # wait_s: the only load-stage time the device was blocked on
+                # (serial mode does the whole load inline here, so wait ==
+                # load by construction; with prefetch it is the shortfall).
+                wait_s = time.perf_counter() - w0
+                moments = jax.block_until_ready(self._moments(item.values))
+                t1 = time.perf_counter()
+
+                w = item.unit.window
+                cmon.start(item.unit.unit_id, now=t1)
+                t, p, e, fitted, hits = self._select_and_fit(
+                    item.values, dists.Moments(*moments)
+                )
+                t2 = time.perf_counter()
+                cmon.finish(item.unit.unit_id, now=t2)
+
+                o = outs[w.slice_i]
+                lo, hi = w.line_start * ppl, w.line_end * ppl
+                o["type_idx"][lo:hi], o["params"][lo:hi], o["error"][lo:hi] = t, p, e
+                o["mean"][lo:hi] = np.asarray(moments[0])
+                o["std"][lo:hi] = np.sqrt(np.maximum(np.asarray(moments[1]), 0))
+                o["skew"][lo:hi] = np.asarray(moments[2])
+                o["kurt"][lo:hi] = np.asarray(moments[3])
+
+                ws = WindowStats(w, hi - lo, fitted, item.load_seconds,
+                                 t2 - t1, hits, wait_s)
+                stats[w.slice_i].append(ws)
+                load_total += item.load_seconds
+                wait_total += wait_s
+                compute_total += t2 - t1
+
+                persist.submit(
+                    w.slice_i, w, {name: o[name][lo:hi] for name in _FIELDS}
+                )
+                if on_window:
+                    on_window(ws)
+        finally:
+            if prefetcher is not None:
+                prefetcher.close()
+            persist.close()  # flushes: the watermark is durable before any re-raise
+
+        persist.raise_if_failed()
+        wall = time.perf_counter() - wall0
+        self.last_report = ExecutorReport(
+            wall_seconds=wall,
+            units=sum(len(v) for v in stats.values()),
+            load_seconds=load_total,
+            wait_seconds=wait_total,
+            compute_seconds=compute_total,
+            persist_seconds=persist.seconds,
+        )
+
+        results: dict[int, SliceResult] = {}
+        for s in requested:
+            o = outs[s]
+            avg_err = float(o["error"].mean())
+            r = SliceResult(o["type_idx"], o["params"], o["error"], o["mean"],
+                            o["std"], o["skew"], o["kurt"], avg_err, stats[s])
+            if self.config.error_bound is not None:
+                r.error_bound_satisfied = avg_err <= self.config.error_bound
+            results[s] = r
+        return results
+
+    def run_slice(
+        self,
+        slice_i: int,
+        resume: bool = False,
+        on_window: Callable[[WindowStats], None] | None = None,
+    ) -> SliceResult:
+        plan = regions.build_plan(
+            self.data.geometry, [slice_i], self.config.window_lines
+        )
+        return self.run(plan, resume=resume, on_window=on_window)[slice_i]
+
+    # -- resume helpers (also used by the PDFComputer facade) ------------------
+
+    def watermark(self, slice_i: int) -> int:
+        return PersistStage(self.out_dir, async_writes=False).watermark(slice_i)

@@ -114,8 +114,9 @@ def group_device_global(keys: jax.Array, axis_names: tuple[str, ...]) -> DeviceG
     shard_index = 0
     total = 1
     for ax in axis_names:
-        shard_index = shard_index * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        total *= jax.lax.axis_size(ax)
+        size = jax.lax.psum(1, ax)  # axis size (jax.lax.axis_size is newer jax)
+        shard_index = shard_index * size + jax.lax.axis_index(ax)
+        total *= size
     p_local = keys.shape[0]
     start = shard_index * p_local
     local_rep = jax.lax.dynamic_slice_in_dim(groups.rep_for_point, start, p_local)

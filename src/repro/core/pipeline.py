@@ -1,16 +1,15 @@
-"""Algorithms 1-2: the windowed PDF-computation pipeline.
+"""Algorithms 1-2: the windowed PDF-computation pipeline (facade).
 
-Orchestration mirrors the paper exactly:
-
-  data loading  (Algorithm 2)  -> per-window host->device staging + moments
-  Select        (per method)   -> grouping / reuse-cache filtering on host
-  ComputePDF&Error (Alg. 3/4)  -> batched fit on device (all types or
-                                  tree-predicted type)
-  persist + Eq. 6 average      -> per-window npz watermark (restartable)
-
-Methods (§5/§6 naming): ``baseline``, ``grouping``, ``reuse``, ``ml``
-(= baseline+ML), ``grouping_ml``, ``reuse_ml``. Sampling (Algorithm 5) lives
-in sampling.py since it computes slice features, not per-point PDFs.
+The actual machinery lives in ``core/executor.py``: a staged executor that
+decouples data loading (Algorithm 2, prefetched window *k+1* while the
+device fits window *k*), Select + ComputePDF&Error (Alg. 3/4, per-method
+dispatch), and persistence (async ``.npz`` watermarks off the critical
+path) over a schedulable queue of (slice, window) WorkUnits
+(``core/regions.py``). ``PDFComputer`` here is a thin facade over one
+``StagedExecutor`` so every method (§5/§6 naming: ``baseline``,
+``grouping``, ``reuse``, ``ml``, ``grouping_ml``, ``reuse_ml``) and the
+sampling path run through one pipeline; ``runtime/scheduler.py`` shards
+whole slices across the mesh data axis on top of the same executor.
 
 Fault tolerance: after each window the per-window results are persisted as
 ``window_NNNN.npz`` plus a watermark; ``run_slice`` with ``resume=True``
@@ -20,145 +19,46 @@ skips completed windows — a restart after a crash re-does at most one window
 
 from __future__ import annotations
 
-import json
-import time
-from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, NamedTuple, Sequence
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributions as dists
-from repro.core import fitting
-from repro.core import grouping as grp
 from repro.core import ml_predict as mlp
-from repro.core import pdf_error as pe
+from repro.core import distributions as dists
 from repro.core import regions
-from repro.core.reuse import ReuseCache
 
-METHODS = ("baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml")
+# Re-exported so existing imports (tests, benchmarks, examples) keep working;
+# the definitions moved to core/executor.py with the staged-executor refactor.
+from repro.core.executor import (  # noqa: F401
+    METHODS,
+    TREE_FEATURES,
+    ExecutorConfig,
+    ExecutorReport,
+    PDFConfig,
+    SliceResult,
+    StagedExecutor,
+    WindowStats,
+    tree_features,
+    tree_features_np,
+)
 
-# Tree features: scale-invariant moments (cv = sigma/|mu|, skew, excess
-# kurtosis). The paper uses (mu, sigma) and notes higher normalized moments
-# "may take additional time" — our fused moments kernel computes them in the
-# same pass, so they are free; scale-invariance makes the classifier
-# transfer across slices whose value scales differ (DESIGN.md §8).
-TREE_FEATURES = ("cv", "skew", "kurt")
-
-
-def tree_features(moments: dists.Moments):
-    cv = moments.std / jnp.maximum(jnp.abs(moments.mean), 1e-12)
-    return jnp.stack([cv, moments.skew, moments.kurt], axis=-1)
-
-
-def tree_features_np(mean, std, skew, kurt):
-    cv = std / np.maximum(np.abs(mean), 1e-12)
-    return np.stack([cv, skew, kurt], axis=-1).astype(np.float32)
-
-
-@dataclass(frozen=True)
-class PDFConfig:
-    types: tuple[str, ...] = dists.TYPES_4
-    num_bins: int = 64
-    window_lines: int = 25
-    method: str = "baseline"
-    mode: str = "fused"  # 'faithful' reproduces the paper's per-type pass cost
-    group_tol: float = grp.DEFAULT_TOL
-    rep_bucket: int = 256  # padding bucket for representative batches
-    error_bound: float | None = None  # the paper's bounded-error constraint
-    use_kernels: bool = False  # route moments/histogram through Pallas ops
-
-    def __post_init__(self):
-        if self.method not in METHODS:
-            raise ValueError(f"method must be one of {METHODS}, got {self.method!r}")
-
-
-class WindowStats(NamedTuple):
-    window: regions.Window
-    num_points: int
-    num_fitted: int  # points actually sent through ComputePDF&Error
-    load_seconds: float
-    compute_seconds: float
-    cache_hits: int
-
-
-@dataclass
-class SliceResult:
-    type_idx: np.ndarray  # (P,) int32
-    params: np.ndarray  # (P, 3)
-    error: np.ndarray  # (P,)
-    mean: np.ndarray  # (P,)
-    std: np.ndarray  # (P,)
-    skew: np.ndarray  # (P,)  (normalized 3rd moment — paper footnote 1)
-    kurt: np.ndarray  # (P,)  (excess kurtosis)
-    avg_error: float  # Eq. 6
-    stats: list[WindowStats] = field(default_factory=list)
-    error_bound_satisfied: bool | None = None
-
-    @property
-    def total_load_seconds(self) -> float:
-        return sum(s.load_seconds for s in self.stats)
-
-    @property
-    def total_compute_seconds(self) -> float:
-        return sum(s.compute_seconds for s in self.stats)
-
-
-import functools
-
-
-@functools.lru_cache(maxsize=64)
-def _jitted_fns(types: tuple, num_bins: int, mode: str, use_kernels: bool):
-    """Module-level jit cache: every PDFComputer with the same (types, bins,
-    mode, kernels) shares compiled executables — windows, slices and method
-    variants reuse them instead of recompiling per instance."""
-    mom = _moments_fn(use_kernels)
-    hist = _hist_fn(use_kernels)
-
-    @jax.jit
-    def moments_f(values):
-        return mom(values)
-
-    @jax.jit
-    def fit_all_f(values, moments):
-        r = fitting.compute_pdf_and_error(
-            values, moments, types, num_bins, mode=mode, histogram_fn=hist
-        )
-        return r.type_idx, r.params, r.error
-
-    @jax.jit
-    def fit_pred_f(values, moments, pred):
-        r = fitting.compute_pdf_with_predicted_type(
-            values, moments, pred, types, num_bins, histogram_fn=hist
-        )
-        return r.type_idx, r.params, r.error
-
-    return moments_f, fit_all_f, fit_pred_f
-
-
-def _moments_fn(use_kernels: bool):
-    if use_kernels:
-        from repro.kernels.moments import ops as mops
-
-        return mops.moments
-    return dists.moments_from_values
-
-
-def _hist_fn(use_kernels: bool):
-    if use_kernels:
-        from repro.kernels.hist import ops as hops
-
-        return hops.histogram
-    return pe.histogram
+__all__ = [
+    "METHODS", "TREE_FEATURES", "ExecutorConfig", "ExecutorReport",
+    "PDFConfig", "PDFComputer", "SliceResult", "StagedExecutor",
+    "WindowStats", "tree_features", "tree_features_np", "train_type_tree",
+]
 
 
 class PDFComputer:
-    """Drives Algorithms 1-2 over a slice for a given data source.
+    """Thin facade over :class:`repro.core.executor.StagedExecutor`.
 
-    ``data_source`` must expose ``geometry: regions.CubeGeometry`` and
-    ``load_window(window) -> np.ndarray (num_points, n_obs) float32``.
+    Keeps the historical construction/`run_slice` surface; ``exec_config``
+    selects staging behaviour (prefetch depth, async persist) and defaults
+    to the overlapped pipeline. ``data_source`` must expose ``geometry:
+    regions.CubeGeometry`` and ``load_window(window) -> np.ndarray
+    (num_points, n_obs) float32``.
     """
 
     def __init__(
@@ -168,97 +68,32 @@ class PDFComputer:
         tree: mlp.DecisionTree | None = None,
         out_dir: str | Path | None = None,
         sharding: jax.sharding.Sharding | None = None,
+        exec_config: ExecutorConfig | None = None,
     ):
         self.config = config
         self.data = data_source
         self.tree = tree
         self.out_dir = Path(out_dir) if out_dir else None
         self.sharding = sharding
-        self.cache = ReuseCache()
-        if "ml" in config.method and tree is None:
-            raise ValueError(f"method {config.method!r} requires a decision tree")
-
-        self._moments, self._fit_all, self._fit_pred = _jitted_fns(
-            tuple(config.types), config.num_bins, config.mode, config.use_kernels
+        self._executor = StagedExecutor(
+            config, data_source, tree=tree, out_dir=out_dir,
+            sharding=sharding, exec_config=exec_config,
         )
-        self._tree_arrays = tree.as_device() if tree else None
 
-    # -- staging ------------------------------------------------------------
+    @property
+    def executor(self) -> StagedExecutor:
+        return self._executor
 
-    def _stage(self, values: np.ndarray) -> jax.Array:
-        arr = jnp.asarray(values, dtype=jnp.float32)
-        if self.sharding is not None:
-            arr = jax.device_put(arr, self.sharding)
-        return arr
+    @property
+    def cache(self):
+        """The reuse cache (§5.2.1) — lives on the executor so it spans
+        windows and consecutive slices, as it always has."""
+        return self._executor.cache
 
-    # -- ComputePDF&Error dispatch per method --------------------------------
-
-    def _fit(self, values: jax.Array, moments: dists.Moments):
-        """Fit every row of ``values``; returns np arrays (type, params, err)."""
-        if self._tree_arrays is not None and "ml" in self.config.method:
-            feats = tree_features(moments)
-            pred = mlp.predict(self._tree_arrays, feats)
-            t, p, e = self._fit_pred(values, moments, pred)
-        else:
-            t, p, e = self._fit_all(values, moments)
-        return np.asarray(t), np.asarray(p), np.asarray(e)
-
-    def _select_and_fit(self, values: jax.Array, moments: dists.Moments):
-        """The Select step (§5.1/5.2): returns per-point results + bookkeeping."""
-        method = self.config.method
-        if method in ("baseline", "ml"):
-            t, p, e = self._fit(values, moments)
-            return t, p, e, values.shape[0], 0
-
-        # grouping / reuse variants: dedup on host, fit representatives only.
-        mean = np.asarray(moments.mean)
-        std = np.asarray(moments.std)
-        keys = np.stack(
-            [
-                np.round(mean / self.config.group_tol),
-                np.round(std / self.config.group_tol),
-            ],
-            axis=-1,
-        ).astype(np.int64)
-        groups = grp.group_host(keys)
-        rep_idx = groups.rep_indices
-        cache_hits = 0
-
-        if method.startswith("reuse"):
-            hit, cached = self.cache.lookup_window(keys[rep_idx])
-            cache_hits = int(hit.sum())
-            todo = rep_idx[~hit]
-        else:
-            hit = np.zeros((len(rep_idx),), dtype=bool)
-            cached = np.zeros((len(rep_idx), 5))
-            todo = rep_idx
-
-        rep_t = np.zeros((len(rep_idx),), dtype=np.int32)
-        rep_p = np.zeros((len(rep_idx), 3), dtype=np.float32)
-        rep_e = np.zeros((len(rep_idx),), dtype=np.float32)
-        rep_t[hit] = cached[hit, 0].astype(np.int32)
-        rep_p[hit] = cached[hit, 1:4]
-        rep_e[hit] = cached[hit, 4]
-
-        if len(todo):
-            padded = grp.pad_representatives(todo, self.config.rep_bucket)
-            sub_vals = values[jnp.asarray(padded)]
-            sub_mom = dists.Moments(*(jnp.asarray(np.asarray(f)[padded]) for f in moments))
-            t, p, e = self._fit(sub_vals, sub_mom)  # dispatches ML per method
-            t, p, e = t[: len(todo)], p[: len(todo)], e[: len(todo)]
-            rep_t[~hit], rep_p[~hit], rep_e[~hit] = t, p, e
-            if method.startswith("reuse"):
-                self.cache.insert_window(
-                    keys[todo],
-                    np.concatenate(
-                        [t[:, None], p, e[:, None]], axis=-1
-                    ).astype(np.float64),
-                )
-
-        inv = groups.inverse
-        return rep_t[inv], rep_p[inv], rep_e[inv], len(todo), cache_hits
-
-    # -- main loop (Algorithm 1) ---------------------------------------------
+    @property
+    def last_report(self) -> ExecutorReport | None:
+        """Per-stage totals of the most recent run (overlap evidence)."""
+        return self._executor.last_report
 
     def run_slice(
         self,
@@ -266,91 +101,25 @@ class PDFComputer:
         resume: bool = False,
         on_window: Callable[[WindowStats], None] | None = None,
     ) -> SliceResult:
-        geom = self.data.geometry
-        ppl = geom.points_per_line
-        total = geom.points_per_slice
-        out_t = np.zeros((total,), dtype=np.int32)
-        out_p = np.zeros((total, 3), dtype=np.float32)
-        out_e = np.zeros((total,), dtype=np.float32)
-        out_mu = np.zeros((total,), dtype=np.float32)
-        out_sig = np.zeros((total,), dtype=np.float32)
-        out_sk = np.zeros((total,), dtype=np.float32)
-        out_ku = np.zeros((total,), dtype=np.float32)
-        stats: list[WindowStats] = []
+        return self._executor.run_slice(slice_i, resume=resume, on_window=on_window)
 
-        start_line = self._watermark(slice_i) if resume else 0
-        if resume and start_line > 0:
-            self._restore_windows(
-                slice_i, start_line, out_t, out_p, out_e, out_mu, out_sig, out_sk, out_ku
-            )
-
-        for w in regions.iter_windows(geom, slice_i, self.config.window_lines, start_line):
-            t0 = time.perf_counter()
-            raw = self.data.load_window(w)  # (P, n_obs)
-            values = self._stage(raw)
-            moments = jax.block_until_ready(self._moments(values))
-            t1 = time.perf_counter()
-
-            t, p, e, fitted, hits = self._select_and_fit(values, dists.Moments(*moments))
-            t2 = time.perf_counter()
-
-            lo, hi = w.line_start * ppl, w.line_end * ppl
-            out_t[lo:hi], out_p[lo:hi], out_e[lo:hi] = t, p, e
-            out_mu[lo:hi] = np.asarray(moments[0])
-            out_sig[lo:hi] = np.sqrt(np.maximum(np.asarray(moments[1]), 0))
-            out_sk[lo:hi] = np.asarray(moments[2])
-            out_ku[lo:hi] = np.asarray(moments[3])
-            ws = WindowStats(w, hi - lo, fitted, t1 - t0, t2 - t1, hits)
-            stats.append(ws)
-            self._persist_window(slice_i, w, out_t[lo:hi], out_p[lo:hi], out_e[lo:hi],
-                                 out_mu[lo:hi], out_sig[lo:hi], out_sk[lo:hi], out_ku[lo:hi])
-            if on_window:
-                on_window(ws)
-
-        avg_err = float(out_e.mean())
-        result = SliceResult(out_t, out_p, out_e, out_mu, out_sig, out_sk, out_ku,
-                             avg_err, stats)
-        if self.config.error_bound is not None:
-            result.error_bound_satisfied = avg_err <= self.config.error_bound
-        return result
-
-    # -- persistence / watermark ----------------------------------------------
-
-    def _persist_window(self, slice_i, w, t, p, e, mu, sig, sk, ku) -> None:
-        if self.out_dir is None:
-            return
-        self.out_dir.mkdir(parents=True, exist_ok=True)
-        np.savez(
-            self.out_dir / f"slice{slice_i}_window_{w.line_start:05d}.npz",
-            type_idx=t, params=p, error=e, mean=mu, std=sig, skew=sk, kurt=ku,
-            line_start=w.line_start, line_end=w.line_end,
+    def run(
+        self,
+        slices,
+        resume: bool = False,
+        on_window: Callable[[WindowStats], None] | None = None,
+    ) -> dict[int, SliceResult]:
+        """Multi-slice entry point: one plan spanning ``slices`` (processed
+        slice-major, sharing the reuse cache across slices)."""
+        plan = regions.build_plan(
+            self.data.geometry, list(slices), self.config.window_lines
         )
-        (self.out_dir / f"slice{slice_i}_watermark.json").write_text(
-            json.dumps({"next_line": int(w.line_end)})
-        )
+        return self._executor.run(plan, resume=resume, on_window=on_window)
+
+    # -- back-compat helpers ---------------------------------------------------
 
     def _watermark(self, slice_i: int) -> int:
-        if self.out_dir is None:
-            return 0
-        f = self.out_dir / f"slice{slice_i}_watermark.json"
-        if not f.exists():
-            return 0
-        return int(json.loads(f.read_text())["next_line"])
-
-    def _restore_windows(self, slice_i, upto_line, out_t, out_p, out_e, out_mu,
-                         out_sig, out_sk, out_ku):
-        ppl = self.data.geometry.points_per_line
-        for f in sorted(self.out_dir.glob(f"slice{slice_i}_window_*.npz")):
-            z = np.load(f)
-            if int(z["line_end"]) <= upto_line:
-                lo, hi = int(z["line_start"]) * ppl, int(z["line_end"]) * ppl
-                out_t[lo:hi] = z["type_idx"]
-                out_p[lo:hi] = z["params"]
-                out_e[lo:hi] = z["error"]
-                out_mu[lo:hi] = z["mean"]
-                out_sig[lo:hi] = z["std"]
-                out_sk[lo:hi] = z["skew"]
-                out_ku[lo:hi] = z["kurt"]
+        return self._executor.watermark(slice_i)
 
 
 def train_type_tree(

@@ -37,6 +37,28 @@ def sample_indices_random(
     return np.sort(rng.choice(num_points, size=k, replace=False))
 
 
+def _assign_chunked(
+    features: np.ndarray, centers: np.ndarray, scratch_floats: int = 1 << 22
+) -> tuple[np.ndarray, np.ndarray]:
+    """Nearest-centroid assignment without materializing the (P, k) distance
+    matrix: points are processed in chunks sized so the scratch — including
+    the (chunk, k, n_features) broadcast temp — stays at ~``scratch_floats``
+    floats regardless of P (at paper-scale P and k = rate*P the full matrix
+    would be hundreds of GB). Returns the assignment and each point's
+    squared distance to its own centroid."""
+    p, k = len(features), len(centers)
+    chunk = max(1, scratch_floats // max(k * features.shape[-1], 1))
+    assign = np.empty(p, dtype=np.int64)
+    d2_own = np.empty(p, dtype=np.float64)
+    for lo in range(0, p, chunk):
+        block = features[lo : lo + chunk]
+        d2 = ((block[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        a = d2.argmin(axis=1)
+        assign[lo : lo + chunk] = a
+        d2_own[lo : lo + chunk] = d2[np.arange(len(block)), a]
+    return assign, d2_own
+
+
 def sample_indices_kmeans(
     features: np.ndarray, rate: float, iters: int = 10, seed: int = 0
 ) -> np.ndarray:
@@ -45,22 +67,22 @@ def sample_indices_kmeans(
     rng = np.random.default_rng(seed)
     p = len(features)
     k = max(1, int(round(p * rate)))
-    centers = features[rng.choice(p, size=k, replace=False)]
+    centers = features[rng.choice(p, size=k, replace=False)].astype(np.float64)
     for _ in range(iters):
-        d2 = ((features[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
-        assign = d2.argmin(axis=1)
-        for c in range(k):
-            members = features[assign == c]
-            if len(members):
-                centers[c] = members.mean(axis=0)
-    d2 = ((features[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
-    assign = d2.argmin(axis=1)
-    chosen = []
-    for c in range(k):
-        member_idx = np.nonzero(assign == c)[0]
-        if len(member_idx):
-            chosen.append(member_idx[d2[member_idx, c].argmin()])
-    return np.sort(np.unique(np.asarray(chosen, dtype=np.int64)))
+        assign, _ = _assign_chunked(features, centers)
+        sums = np.zeros_like(centers)
+        np.add.at(sums, assign, features)
+        counts = np.bincount(assign, minlength=k)
+        occupied = counts > 0
+        centers[occupied] = sums[occupied] / counts[occupied, None]
+    assign, d2_own = _assign_chunked(features, centers)
+    # closest member per occupied cluster: stable sort by (cluster, distance)
+    # puts each cluster's argmin first in its run (ties keep original order,
+    # matching argmin semantics).
+    order = np.lexsort((d2_own, assign))
+    first = np.ones(len(order), dtype=bool)
+    first[1:] = assign[order[1:]] != assign[order[:-1]]
+    return np.sort(np.unique(order[first].astype(np.int64)))
 
 
 def slice_features_from_moments(

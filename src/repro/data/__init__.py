@@ -1,5 +1,15 @@
 from repro.data.simulation import SeismicSimulation, SimulationConfig
-from repro.data.loader import ArrayDataSource
+from repro.data.loader import (
+    ArrayDataSource,
+    PrefetchError,
+    ShardedStager,
+    ThrottledSource,
+    WindowPrefetcher,
+)
 from repro.data.tokens import TokenPipeline
 
-__all__ = ["SeismicSimulation", "SimulationConfig", "ArrayDataSource", "TokenPipeline"]
+__all__ = [
+    "SeismicSimulation", "SimulationConfig", "ArrayDataSource",
+    "ShardedStager", "ThrottledSource", "WindowPrefetcher", "PrefetchError",
+    "TokenPipeline",
+]

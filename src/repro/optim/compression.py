@@ -40,5 +40,5 @@ def pod_allreduce_compressed(x: jax.Array, axis_name: str) -> jax.Array:
     # Rescale local int8 into the shared grid (still small ints), sum in f32.
     rescaled = q.astype(jnp.float32) * (scale / max_scale)
     total = jax.lax.psum(rescaled, axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = jax.lax.psum(1, axis_name)  # axis size (jax.lax.axis_size is newer jax)
     return (total * max_scale / n).astype(x.dtype)

@@ -1,4 +1,13 @@
 from repro.runtime.monitor import StepMonitor, StragglerPolicy
 from repro.runtime.elastic import ElasticPlan, plan_remesh
+from repro.runtime.scheduler import (
+    ShardAssignment,
+    SliceScheduler,
+    assign_slices,
+    mesh_num_shards,
+)
 
-__all__ = ["StepMonitor", "StragglerPolicy", "ElasticPlan", "plan_remesh"]
+__all__ = [
+    "StepMonitor", "StragglerPolicy", "ElasticPlan", "plan_remesh",
+    "ShardAssignment", "SliceScheduler", "assign_slices", "mesh_num_shards",
+]

@@ -1,0 +1,135 @@
+"""Slice-level scheduling across the mesh data axis (paper §4/§6).
+
+The paper assigns each Spark worker *whole slices* — windows of one slice
+stay on one node so the reuse cache and the resume watermark remain local.
+``assign_slices`` reproduces that: slices are dealt round-robin over the
+shards of the mesh data axis (balanced to within one slice), and each shard
+runs its own ``regions.Plan`` through a ``core.executor.StagedExecutor``.
+
+In this single-process repo the shards execute in turn (or a single
+``shard`` — "this node's" assignment — runs alone, which is what
+``launch/run_pdf.py`` does per process); per-shard wall clocks and
+per-window durations feed ``StepMonitor`` instances so straggler flagging
+(runtime/monitor.py) works at both granularities.
+
+This module deliberately does not import the executor: any object with
+``data.geometry``, ``config.window_lines`` and ``run(plan, resume=...,
+on_window=...)`` schedules fine, which also keeps the import graph acyclic
+(core.executor already depends on runtime.monitor).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Mapping, Sequence
+
+from repro.core import regions
+from repro.runtime.monitor import StepMonitor, StragglerPolicy
+
+
+@dataclass(frozen=True)
+class ShardAssignment:
+    shard: int
+    slices: tuple[int, ...]
+
+
+def assign_slices(slices: Sequence[int], num_shards: int) -> tuple[ShardAssignment, ...]:
+    """Deal ``slices`` round-robin over ``num_shards`` (balanced within 1;
+    preserves the given slice order within each shard)."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return tuple(
+        ShardAssignment(i, tuple(slices[i::num_shards])) for i in range(num_shards)
+    )
+
+
+def mesh_num_shards(mesh, axis: str = "data") -> int:
+    """Shard count = size of the mesh's data axis (per-node slice assignment
+    maps onto the axis the loader already shards points over)."""
+    return int(mesh.shape[axis])
+
+
+class SliceScheduler:
+    """Runs per-shard slice plans and monitors them.
+
+    ``num_shards`` may be given directly or derived from a mesh's data
+    axis. ``shard_monitor`` times whole shard runs with the real clock (so
+    ``check_stragglers`` can flag a hung shard from another thread);
+    ``window_monitor`` accumulates per-window durations reported by the
+    executors (medians across shards — the trailing distribution that
+    re-dispatch decisions use).
+    """
+
+    def __init__(
+        self,
+        num_shards: int | None = None,
+        mesh=None,
+        axis: str = "data",
+        policy: StragglerPolicy | None = None,
+    ):
+        if num_shards is None:
+            if mesh is None:
+                raise ValueError("pass num_shards or a mesh")
+            num_shards = mesh_num_shards(mesh, axis)
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self.shard_monitor = StepMonitor(policy or StragglerPolicy())
+        self.window_monitor = StepMonitor(policy or StragglerPolicy())
+        self.last_reports: dict[int, object] = {}
+
+    def assignments(self, slices: Sequence[int]) -> tuple[ShardAssignment, ...]:
+        return assign_slices(slices, self.num_shards)
+
+    def plan_for(
+        self, geom: regions.CubeGeometry, slices: Sequence[int],
+        window_lines: int, shard: int,
+    ) -> regions.Plan:
+        a = self.assignments(slices)[shard]
+        return regions.build_plan(geom, a.slices, window_lines)
+
+    def run(
+        self,
+        executor_factory: Callable[[int], object],
+        slices: Sequence[int],
+        window_lines: int | None = None,
+        shard: int | None = None,
+        resume: bool = False,
+        on_window: Callable | None = None,
+    ) -> Mapping[int, object]:
+        """Execute the assignment; returns {slice -> SliceResult} merged
+        over the shards that ran.
+
+        ``executor_factory(shard)`` builds (or returns) the executor for one
+        shard — on a cluster that is the per-node construction site; here it
+        usually returns executors over the same data source. ``shard``
+        restricts execution to one shard ("this node").
+        """
+        results: dict[int, object] = {}
+        self.last_reports = {}
+        for a in self.assignments(slices):
+            if shard is not None and a.shard != shard:
+                continue
+            if not a.slices:
+                continue
+            ex = executor_factory(a.shard)
+            wl = window_lines if window_lines is not None else ex.config.window_lines
+            plan = regions.build_plan(ex.data.geometry, a.slices, wl)
+
+            def hook(ws):
+                uid = f"s{ws.window.slice_i}/l{ws.window.line_start:05d}"
+                self.window_monitor.start(uid, now=0.0)
+                self.window_monitor.finish(
+                    uid, now=ws.load_seconds + ws.compute_seconds
+                )
+                if on_window:
+                    on_window(ws)
+
+            sid = f"shard{a.shard}"
+            self.shard_monitor.start(sid)
+            try:
+                results.update(ex.run(plan, resume=resume, on_window=hook))
+            finally:
+                self.shard_monitor.finish(sid)
+            self.last_reports[a.shard] = getattr(ex, "last_report", None)
+        return results

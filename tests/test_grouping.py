@@ -2,6 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import grouping as grp
