@@ -53,11 +53,14 @@ def train_type_tree(sim, types=d.TYPES_4, slices=(0, 1, 2, 3),
 
 def run_method(sim, method: str, types, window_lines: int, slice_i: int,
                tree=None, mode: str = "faithful", warmup: bool = True,
-               exec_config: ExecutorConfig | None = None):
+               exec_config: ExecutorConfig | None = None, reps: int = 1):
     """Runs one slice through the staged executor (default overlapped config;
     pass ``exec_config=SERIAL`` for the reference serial path). Returns
     (SliceResult, wall_seconds); per-stage totals are on
-    ``res`` stats / the computer's ``last_report``."""
+    ``res`` stats / the computer's ``last_report``. ``reps > 1`` repeats the
+    measured slice and keeps the best-compute run — container noise is
+    strictly additive, so the min is the estimator stable enough for the
+    ``run.py --check`` gate to diff across runs."""
     # rep_bucket sized for the reduced workloads (the default 256 would pad
     # grouped batches past the baseline's size on these small windows)
     cfg = PDFConfig(types=types, window_lines=window_lines, method=method,
@@ -67,8 +70,13 @@ def run_method(sim, method: str, types, window_lines: int, slice_i: int,
         PDFComputer(cfg, sim, tree=tree, exec_config=exec_config).run_slice(
             (slice_i + 1) % sim.geometry.num_slices
         )
-    comp = PDFComputer(cfg, sim, tree=tree, exec_config=exec_config)
-    t0 = time.perf_counter()
-    res = comp.run_slice(slice_i)
-    wall = time.perf_counter() - t0
+    runs = []
+    for _ in range(max(reps, 1)):
+        comp = PDFComputer(cfg, sim, tree=tree, exec_config=exec_config)
+        t0 = time.perf_counter()
+        res = comp.run_slice(slice_i)
+        runs.append((time.perf_counter() - t0, res))
+    # Keep the best-compute run's own wall so (res, wall) stay consistent
+    # (overlap stats derive from their difference).
+    wall, res = min(runs, key=lambda r: r[1].total_compute_seconds)
     return res, wall

@@ -9,7 +9,7 @@ ML ~1.9x/4.5x, Grouping+ML ~8x/17x on this workload.
 from __future__ import annotations
 
 from repro.core import distributions as d
-from benchmarks.common import Row, run_method, small_sim, train_type_tree
+from benchmarks.common import SERIAL, Row, run_method, small_sim, train_type_tree
 
 METHODS = ["baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml"]
 
@@ -21,9 +21,13 @@ def run(quick: bool = True):
         tree = train_type_tree(sim, types)
         base_wall = None
         for method in METHODS:
+            # SERIAL: these rows compare per-method Select+fit compute, so
+            # keep the prefetch thread's generation work off the measured
+            # core (these rows feed the --check gate; overlap is fig10's).
             res, wall = run_method(
                 sim, method, types, window_lines=3, slice_i=2,
-                tree=tree if "ml" in method else None,
+                tree=tree if "ml" in method else None, exec_config=SERIAL,
+                reps=7,
             )
             compute = res.total_compute_seconds
             if method == "baseline":

@@ -14,18 +14,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
+from repro.core import distributions as d
+from repro.core import fitting
 from repro.core.pdf_error import histogram as hist_jnp
 from repro.core.distributions import moments_from_values
 from repro.kernels.hist import histogram as hist_kernel
 from repro.kernels.moments import moments as moments_kernel
 
 
-def _time(f, *args, reps=3):
-    f(*args)  # warmup/compile
-    t0 = time.perf_counter()
+def _time(f, *args, reps=11):
+    """Best-of-reps: timing noise on a shared container is strictly additive
+    (bandwidth contention hits the one-hot rows up to ~1.7x), so the min is
+    the stable estimator the run.py --check gate can diff across runs."""
+    jax.block_until_ready(f(*args))  # warmup/compile
+    samples = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps
+        samples.append(time.perf_counter() - t0)
+    return min(samples)
 
 
 def vmem_bytes(bp: int, bn: int, num_bins: int = 64) -> int:
@@ -50,6 +57,30 @@ def run(quick: bool = True):
     rows.append(Row("kernel/hist_ref_jnp", t_ref * 1e6, ""))
     rows.append(Row("kernel/hist_pallas_interpret", t_ker * 1e6, ""))
 
+    # End-to-end ComputePDF&Error: the fused single-launch path (kernels/
+    # fitpdf) vs the chained two-pass kernel path (moments kernel + hist
+    # kernel + XLA masses/error). Same moments->select semantics; the fused
+    # rows must beat two-pass by >= 1.5x (fused-fit issue acceptance).
+    def _fit_fn(backend_name, types):
+        backend = fitting.get_fit_backend(backend_name, 64)
+
+        @jax.jit
+        def run_fit(x):
+            m = backend.moments(x)
+            r = backend.fit_all(x, m, types, 64, "fused")
+            return r.type_idx, r.error
+
+        return run_fit
+
+    for types, tag in [(d.TYPES_4, "4types"), (d.TYPES_10, "10types")]:
+        t_two = _time(_fit_fn("kernels", types), v)
+        t_fused = _time(_fit_fn("fused", types), v)
+        rows.append(Row(f"kernel/fit_twopass_{tag}", t_two * 1e6, f"P={p} n={n}"))
+        rows.append(Row(
+            f"kernel/fit_fused_{tag}", t_fused * 1e6,
+            f"speedup={t_two / max(t_fused, 1e-9):.2f}x vs two-pass",
+        ))
+
     # banded attention kernel vs jnp band path (interpret mode on CPU)
     from repro.kernels.band_attn import banded_attention, banded_attention_ref
     b, s, h, kv, hd, w = (2, 256, 4, 2, 64, 64) if quick else (4, 2048, 8, 2, 128, 512)
@@ -73,4 +104,13 @@ def run(quick: bool = True):
             Row(f"kernel/vmem_block_{bp}x{bn}", 0.0,
                 f"{b/1024:.0f}KiB of 16MiB VMEM ({'ok' if b < 16 * 2**20 else 'OVER'})")
         )
+    # Fused fit kernel's TPU tile (one-hot accumulation path, 10 types):
+    # values + freq scratch + edges + params + the strip-mined one-hot.
+    bp, bn, L, T = 8, 512, 64, 10
+    fb = bp * bn * 4 + bp * L * 4 + bp * (L + 1) * 4 + bp * 3 * T * 4 \
+        + bp * bn * L * 4 // 16
+    rows.append(
+        Row(f"kernel/vmem_fitpdf_{bp}x{bn}", 0.0,
+            f"{fb/1024:.0f}KiB of 16MiB VMEM ({'ok' if fb < 16 * 2**20 else 'OVER'})")
+    )
     return rows

@@ -1,6 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
 # and writes BENCH_pipeline.json (name -> us_per_call) so future PRs can
-# track the perf trajectory.
+# track the perf trajectory. ``--check`` turns the run into a regression
+# gate against the committed json (used by the CI workflow).
 from __future__ import annotations
 
 import argparse
@@ -9,13 +10,69 @@ import sys
 import time
 from pathlib import Path
 
+# Support `python benchmarks/run.py` as well as `python -m benchmarks.run`.
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+# Rows the --check gate enforces: kernel timings and the per-method pipeline
+# rows. Other figures (overlap walls, projections) are tracked but too
+# environment-dependent to gate on.
+GATE_PREFIXES = ("kernel/", "fig06/")
+GATE_MAX_REGRESSION = 1.25  # fail if fresh > committed * 1.25 (post-drift)
+GATE_MIN_US = 5000.0  # sub-5ms rows are dispatch-latency noise, not signal
+
+
+def check_regressions(fresh: dict[str, float], committed: dict[str, float]) -> int:
+    """Compare fresh timings against the committed map; returns the number
+    of gated rows that regressed by more than GATE_MAX_REGRESSION.
+
+    Ratios are normalized by the run-wide median drift first: on shared
+    runners the whole machine drifts 1.3-1.5x between runs (bandwidth
+    contention), which moves every row together — a code regression moves
+    one row against the fleet. Only the normalized per-row excess fails."""
+    ratios: dict[str, float] = {}
+    for name, old in committed.items():
+        if not name.startswith(GATE_PREFIXES) or old <= GATE_MIN_US:
+            continue
+        new = fresh.get(name)
+        if new is not None and new > 0:
+            ratios[name] = new / old
+    if not ratios:
+        # A filter typo or row rename must not turn the gate silently green.
+        print("# --check: no gated rows measured — gate is vacuous",
+              file=sys.stderr)
+        return -1
+    drift = sorted(ratios.values())[len(ratios) // 2]
+    print(f"# machine drift (median over {len(ratios)} gated rows): "
+          f"{drift:.2f}x", file=sys.stderr)
+
+    failures = 0
+    for name, ratio in sorted(ratios.items()):
+        normalized = ratio / drift
+        if normalized > GATE_MAX_REGRESSION:
+            failures += 1
+            print(f"# REGRESSION {name}: {committed[name]:.1f} -> "
+                  f"{fresh[name]:.1f} us ({ratio:.2f}x raw, "
+                  f"{normalized:.2f}x vs drift)", file=sys.stderr)
+        else:
+            print(f"# ok {name}: {normalized:.2f}x vs drift", file=sys.stderr)
+    return failures
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale observation counts")
-    ap.add_argument("--only", default=None, help="substring filter on module name")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter on module names")
     ap.add_argument("--json-out", default="BENCH_pipeline.json",
                     help="where to write the name -> us_per_call map ('' disables)")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: compare fresh timings against the "
+                         "committed --json-out file instead of rewriting it; "
+                         f"exit 1 when a kernel or method row is more than "
+                         f"{GATE_MAX_REGRESSION:.2f}x slower after the "
+                         "run-wide median drift is normalized out")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -33,10 +90,11 @@ def main() -> None:
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
     ]
+    only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}
     print("name,us_per_call,derived")
     for mod in modules:
-        if args.only and args.only not in mod.__name__:
+        if only and not any(tok in mod.__name__ for tok in only):
             continue
         t0 = time.perf_counter()
         rows = mod.run(quick=not args.full)
@@ -44,6 +102,19 @@ def main() -> None:
             print(r.csv())
             results[r.name] = round(r.us_per_call, 1)
         print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+    if args.check:
+        out_path = Path(args.json_out or "BENCH_pipeline.json")
+        if not out_path.exists():
+            print(f"# --check: no committed {out_path} to gate against",
+                  file=sys.stderr)
+            sys.exit(2)
+        committed = json.loads(out_path.read_text())
+        failures = check_regressions(results, committed)
+        if failures < 0:
+            sys.exit(2)
+        print(f"# --check: {failures} regression(s)", file=sys.stderr)
+        sys.exit(1 if failures else 0)
 
     if args.json_out and results:
         # merge into any existing map so a --only run refreshes its rows

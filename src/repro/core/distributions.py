@@ -222,8 +222,26 @@ def cdf_cauchy(p: jax.Array, x: jax.Array) -> jax.Array:
     return 0.5 + jnp.arctan((x - p[..., 0]) / p[..., 1]) / jnp.pi
 
 
+# Above this shape parameter the f32 incomplete gamma is both slow (its
+# iteration count grows with k — ~80 ms per (256, 65) eval at k ~ 1e5, the
+# regime the moment fitter reaches on near-normal windows) and unstable
+# (1 ulp of x moves the CDF by ~1e-2). The Wilson-Hilferty cube-root normal
+# approximation is sub-1e-4 accurate there and pure elementwise math.
+_GAMMA_WH_K = 1e4
+
+
 def cdf_gamma(p: jax.Array, x: jax.Array) -> jax.Array:
-    return jnp.where(x <= 0, 0.0, jsp.gammainc(p[..., 0], jnp.maximum(x, 0.0) / p[..., 1]))
+    k, theta = p[..., 0], p[..., 1]
+    xs = jnp.maximum(x, 0.0) / theta
+    # Clamp the exact branch's inputs: jnp.where evaluates both branches, and
+    # igamma at huge k would still pay its full iteration cost. For k <=
+    # _GAMMA_WH_K the clamp of xs is inert (gammainc(k, 2e4) == 1 there).
+    exact = jsp.gammainc(
+        jnp.minimum(k, _GAMMA_WH_K), jnp.minimum(xs, 2.0 * _GAMMA_WH_K)
+    )
+    kk = jnp.maximum(k, _EPS)
+    z = (jnp.cbrt(xs / kk) - (1.0 - 1.0 / (9.0 * kk))) * jnp.sqrt(9.0 * kk)
+    return jnp.where(x <= 0, 0.0, jnp.where(k > _GAMMA_WH_K, _phi(z), exact))
 
 
 def cdf_geometric(p: jax.Array, x: jax.Array) -> jax.Array:

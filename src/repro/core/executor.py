@@ -38,6 +38,7 @@ import json
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, NamedTuple
@@ -50,7 +51,6 @@ from repro.core import distributions as dists
 from repro.core import fitting
 from repro.core import grouping as grp
 from repro.core import ml_predict as mlp
-from repro.core import pdf_error as pe
 from repro.core import regions
 from repro.core.reuse import ReuseCache
 from repro.data.loader import WindowPrefetcher
@@ -64,6 +64,25 @@ METHODS = ("baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml")
 # same pass, so they are free; scale-invariance makes the classifier
 # transfer across slices whose value scales differ (DESIGN.md §8).
 TREE_FEATURES = ("cv", "skew", "kurt")
+
+
+def _quiet_donation(f):
+    """The fit executables donate their (P, n) window buffer (memory headroom
+    on real accelerators: the staged window is dead once consumed). None of
+    the small fit outputs can alias a (P, n) buffer, so XLA warns the
+    donation went unused on backends where it finds no other use — expected,
+    not actionable. Suppressed per-call so importers' own warning state is
+    untouched (the compute stage is single-threaded)."""
+
+    @functools.wraps(f)
+    def wrapped(*args):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            return f(*args)
+
+    return wrapped
 
 
 def tree_features(moments: dists.Moments):
@@ -86,11 +105,19 @@ class PDFConfig:
     group_tol: float = grp.DEFAULT_TOL
     rep_bucket: int = 256  # padding bucket for representative batches
     error_bound: float | None = None  # the paper's bounded-error constraint
-    use_kernels: bool = False  # route moments/histogram through Pallas ops
+    # Device-work implementation (fitting.FIT_BACKENDS): 'reference' (jnp
+    # chain), 'kernels' (Pallas moments+hist, chained), 'fused' (the
+    # single-launch kernels/fitpdf path — the default hot path).
+    fit_backend: str = "fused"
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"method must be one of {METHODS}, got {self.method!r}")
+        if self.fit_backend not in fitting.FIT_BACKENDS:
+            raise ValueError(
+                f"fit_backend must be one of {fitting.FIT_BACKENDS}, "
+                f"got {self.fit_backend!r}"
+            )
 
 
 @dataclass(frozen=True)
@@ -168,48 +195,45 @@ class ExecutorReport:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_fns(types: tuple, num_bins: int, mode: str, use_kernels: bool):
+def _jitted_fns(types: tuple, num_bins: int, mode: str, fit_backend: str):
     """Module-level jit cache: every executor with the same (types, bins,
-    mode, kernels) shares compiled executables — windows, slices and method
-    variants reuse them instead of recompiling per instance."""
-    mom = _moments_fn(use_kernels)
-    hist = _hist_fn(use_kernels)
+    mode, backend) shares compiled executables — windows, slices and method
+    variants reuse them instead of recompiling per instance.
+
+    The fit entry points donate their window buffer: the prefetcher's staged
+    array (or the grouping path's gathered representative batch) is dead
+    once the fit has consumed it, so XLA reuses it in place instead of
+    copying (moments_f runs first on the same buffer and must not donate).
+    """
+    backend = fitting.get_fit_backend(fit_backend, num_bins)
 
     @jax.jit
     def moments_f(values):
-        return mom(values)
+        return backend.moments(values)
 
-    @jax.jit
+    @_quiet_donation
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def fit_all_f(values, moments):
-        r = fitting.compute_pdf_and_error(
-            values, moments, types, num_bins, mode=mode, histogram_fn=hist
-        )
+        r = backend.fit_all(values, moments, types, num_bins, mode)
+        return r.type_idx, r.params, r.error
+
+    @_quiet_donation
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fit_pred_f(values, moments, tree_arrays):
+        # Tree features + the fixed-depth descent live inside the executable:
+        # the predict step is ~15 eager dispatches per window otherwise.
+        pred = mlp.predict(tree_arrays, tree_features(moments))
+        r = backend.fit_predicted(values, moments, pred, types, num_bins)
         return r.type_idx, r.params, r.error
 
     @jax.jit
-    def fit_pred_f(values, moments, pred):
-        r = fitting.compute_pdf_with_predicted_type(
-            values, moments, pred, types, num_bins, histogram_fn=hist
-        )
-        return r.type_idx, r.params, r.error
+    def gather_f(values, moments, idx):
+        # One executable for the grouping/reuse representative gather: the
+        # values rows and all six moment fields in a single dispatch (the
+        # per-field np round-trips used to dominate small grouped windows).
+        return values[idx], jax.tree.map(lambda f: f[idx], moments)
 
-    return moments_f, fit_all_f, fit_pred_f
-
-
-def _moments_fn(use_kernels: bool):
-    if use_kernels:
-        from repro.kernels.moments import ops as mops
-
-        return mops.moments
-    return dists.moments_from_values
-
-
-def _hist_fn(use_kernels: bool):
-    if use_kernels:
-        from repro.kernels.hist import ops as hops
-
-        return hops.histogram
-    return pe.histogram
+    return moments_f, fit_all_f, fit_pred_f, gather_f
 
 
 class _StagedWindow(NamedTuple):
@@ -366,9 +390,10 @@ class StagedExecutor:
         if "ml" in config.method and tree is None:
             raise ValueError(f"method {config.method!r} requires a decision tree")
 
-        self._moments, self._fit_all, self._fit_pred = _jitted_fns(
-            tuple(config.types), config.num_bins, config.mode, config.use_kernels
+        self._moments, self._fit_all, self._fit_pred, self._gather = _jitted_fns(
+            tuple(config.types), config.num_bins, config.mode, config.fit_backend
         )
+        self._key_buf: np.ndarray | None = None  # cached (P, 2) quantize buffer
         self._tree_arrays = tree.as_device() if tree else None
         # One StepMonitor per stage: medians/straggler flags per stage, each
         # touched by exactly one thread (load -> prefetch thread, compute ->
@@ -406,30 +431,50 @@ class StagedExecutor:
     def _fit(self, values: jax.Array, moments: dists.Moments):
         """Fit every row of ``values``; returns np arrays (type, params, err)."""
         if self._tree_arrays is not None and "ml" in self.config.method:
-            feats = tree_features(moments)
-            pred = mlp.predict(self._tree_arrays, feats)
-            t, p, e = self._fit_pred(values, moments, pred)
+            t, p, e = self._fit_pred(values, moments, self._tree_arrays)
         else:
             t, p, e = self._fit_all(values, moments)
         return np.asarray(t), np.asarray(p), np.asarray(e)
 
+    def _quantized_keys(self, moments: dists.Moments) -> np.ndarray:
+        """Host-side (mu, sigma) quantization into a cached (P, 2) buffer
+        (one allocation per window size instead of five temporaries per
+        window; sigma is derived from var on host to skip a device op).
+
+        The division runs in float64 deliberately: the previous float32
+        ``round(mean / tol)`` at mean ~ 3e3 and tol = 1e-6 produced
+        quotients ~ 3e9, past f32's 2^24 integer range, so keys aliased in
+        ~256-step buckets — merging points whose means differ by ~256x the
+        configured tolerance. f64 honors ``group_tol`` as configured;
+        windows dedup slightly less than before, and exactly-identical
+        points still share a key bit-for-bit."""
+        mean = np.asarray(moments.mean)
+        var = np.asarray(moments.var)
+        p = mean.shape[0]
+        if self._key_buf is None or self._key_buf.shape[0] != p:
+            self._key_buf = np.empty((p, 2), dtype=np.int64)
+            self._key_tmp = np.empty((p,), dtype=np.float64)
+        tmp = self._key_tmp
+        np.divide(mean, self.config.group_tol, out=tmp)
+        np.rint(tmp, out=tmp)
+        self._key_buf[:, 0] = tmp
+        np.maximum(var, 0.0, out=tmp)
+        np.sqrt(tmp, out=tmp)
+        np.divide(tmp, self.config.group_tol, out=tmp)
+        np.rint(tmp, out=tmp)
+        self._key_buf[:, 1] = tmp
+        return self._key_buf
+
     def _select_and_fit(self, values: jax.Array, moments: dists.Moments):
         """The Select step (§5.1/5.2): returns per-point results + bookkeeping."""
         method = self.config.method
+        num_points = values.shape[0]
         if method in ("baseline", "ml"):
             t, p, e = self._fit(values, moments)
-            return t, p, e, values.shape[0], 0
+            return t, p, e, num_points, 0
 
         # grouping / reuse variants: dedup on host, fit representatives only.
-        mean = np.asarray(moments.mean)
-        std = np.asarray(moments.std)
-        keys = np.stack(
-            [
-                np.round(mean / self.config.group_tol),
-                np.round(std / self.config.group_tol),
-            ],
-            axis=-1,
-        ).astype(np.int64)
+        keys = self._quantized_keys(moments)
         groups = grp.group_host(keys)
         rep_idx = groups.rep_indices
         cache_hits = 0
@@ -452,8 +497,9 @@ class StagedExecutor:
 
         if len(todo):
             padded = grp.pad_representatives(todo, self.config.rep_bucket)
-            sub_vals = values[jnp.asarray(padded)]
-            sub_mom = dists.Moments(*(jnp.asarray(np.asarray(f)[padded]) for f in moments))
+            # Single device gather for values + all moment fields (the old
+            # per-field np.asarray round-trips cost ~7 transfers per window).
+            sub_vals, sub_mom = self._gather(values, moments, jnp.asarray(padded))
             t, p, e = self._fit(sub_vals, sub_mom)  # dispatches ML per method
             t, p, e = t[: len(todo)], p[: len(todo)], e[: len(todo)]
             rep_t[~hit], rep_p[~hit], rep_e[~hit] = t, p, e

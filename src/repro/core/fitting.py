@@ -16,11 +16,28 @@ Here both are dense, batched XLA computations over a window of points:
   histogram depend only on the data, never on the candidate type, so they
   are computed once and shared across all T types. Both modes return
   bit-identical results (tests assert this).
+
+Orthogonal to the mode, the *fit backend* selects how the device work is
+implemented (``FIT_BACKENDS``):
+
+* ``reference`` — pure-jnp chain (scatter-add histogram; the one-hot
+  ``pe.histogram`` remains the test oracle only).
+* ``kernels``   — the chain with the Pallas moments + histogram kernels
+  swapped in (two kernel launches, masses still materialized in XLA).
+* ``fused``     — the single-launch path (``kernels/fitpdf``): one kernel
+  emits moments + Eq.-5 edges, a second streams the window once more and
+  reduces histogram, CDF masses and Eq.-5 error in its epilogue, so only
+  the (P, T) errors reach HBM. The default executor path.
+
+``mode='faithful'`` deliberately keeps the per-type chain structure for
+every backend — a fused single pass cannot represent the paper's per-type
+data passes, so the fused backend falls back to the chain there.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+import functools
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +46,8 @@ from repro.core import distributions as dists
 from repro.core import pdf_error as pe
 
 _BIG = 1e30
+
+FIT_BACKENDS = ("reference", "kernels", "fused")
 
 
 class FitResult(NamedTuple):
@@ -43,6 +62,25 @@ def _finite_or_big(err: jax.Array) -> jax.Array:
     return jnp.where(jnp.isfinite(err), err, _BIG)
 
 
+def select_best(params_all: jax.Array, errs: jax.Array) -> FitResult:
+    """(..., T, 3) params + (..., T) errors -> argmin-selected FitResult."""
+    errs = _finite_or_big(errs)
+    best = jnp.argmin(errs, axis=-1).astype(jnp.int32)
+    params = jnp.take_along_axis(params_all, best[..., None, None], axis=-2)[..., 0, :]
+    error = jnp.take_along_axis(errs, best[..., None], axis=-1)[..., 0]
+    return FitResult(best, params, error)
+
+
+def select_predicted(
+    params_all: jax.Array, errs: jax.Array, predicted_type: jax.Array
+) -> FitResult:
+    """(..., T, 3) params + (..., T) errors -> the tree-predicted type's fit."""
+    pred = predicted_type.astype(jnp.int32)
+    params = jnp.take_along_axis(params_all, pred[..., None, None], axis=-2)[..., 0, :]
+    error = jnp.take_along_axis(_finite_or_big(errs), pred[..., None], axis=-1)[..., 0]
+    return FitResult(pred, params, error)
+
+
 def compute_pdf_and_error(
     values: jax.Array,
     moments: dists.Moments,
@@ -54,9 +92,10 @@ def compute_pdf_and_error(
     """Algorithm 3 for a batch of points: values (..., n) -> FitResult (...,).
 
     ``histogram_fn(values, vmin, vmax, num_bins)`` may be supplied to swap in
-    the Pallas histogram kernel; defaults to the jnp reference.
+    the Pallas histogram kernel; defaults to the jnp scatter-add reference
+    (the one-hot ``pe.histogram`` is kept as the test oracle only).
     """
-    hist = histogram_fn or pe.histogram
+    hist = histogram_fn or pe.histogram_scatter
     params_all = dists.fit_all(types, moments)  # (..., T, 3)
     edges = pe.interval_edges(moments.vmin, moments.vmax, num_bins)
     masses = pe.cdf_masses(types, params_all, edges)  # (..., T, L)
@@ -79,11 +118,7 @@ def compute_pdf_and_error(
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    errs = _finite_or_big(errs)
-    best = jnp.argmin(errs, axis=-1).astype(jnp.int32)
-    params = jnp.take_along_axis(params_all, best[..., None, None], axis=-2)[..., 0, :]
-    error = jnp.take_along_axis(errs, best[..., None], axis=-1)[..., 0]
-    return FitResult(best, params, error)
+    return select_best(params_all, errs)
 
 
 def compute_pdf_with_predicted_type(
@@ -100,7 +135,7 @@ def compute_pdf_with_predicted_type(
     stack them and select — the *expensive* part the paper saves (the per-type
     data pass / error evaluation) is done exactly once here.
     """
-    hist = histogram_fn or pe.histogram
+    hist = histogram_fn or pe.histogram_scatter
     params_all = dists.fit_all(types, moments)  # (..., T, 3)
     params = jnp.take_along_axis(
         params_all, predicted_type[..., None, None].astype(jnp.int32), axis=-2
@@ -117,3 +152,82 @@ def compute_pdf_with_predicted_type(
     freq = hist(values, moments.vmin, moments.vmax, num_bins)
     error = _finite_or_big(pe.pdf_error_from_freq(freq, masses))
     return FitResult(predicted_type.astype(jnp.int32), params, error)
+
+
+class FitBackend(NamedTuple):
+    """One implementation of the per-window device work.
+
+    ``moments`` maps values (..., n) -> Moments; ``histogram`` is the
+    chain-path histogram_fn (also used by ``mode='faithful'``); ``fit_all``
+    and ``fit_predicted`` are Algorithms 3 and 4.
+    """
+
+    name: str
+    moments: Callable[[jax.Array], dists.Moments]
+    histogram: Callable[..., jax.Array]
+    fit_all: Callable[..., FitResult]  # (values, moments, types, num_bins, mode)
+    fit_predicted: Callable[..., FitResult]  # (values, moments, pred, types, num_bins)
+
+
+@functools.lru_cache(maxsize=16)
+def get_fit_backend(name: str = "fused", num_bins: int = 64) -> FitBackend:
+    """Resolve a ``FIT_BACKENDS`` name; kernel imports stay lazy so the
+    reference backend never touches Pallas."""
+    if name == "reference":
+        hist = pe.histogram_scatter
+
+        def fit_all(values, moments, types, num_bins, mode="fused"):
+            return compute_pdf_and_error(
+                values, moments, types, num_bins, mode=mode, histogram_fn=hist
+            )
+
+        def fit_predicted(values, moments, pred, types, num_bins):
+            return compute_pdf_with_predicted_type(
+                values, moments, pred, types, num_bins, histogram_fn=hist
+            )
+
+        return FitBackend(name, dists.moments_from_values, hist, fit_all, fit_predicted)
+
+    if name == "kernels":
+        from repro.kernels.hist import ops as hops
+        from repro.kernels.moments import ops as mops
+
+        def fit_all(values, moments, types, num_bins, mode="fused"):
+            return compute_pdf_and_error(
+                values, moments, types, num_bins, mode=mode,
+                histogram_fn=hops.histogram,
+            )
+
+        def fit_predicted(values, moments, pred, types, num_bins):
+            return compute_pdf_with_predicted_type(
+                values, moments, pred, types, num_bins, histogram_fn=hops.histogram
+            )
+
+        return FitBackend(name, mops.moments, hops.histogram, fit_all, fit_predicted)
+
+    if name == "fused":
+        from repro.kernels.fitpdf import ops as fops
+
+        def moments_fn(values):
+            return fops.moments(values, num_bins)
+
+        def fit_all(values, moments, types, num_bins, mode="fused"):
+            if mode == "faithful":
+                # The paper's per-type pass structure cannot be a single
+                # fused launch; keep the chain (scatter histogram per type).
+                return compute_pdf_and_error(
+                    values, moments, types, num_bins, mode=mode,
+                    histogram_fn=pe.histogram_scatter,
+                )
+            params_all = dists.fit_all(types, moments)
+            errs = fops.fit_errors(values, moments, params_all, types, num_bins)
+            return select_best(params_all, errs)
+
+        def fit_predicted(values, moments, pred, types, num_bins):
+            params_all = dists.fit_all(types, moments)
+            errs = fops.fit_errors(values, moments, params_all, types, num_bins)
+            return select_predicted(params_all, errs, pred)
+
+        return FitBackend(name, moments_fn, pe.histogram_scatter, fit_all, fit_predicted)
+
+    raise ValueError(f"fit_backend must be one of {FIT_BACKENDS}, got {name!r}")

@@ -28,9 +28,18 @@ DEFAULT_TOL = 1e-6
 
 def quantize_keys(mean: jax.Array, std: jax.Array, tol: float = DEFAULT_TOL) -> jax.Array:
     """(P,) mu/sigma -> (P, 2) int32 quantized keys. tol is the paper's
-    'acceptable fluctuation' (§5.2); exact grouping is tol -> 0."""
-    qm = jnp.round(mean / tol).astype(jnp.int32)
-    qs = jnp.round(std / tol).astype(jnp.int32)
+    'acceptable fluctuation' (§5.2); exact grouping is tol -> 0.
+
+    Quotients are folded into int32 range (mod 2^31) before the cast:
+    XLA's out-of-range f32 -> s32 conversion saturates, which used to
+    collapse every realistic seismic mean (~3e3 / 1e-6 tol ~ 3e9) into one
+    key and so one giant group on the device path. The fold keeps keys
+    exact below 2^31 and hash-like above (pairwise collision odds ~2^-31);
+    the host Select path (``executor._quantized_keys``) quantizes exactly
+    in float64 instead — see ROADMAP for unifying the two."""
+    two31 = jnp.float32(2**31)
+    qm = (jnp.round(mean / tol) % two31).astype(jnp.int32)
+    qs = (jnp.round(std / tol) % two31).astype(jnp.int32)
     return jnp.stack([qm, qs], axis=-1)
 
 
@@ -50,11 +59,19 @@ def group_host(keys: np.ndarray) -> HostGroups:
 
 
 def pad_representatives(rep_indices: np.ndarray, bucket: int = 256) -> np.ndarray:
-    """Pad the representative list to a bucket multiple so the fit step's jit
+    """Pad the representative list to ``bucket * 2^k`` so the fit step's jit
     cache stays small across windows (padded slots repeat rep 0; their results
-    are discarded by the inverse map)."""
+    are discarded by the inverse map).
+
+    Geometric buckets bound the distinct padded shapes — and thus fit
+    recompiles — to O(log P) per method instead of O(P/bucket), at the cost
+    of at most 2x padding. Linear buckets made windows whose group count
+    straddled a bucket edge trigger fresh XLA compiles mid-run (the
+    fig06/4types grouping-slower-than-baseline inversion)."""
     g = len(rep_indices)
-    padded = int(np.ceil(max(g, 1) / bucket) * bucket)
+    padded = bucket
+    while padded < g:
+        padded *= 2
     out = np.full((padded,), rep_indices[0] if g else 0, dtype=np.int64)
     out[:g] = rep_indices
     return out

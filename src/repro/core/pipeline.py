@@ -9,7 +9,10 @@ path) over a schedulable queue of (slice, window) WorkUnits
 ``StagedExecutor`` so every method (§5/§6 naming: ``baseline``,
 ``grouping``, ``reuse``, ``ml``, ``grouping_ml``, ``reuse_ml``) and the
 sampling path run through one pipeline; ``runtime/scheduler.py`` shards
-whole slices across the mesh data axis on top of the same executor.
+whole slices across the mesh data axis on top of the same executor. The
+per-window device work is a pluggable fit backend
+(``PDFConfig.fit_backend``, DESIGN.md §2.1) defaulting to the fused
+single-launch kernel path in ``kernels/fitpdf``.
 
 Fault tolerance: after each window the per-window results are persisted as
 ``window_NNNN.npz`` plus a watermark; ``run_slice`` with ``resume=True``

@@ -1,0 +1,4 @@
+from repro.kernels.fitpdf.ops import fit_errors, moments, moments_and_edges
+from repro.kernels.fitpdf.ref import fit_errors_ref
+
+__all__ = ["fit_errors", "fit_errors_ref", "moments", "moments_and_edges"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused fit kernels: the chained reference path
+(one-hot histogram, materialized masses tensor) from core/fitting."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from repro.core import distributions as dists
+from repro.core import pdf_error as pe
+
+
+def fit_errors_ref(
+    values: jax.Array,
+    moments: dists.Moments,
+    params_all: jax.Array,
+    types: Sequence[str],
+    num_bins: int,
+) -> jax.Array:
+    """(..., n) + (..., T, 3) -> (..., T) Eq.-5 errors via the full chain:
+    edges -> one-hot histogram -> (..., T, L) masses -> L1 reduction."""
+    edges = pe.interval_edges(moments.vmin, moments.vmax, num_bins)
+    freq = pe.histogram(values, moments.vmin, moments.vmax, num_bins)
+    masses = pe.cdf_masses(types, params_all, edges)
+    return pe.pdf_error_from_freq(freq, masses)

@@ -20,6 +20,7 @@ import argparse
 import time
 
 from repro.core import distributions as d
+from repro.core import fitting
 from repro.core.executor import METHODS, ExecutorConfig, PDFConfig, StagedExecutor
 from repro.core.pipeline import train_type_tree
 from repro.core.regions import CubeGeometry
@@ -34,6 +35,14 @@ def main():
     ap.add_argument("--shard", type=int, default=None,
                     help="run only this shard's assignment (per-node mode)")
     ap.add_argument("--method", default="grouping", choices=list(METHODS))
+    ap.add_argument("--fit-backend", default="fused",
+                    choices=list(fitting.FIT_BACKENDS),
+                    help="device-work implementation (DESIGN.md §2.1)")
+    ap.add_argument("--mode", default="fused", choices=["faithful", "fused"],
+                    help="shared-histogram fit (default; the fused backend's "
+                         "single-launch kernel path) vs paper-faithful "
+                         "per-type passes (always the chained path — a "
+                         "single launch cannot model the paper's cost)")
     ap.add_argument("--window-lines", type=int, default=6)
     ap.add_argument("--lines", type=int, default=24)
     ap.add_argument("--ppl", type=int, default=60)
@@ -57,7 +66,7 @@ def main():
                            window_lines=args.window_lines) \
         if "ml" in args.method else None
     cfg = PDFConfig(window_lines=args.window_lines, method=args.method,
-                    mode="faithful", rep_bucket=64)
+                    mode=args.mode, fit_backend=args.fit_backend, rep_bucket=64)
     exec_cfg = ExecutorConfig(
         prefetch=not args.serial,
         prefetch_depth=args.prefetch_depth,

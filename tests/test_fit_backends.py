@@ -1,0 +1,48 @@
+"""Executor-level backend equivalence: fit_backend='fused' (the default) vs
+'reference' for every method on both candidate sets (the fused-fit issue's
+acceptance matrix)."""
+
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core.pipeline import METHODS, PDFComputer, PDFConfig, train_type_tree
+from repro.core.regions import CubeGeometry
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SeismicSimulation(
+        SimulationConfig(geometry=CubeGeometry(8, 6, 10), num_simulations=200)
+    )
+
+
+@pytest.fixture(scope="module")
+def trees(sim):
+    return {
+        len(types): train_type_tree(sim, types, window_lines=2)
+        for types in (d.TYPES_4, d.TYPES_10)
+    }
+
+
+def test_default_backend_is_fused():
+    assert PDFConfig().fit_backend == "fused"
+
+
+@pytest.mark.parametrize("types", [d.TYPES_4, d.TYPES_10], ids=["4types", "10types"])
+@pytest.mark.parametrize("method", METHODS)
+def test_fused_matches_reference(sim, trees, method, types):
+    tree = trees[len(types)] if "ml" in method else None
+    res = {}
+    for backend in ("reference", "fused"):
+        cfg = PDFConfig(
+            types=types, window_lines=2, method=method, fit_backend=backend
+        )
+        res[backend] = PDFComputer(cfg, sim, tree=tree).run_slice(4)
+    a, b = res["reference"], res["fused"]
+    np.testing.assert_array_equal(a.type_idx, b.type_idx)
+    np.testing.assert_allclose(a.error, b.error, atol=2e-3)
+    np.testing.assert_allclose(a.params, b.params, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(a.mean, b.mean, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(a.std, b.std, rtol=2e-2, atol=1e-2)

@@ -1,0 +1,108 @@
+"""Fused fit kernels (kernels/fitpdf) vs the chained pure-jnp oracle.
+
+Coverage per the fused-fit issue: all 10 candidate types, P not a multiple
+of block_points, n not a multiple of block_obs, and degenerate windows
+(constant values, vmin == vmax)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core import fitting
+from repro.core import pdf_error as pe
+from repro.kernels import fitpdf
+
+# P deliberately not multiples of block_points (8 TPU / 64 interpret), n not
+# multiples of block_obs (512 TPU / 1024 interpret) nor of the 128-lane pad.
+SHAPES = [(1, 64), (7, 100), (37, 513), (64, 1000), (129, 2048), (5, 1)]
+
+
+def _window(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(3000.0, 10.0, shape), jnp.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_moments_and_edges_match_reference(shape):
+    v = _window(shape, seed=hash(shape) % 2**31)
+    m_ref = d.moments_from_values(v)
+    m_k, edges_k = fitpdf.moments_and_edges(v, 20)
+    for name, got, want in zip(m_ref._fields, m_k, m_ref):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3, err_msg=name
+        )
+    edges_ref = pe.interval_edges(m_ref.vmin, m_ref.vmax, 20)
+    np.testing.assert_allclose(
+        np.asarray(edges_k), np.asarray(edges_ref), rtol=1e-6, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("types", [d.TYPES_4, d.TYPES_10], ids=["4types", "10types"])
+def test_fit_errors_allclose_reference(shape, types):
+    """The single-launch hist+error kernel == the chained oracle, every type."""
+    v = _window(shape, seed=hash((shape, len(types))) % 2**31)
+    m = d.moments_from_values(v)
+    params_all = d.fit_all(types, m)
+    ref = np.asarray(fitpdf.fit_errors_ref(v, m, params_all, types, 20))
+    got = np.asarray(fitpdf.fit_errors(v, m, params_all, types, 20))
+    # atol headroom for the gamma Wilson-Hilferty branch: its cancellation
+    # term amplifies 1 ulp of f32 across compilation contexts to ~1e-4.
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=5e-4, equal_nan=True)
+
+
+@pytest.mark.parametrize("num_bins", [8, 64])
+def test_fit_errors_small_blocks_cover_grid_seams(num_bins):
+    """Explicit tiny blocks force multi-cell grids in both axes (padding rows
+    and masked obs columns must not leak into the epilogue)."""
+    v = _window((13, 300), seed=3)
+    m = d.moments_from_values(v)
+    params_all = d.fit_all(d.TYPES_4, m)
+    ref = np.asarray(fitpdf.fit_errors_ref(v, m, params_all, d.TYPES_4, num_bins))
+    got = np.asarray(
+        fitpdf.fit_errors(
+            v, m, params_all, d.TYPES_4, num_bins, block_points=4, block_obs=128
+        )
+    )
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4, equal_nan=True)
+
+
+def test_degenerate_constant_window():
+    """vmin == vmax: same NaN pattern as the oracle (uniform's empty support),
+    and the executor-level selection is finite and identical."""
+    v = jnp.full((5, 100), 7.0)
+    m = d.moments_from_values(v)
+    assert float(m.vmin[0]) == float(m.vmax[0])
+    params_all = d.fit_all(d.TYPES_10, m)
+    ref = np.asarray(fitpdf.fit_errors_ref(v, m, params_all, d.TYPES_10, 16))
+    got = np.asarray(fitpdf.fit_errors(v, m, params_all, d.TYPES_10, 16))
+    np.testing.assert_array_equal(np.isnan(ref), np.isnan(got))
+    np.testing.assert_allclose(got, ref, atol=1e-5, equal_nan=True)
+
+    a = fitting.select_best(params_all, jnp.asarray(ref))
+    b = fitting.select_best(params_all, jnp.asarray(got))
+    np.testing.assert_array_equal(np.asarray(a.type_idx), np.asarray(b.type_idx))
+    assert np.isfinite(np.asarray(b.error)).all()
+
+
+def test_fit_errors_chained_from_kernel_edges():
+    """The standalone two-launch chain: kernel-A edges feed kernel B (at most
+    1-ulp from the XLA edges; errors stay allclose on the non-pathological
+    types the selection actually uses)."""
+    v = _window((16, 400), seed=11)
+    m_k, edges_k = fitpdf.moments_and_edges(v, 20)
+    params_all = d.fit_all(d.TYPES_4, m_k)
+    ref = np.asarray(fitpdf.fit_errors_ref(v, m_k, params_all, d.TYPES_4, 20))
+    got = np.asarray(
+        fitpdf.fit_errors(v, m_k, params_all, d.TYPES_4, 20, edges=edges_k)
+    )
+    np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-3, equal_nan=True)
+
+
+def test_backend_registry_names():
+    assert fitting.FIT_BACKENDS == ("reference", "kernels", "fused")
+    for name in fitting.FIT_BACKENDS:
+        assert fitting.get_fit_backend(name, 16).name == name
+    with pytest.raises(ValueError):
+        fitting.get_fit_backend("nope", 16)

@@ -102,10 +102,18 @@ def test_restart_from_watermark(sim, tmp_path):
     assert len(resumed.stats) < len(full.stats)
 
 
-def test_kernel_backed_pipeline_matches_reference(sim):
-    a = PDFComputer(PDFConfig(window_lines=3, method="baseline"), sim).run_slice(1)
+@pytest.mark.parametrize("backend", ["kernels", "fused"])
+def test_kernel_backed_pipeline_matches_reference(sim, backend):
+    a = PDFComputer(
+        PDFConfig(window_lines=3, method="baseline", fit_backend="reference"), sim
+    ).run_slice(1)
     b = PDFComputer(
-        PDFConfig(window_lines=3, method="baseline", use_kernels=True), sim
+        PDFConfig(window_lines=3, method="baseline", fit_backend=backend), sim
     ).run_slice(1)
     np.testing.assert_array_equal(a.type_idx, b.type_idx)
     np.testing.assert_allclose(a.error, b.error, atol=2e-3)
+
+
+def test_unknown_fit_backend_rejected():
+    with pytest.raises(ValueError, match="fit_backend"):
+        PDFConfig(fit_backend="vectorized")
