@@ -81,6 +81,44 @@ def run(quick: bool = True):
             f"speedup={t_two / max(t_fused, 1e-9):.2f}x vs two-pass",
         ))
 
+    # Select backends (DESIGN.md §6): device-side grouped dispatch
+    # (quantize -> group_device -> gather -> fused fit -> scatter, one
+    # launch + a scalar sync) vs the host Select path (np.unique bounce +
+    # padded representative re-dispatch). Heavily-duplicated window so the
+    # Select machinery, not the representative fit, dominates the row.
+    from repro.core.executor import PDFConfig, StagedExecutor
+
+    sp, sn, sg = (2048, 400, 48) if quick else (8192, 1000, 96)
+    srng = np.random.default_rng(7)
+    base = srng.normal(3000, 10, (sg, sn)).astype(np.float32)
+    sel_np = base[srng.integers(0, sg, size=sp)]  # sp rows over sg distinct
+    sel_times = {}
+    for types, tag in [(d.TYPES_4, "4types"), (d.TYPES_10, "10types")]:
+        for backend in ("host", "device"):
+            cfg = PDFConfig(types=types, method="grouping",
+                            select_backend=backend, rep_bucket=64)
+            ex = StagedExecutor(cfg, None)
+            m = d.Moments(
+                *jax.block_until_ready(ex._moments(jnp.asarray(sel_np)))
+            )
+            # fresh staged buffer per call: the device path donates the
+            # window (as the executor does); staging cost is symmetric.
+            ex._select_and_fit(jnp.asarray(sel_np), m)  # warmup/compile
+            samples = []
+            for _ in range(7):
+                sv = jax.block_until_ready(jnp.asarray(sel_np))
+                t0 = time.perf_counter()
+                ex._select_and_fit(sv, m)  # returns np arrays (synchronous)
+                samples.append(time.perf_counter() - t0)
+            sel_times[(tag, backend)] = min(samples)
+        t_host, t_dev = sel_times[(tag, "host")], sel_times[(tag, "device")]
+        rows.append(Row(f"kernel/select_host_{tag}", t_host * 1e6,
+                        f"P={sp} n={sn} G={sg} np.unique+re-dispatch"))
+        rows.append(Row(
+            f"kernel/select_device_{tag}", t_dev * 1e6,
+            f"speedup={t_host / max(t_dev, 1e-9):.2f}x vs host Select",
+        ))
+
     # banded attention kernel vs jnp band path (interpret mode on CPU)
     from repro.kernels.band_attn import banded_attention, banded_attention_ref
     b, s, h, kv, hd, w = (2, 256, 4, 2, 64, 64) if quick else (4, 2048, 8, 2, 128, 512)

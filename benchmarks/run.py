@@ -23,14 +23,27 @@ GATE_MAX_REGRESSION = 1.25  # fail if fresh > committed * 1.25 (post-drift)
 GATE_MIN_US = 5000.0  # sub-5ms rows are dispatch-latency noise, not signal
 
 
-def check_regressions(fresh: dict[str, float], committed: dict[str, float]) -> int:
-    """Compare fresh timings against the committed map; returns the number
-    of gated rows that regressed by more than GATE_MAX_REGRESSION.
+def check_regressions(
+    fresh: dict[str, float],
+    committed: dict[str, float],
+    report: set[str] | None = None,
+    tag: str = "",
+) -> list[str] | None:
+    """Compare fresh timings against the committed map; returns the names of
+    gated rows that regressed by more than GATE_MAX_REGRESSION (``None``
+    when no gated row was measured at all — a vacuous gate).
 
     Ratios are normalized by the run-wide median drift first: on shared
     runners the whole machine drifts 1.3-1.5x between runs (bandwidth
     contention), which moves every row together — a code regression moves
-    one row against the fleet. Only the normalized per-row excess fails."""
+    one row against the fleet. Only the normalized per-row excess fails.
+
+    ``report`` restricts which rows may be *reported* (printed/failed) —
+    the retry pass scopes itself to the first-pass breaches this way, so a
+    drift median shifted by re-measurement can neither fail rows that never
+    breached nor spam phantom REGRESSION lines into the log. All measured
+    rows still feed the drift estimate. ``tag`` prefixes the stderr lines of
+    that pass."""
     ratios: dict[str, float] = {}
     for name, old in committed.items():
         if not name.startswith(GATE_PREFIXES) or old <= GATE_MIN_US:
@@ -40,23 +53,25 @@ def check_regressions(fresh: dict[str, float], committed: dict[str, float]) -> i
             ratios[name] = new / old
     if not ratios:
         # A filter typo or row rename must not turn the gate silently green.
-        print("# --check: no gated rows measured — gate is vacuous",
+        print(f"# --check: {tag}no gated rows measured — gate is vacuous",
               file=sys.stderr)
-        return -1
+        return None
     drift = sorted(ratios.values())[len(ratios) // 2]
-    print(f"# machine drift (median over {len(ratios)} gated rows): "
+    print(f"# {tag}machine drift (median over {len(ratios)} gated rows): "
           f"{drift:.2f}x", file=sys.stderr)
 
-    failures = 0
+    failures: list[str] = []
     for name, ratio in sorted(ratios.items()):
+        if report is not None and name not in report:
+            continue
         normalized = ratio / drift
         if normalized > GATE_MAX_REGRESSION:
-            failures += 1
-            print(f"# REGRESSION {name}: {committed[name]:.1f} -> "
+            failures.append(name)
+            print(f"# {tag}REGRESSION {name}: {committed[name]:.1f} -> "
                   f"{fresh[name]:.1f} us ({ratio:.2f}x raw, "
                   f"{normalized:.2f}x vs drift)", file=sys.stderr)
         else:
-            print(f"# ok {name}: {normalized:.2f}x vs drift", file=sys.stderr)
+            print(f"# {tag}ok {name}: {normalized:.2f}x vs drift", file=sys.stderr)
     return failures
 
 
@@ -92,16 +107,23 @@ def main() -> None:
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}
+    row_module: dict[str, object] = {}  # row name -> module that measured it
+
+    def measure(mod, quiet: bool = False) -> None:
+        t0 = time.perf_counter()
+        rows = mod.run(quick=not args.full)
+        for r in rows:
+            if not quiet:  # retry passes must not duplicate CSV rows
+                print(r.csv())
+            results[r.name] = round(r.us_per_call, 1)
+            row_module[r.name] = mod
+        print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
     print("name,us_per_call,derived")
     for mod in modules:
         if only and not any(tok in mod.__name__ for tok in only):
             continue
-        t0 = time.perf_counter()
-        rows = mod.run(quick=not args.full)
-        for r in rows:
-            print(r.csv())
-            results[r.name] = round(r.us_per_call, 1)
-        print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        measure(mod)
 
     if args.check:
         out_path = Path(args.json_out or "BENCH_pipeline.json")
@@ -111,9 +133,32 @@ def main() -> None:
             sys.exit(2)
         committed = json.loads(out_path.read_text())
         failures = check_regressions(results, committed)
-        if failures < 0:
+        if failures is None:
             sys.exit(2)
-        print(f"# --check: {failures} regression(s)", file=sys.stderr)
+        if failures:
+            # Flake hardening: a single shared-runner tail spike (CPU phase,
+            # bandwidth contention) can push one row past the 25% threshold
+            # even after drift normalization. Re-measure just the modules
+            # that own the breaching rows once; only a regression that
+            # reproduces fails the gate.
+            retry_mods = {id(row_module[n]): row_module[n]
+                          for n in failures if n in row_module}
+            print(f"# --check: {len(failures)} breach(es) — retrying "
+                  f"{len(retry_mods)} module(s) once: "
+                  f"{sorted(m.__name__ for m in retry_mods.values())}",
+                  file=sys.stderr)
+            for mod in retry_mods.values():
+                measure(mod, quiet=True)
+            # Only first-pass breaches may fail (report=...): the retry
+            # shifts the drift median, which could otherwise push — or at
+            # least loudly report — never-breaching rows of modules that
+            # were never re-measured.
+            failures = check_regressions(
+                results, committed, report=set(failures), tag="retry: "
+            )
+            if failures is None:
+                sys.exit(2)
+        print(f"# --check: {len(failures)} regression(s)", file=sys.stderr)
         sys.exit(1 if failures else 0)
 
     if args.json_out and results:

@@ -58,6 +58,14 @@ from repro.runtime.monitor import StepMonitor
 
 METHODS = ("baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml")
 
+# Where the Select step's dedup runs (DESIGN.md §6): 'host' bounces the
+# window's quantized keys through np.unique + a padded representative
+# re-dispatch; 'device' keeps quantize -> group_device -> representative
+# gather -> fit -> scatter on the accelerator (one jitted launch for the
+# grouping methods; reuse keeps its host cache but deduplicates on device).
+# Both produce bitwise-identical per-point results (tests/test_select_backends).
+SELECT_BACKENDS = ("host", "device")
+
 # Tree features: scale-invariant moments (cv = sigma/|mu|, skew, excess
 # kurtosis). The paper uses (mu, sigma) and notes higher normalized moments
 # "may take additional time" — our fused moments kernel computes them in the
@@ -109,6 +117,11 @@ class PDFConfig:
     # chain), 'kernels' (Pallas moments+hist, chained), 'fused' (the
     # single-launch kernels/fitpdf path — the default hot path).
     fit_backend: str = "fused"
+    # Where Select's dedup runs (SELECT_BACKENDS). 'host' stays the default:
+    # on small CPU devices np.unique beats the device sort; 'device' removes
+    # the per-window key D2H + rep-index H2D bounce entirely (the win on real
+    # accelerators — see the kernel/select_* BENCH rows).
+    select_backend: str = "host"
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -118,6 +131,15 @@ class PDFConfig:
                 f"fit_backend must be one of {fitting.FIT_BACKENDS}, "
                 f"got {self.fit_backend!r}"
             )
+        if self.select_backend not in SELECT_BACKENDS:
+            raise ValueError(
+                f"select_backend must be one of {SELECT_BACKENDS}, "
+                f"got {self.select_backend!r}"
+            )
+        if self.rep_bucket < 1:
+            # padded_size(g, 0) would spin forever (0 * 2 == 0), and the
+            # bucket is now CLI-exposed (--rep-bucket)
+            raise ValueError(f"rep_bucket must be >= 1, got {self.rep_bucket}")
 
 
 @dataclass(frozen=True)
@@ -231,9 +253,88 @@ def _jitted_fns(types: tuple, num_bins: int, mode: str, fit_backend: str):
         # One executable for the grouping/reuse representative gather: the
         # values rows and all six moment fields in a single dispatch (the
         # per-field np round-trips used to dominate small grouped windows).
-        return values[idx], jax.tree.map(lambda f: f[idx], moments)
+        return fitting.gather_rows(values, moments, idx)
 
     return moments_f, fit_all_f, fit_pred_f, gather_f
+
+
+class _SelectFns(NamedTuple):
+    """Jitted entry points of the device Select path (select_backend='device').
+
+    ``probe`` is the only per-window sync: it returns the device partition
+    (rep_for_point, is_rep stay on device) plus the scalar group count
+    the host needs to pick a static padded batch size. ``select_fit_all`` /
+    ``select_fit_pred`` then run gather -> fit -> scatter in one launch;
+    ``compact`` serves the reuse methods, which keep their host cache but
+    never bounce the full (P,) keys through np.unique."""
+
+    probe: Callable
+    select_fit_all: Callable
+    select_fit_pred: Callable
+    compact: Callable
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_select_fns(
+    types: tuple, num_bins: int, mode: str, fit_backend: str, group_tol: float
+) -> _SelectFns:
+    """Device-side Select executables (ROADMAP 'grouping-aware fused
+    dispatch'): quantize -> group_device -> representative gather -> fit ->
+    scatter without the host dedup bounce. Safe to build on the now-exact
+    hi/lo keys: the device partition is bit-identical to the host f64 one,
+    so per-point results match the host Select path bitwise (per-row fit
+    determinism: every backend's fit is row-independent, so batch order and
+    padding rows cannot change a representative's result)."""
+    backend = fitting.get_fit_backend(fit_backend, num_bins)
+
+    @jax.jit
+    def probe_f(moments):
+        # The keys themselves are NOT an output: the grouping methods never
+        # consume them, and re-deriving them in compact_f (elementwise, no
+        # sort) is cheaper than committing a (P, 4) buffer every window.
+        keys = grp.quantize_keys_from_var(moments.mean, moments.var, group_tol)
+        g = grp.group_device(keys)
+        return g.num_groups, g.rep_for_point, g.is_rep
+
+    @_quiet_donation
+    @functools.partial(jax.jit, static_argnums=(4,), donate_argnums=(0,))
+    def select_fit_all_f(values, moments, rep_for_point, is_rep, padded_g):
+        gather_idx, point_slot = grp.compact_representatives(
+            rep_for_point, is_rep, padded_g
+        )
+        r = fitting.fit_all_rows(
+            backend, values, moments, gather_idx, types, num_bins, mode
+        )
+        return (
+            grp.scatter_group_results(r.type_idx, point_slot),
+            grp.scatter_group_results(r.params, point_slot),
+            grp.scatter_group_results(r.error, point_slot),
+        )
+
+    @_quiet_donation
+    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(0,))
+    def select_fit_pred_f(values, moments, rep_for_point, is_rep, tree_arrays, padded_g):
+        gather_idx, point_slot = grp.compact_representatives(
+            rep_for_point, is_rep, padded_g
+        )
+        sub_vals, sub_mom = fitting.gather_rows(values, moments, gather_idx)
+        pred = mlp.predict(tree_arrays, tree_features(sub_mom))
+        r = backend.fit_predicted(sub_vals, sub_mom, pred, types, num_bins)
+        return (
+            grp.scatter_group_results(r.type_idx, point_slot),
+            grp.scatter_group_results(r.params, point_slot),
+            grp.scatter_group_results(r.error, point_slot),
+        )
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def compact_f(moments, rep_for_point, is_rep, padded_g):
+        keys = grp.quantize_keys_from_var(moments.mean, moments.var, group_tol)
+        gather_idx, point_slot = grp.compact_representatives(
+            rep_for_point, is_rep, padded_g
+        )
+        return gather_idx, keys[gather_idx], point_slot
+
+    return _SelectFns(probe_f, select_fit_all_f, select_fit_pred_f, compact_f)
 
 
 class _StagedWindow(NamedTuple):
@@ -393,6 +494,14 @@ class StagedExecutor:
         self._moments, self._fit_all, self._fit_pred, self._gather = _jitted_fns(
             tuple(config.types), config.num_bins, config.mode, config.fit_backend
         )
+        self._sel_fns = (
+            _jitted_select_fns(
+                tuple(config.types), config.num_bins, config.mode,
+                config.fit_backend, config.group_tol,
+            )
+            if config.select_backend == "device"
+            else None
+        )
         self._key_buf: np.ndarray | None = None  # cached (P, 2) quantize buffer
         self._tree_arrays = tree.as_device() if tree else None
         # One StepMonitor per stage: medians/straggler flags per stage, each
@@ -441,56 +550,80 @@ class StagedExecutor:
         (one allocation per window size instead of five temporaries per
         window; sigma is derived from var on host to skip a device op).
 
-        The division runs in float64 deliberately: the previous float32
-        ``round(mean / tol)`` at mean ~ 3e3 and tol = 1e-6 produced
-        quotients ~ 3e9, past f32's 2^24 integer range, so keys aliased in
-        ~256-step buckets — merging points whose means differ by ~256x the
-        configured tolerance. f64 honors ``group_tol`` as configured;
-        windows dedup slightly less than before, and exactly-identical
-        points still share a key bit-for-bit."""
+        The actual arithmetic lives in ``grouping.quantize_keys_host`` — the
+        single definition of the key semantics, which the device path
+        (``grouping.quantize_keys_from_var``) matches bit-for-bit. The
+        previous inline version fed the f32 mean straight to ``np.divide``
+        with an f64 ``out``, which numpy computes on the *f32* loop — at
+        mean ~ 3e3 and tol = 1e-6 the ~3e9 quotient aliased on f32's 2^24
+        grid in ~256-step buckets, merging points whose means differ by
+        ~256x the configured tolerance (the exact failure this path's
+        docstring claimed to have fixed)."""
         mean = np.asarray(moments.mean)
         var = np.asarray(moments.var)
         p = mean.shape[0]
         if self._key_buf is None or self._key_buf.shape[0] != p:
             self._key_buf = np.empty((p, 2), dtype=np.int64)
             self._key_tmp = np.empty((p,), dtype=np.float64)
-        tmp = self._key_tmp
-        np.divide(mean, self.config.group_tol, out=tmp)
-        np.rint(tmp, out=tmp)
-        self._key_buf[:, 0] = tmp
-        np.maximum(var, 0.0, out=tmp)
-        np.sqrt(tmp, out=tmp)
-        np.divide(tmp, self.config.group_tol, out=tmp)
-        np.rint(tmp, out=tmp)
-        self._key_buf[:, 1] = tmp
-        return self._key_buf
+        return grp.quantize_keys_host(
+            mean, var, self.config.group_tol, out=self._key_buf, tmp=self._key_tmp
+        )
 
     def _select_and_fit(self, values: jax.Array, moments: dists.Moments):
-        """The Select step (§5.1/5.2): returns per-point results + bookkeeping."""
+        """The Select step (§5.1/5.2): returns per-point results + bookkeeping.
+
+        Dispatches on ``config.select_backend``: 'host' dedups via np.unique
+        over host-quantized keys, 'device' keeps the dedup on the
+        accelerator. Both are bitwise-equivalent (the device keys are exact
+        hi/lo splits of the host int64 keys, and fits are row-deterministic).
+        """
         method = self.config.method
         num_points = values.shape[0]
         if method in ("baseline", "ml"):
             t, p, e = self._fit(values, moments)
             return t, p, e, num_points, 0
+        if self._sel_fns is not None:
+            return self._select_device(values, moments)
 
         # grouping / reuse variants: dedup on host, fit representatives only.
         keys = self._quantized_keys(moments)
         groups = grp.group_host(keys)
-        rep_idx = groups.rep_indices
-        cache_hits = 0
+        rep_t, rep_p, rep_e, fitted, cache_hits = self._fit_representatives(
+            values, moments, keys[groups.rep_indices], groups.rep_indices
+        )
+        inv = groups.inverse
+        return rep_t[inv], rep_p[inv], rep_e[inv], fitted, cache_hits
 
+    def _fit_representatives(
+        self,
+        values: jax.Array,
+        moments: dists.Moments,
+        rep_keys: np.ndarray,
+        rep_rows: np.ndarray,
+    ):
+        """Fit one row per group — the Select core shared by both backends.
+
+        ``rep_keys`` (G, 2) int64 is each group's cache identity; ``rep_rows``
+        (G,) the representatives' window row indices. Consults the reuse
+        cache when the method carries one, fits the misses via the padded
+        re-dispatch, and returns per-*group* results
+        ``(rep_t, rep_p, rep_e, fitted, cache_hits)`` — the caller scatters
+        them per point with its own inverse map."""
+        method = self.config.method
+        g = len(rep_rows)
         if method.startswith("reuse"):
-            hit, cached = self.cache.lookup_window(keys[rep_idx])
+            hit, cached = self.cache.lookup_window(rep_keys)
             cache_hits = int(hit.sum())
-            todo = rep_idx[~hit]
+            todo = rep_rows[~hit]
         else:
-            hit = np.zeros((len(rep_idx),), dtype=bool)
-            cached = np.zeros((len(rep_idx), 5))
-            todo = rep_idx
+            hit = np.zeros((g,), dtype=bool)
+            cached = np.zeros((g, 5))
+            todo = rep_rows
+            cache_hits = 0
 
-        rep_t = np.zeros((len(rep_idx),), dtype=np.int32)
-        rep_p = np.zeros((len(rep_idx), 3), dtype=np.float32)
-        rep_e = np.zeros((len(rep_idx),), dtype=np.float32)
+        rep_t = np.zeros((g,), dtype=np.int32)
+        rep_p = np.zeros((g, 3), dtype=np.float32)
+        rep_e = np.zeros((g,), dtype=np.float32)
         rep_t[hit] = cached[hit, 0].astype(np.int32)
         rep_p[hit] = cached[hit, 1:4]
         rep_e[hit] = cached[hit, 4]
@@ -505,14 +638,59 @@ class StagedExecutor:
             rep_t[~hit], rep_p[~hit], rep_e[~hit] = t, p, e
             if method.startswith("reuse"):
                 self.cache.insert_window(
-                    keys[todo],
+                    rep_keys[~hit],
                     np.concatenate(
                         [t[:, None], p, e[:, None]], axis=-1
                     ).astype(np.float64),
                 )
 
-        inv = groups.inverse
-        return rep_t[inv], rep_p[inv], rep_e[inv], len(todo), cache_hits
+        return rep_t, rep_p, rep_e, len(todo), cache_hits
+
+    def _select_device(self, values: jax.Array, moments: dists.Moments):
+        """Device-side Select (select_backend='device'): the grouping hot
+        path never leaves the accelerator. ``probe`` quantizes + sorts on
+        device; the only D2H is the scalar group count (needed to pick the
+        static padded batch), after which one launch gathers the
+        representatives, fits them, and scatters per-point results — no
+        (P, 2) key download, no np.unique, no rep-index upload.
+
+        The reuse methods keep the host cache (its store is a host dict by
+        design) but swap the np.unique dedup for the device partition: only
+        the compacted (G,) representative keys and the (P,) slot map come
+        down, and cache misses reuse the existing padded re-dispatch, so
+        results — and the evolving cache contents — stay bitwise-identical
+        to the host path."""
+        method = self.config.method
+        fns = self._sel_fns
+        num_g, rep_for_point, is_rep = fns.probe(moments)
+        g = int(num_g)  # the one sync of the device Select path
+        padded_g = grp.padded_size(g, self.config.rep_bucket)
+
+        if method.startswith("grouping"):
+            if self._tree_arrays is not None and "ml" in method:
+                t, p, e = fns.select_fit_pred(
+                    values, moments, rep_for_point, is_rep,
+                    self._tree_arrays, padded_g,
+                )
+            else:
+                t, p, e = fns.select_fit_all(
+                    values, moments, rep_for_point, is_rep, padded_g
+                )
+            return np.asarray(t), np.asarray(p), np.asarray(e), g, 0
+
+        # reuse / reuse_ml: device dedup + host cache — only the compacted
+        # (G,) rep keys/rows and the (P,) slot map come down, then the
+        # representative-fit core runs exactly as on the host path.
+        gather_idx, rep_keys4, point_slot = fns.compact(
+            moments, rep_for_point, is_rep, padded_g
+        )
+        rep_rows = np.asarray(gather_idx)[:g].astype(np.int64)
+        rep_keys = grp.keys_to_int64(np.asarray(rep_keys4)[:g])  # (G, 2) int64
+        rep_t, rep_p, rep_e, fitted, cache_hits = self._fit_representatives(
+            values, moments, rep_keys, rep_rows
+        )
+        inv = np.asarray(point_slot)
+        return rep_t[inv], rep_p[inv], rep_e[inv], fitted, cache_hits
 
     # -- run (Algorithm 1 over a Plan) -----------------------------------------
 

@@ -81,6 +81,48 @@ def select_predicted(
     return FitResult(pred, params, error)
 
 
+def gather_rows(
+    values: jax.Array, moments: dists.Moments, row_indices: jax.Array
+) -> tuple[jax.Array, dists.Moments]:
+    """Representative gather: the window's values rows plus every moment
+    field at ``row_indices`` in one expression — a single executable when
+    jitted (the per-field np round-trips used to dominate small grouped
+    windows), and the prologue of the grouping-aware device dispatch."""
+    return values[row_indices], jax.tree.map(lambda f: f[row_indices], moments)
+
+
+def fit_all_rows(
+    backend: "FitBackend",
+    values: jax.Array,
+    moments: dists.Moments,
+    row_indices: jax.Array,
+    types: Sequence[str],
+    num_bins: int,
+    mode: str = "fused",
+) -> FitResult:
+    """Algorithm 3 restricted to ``row_indices`` rows of the window (the
+    grouping representatives): gather + fit as one computation.
+
+    On the fused backend the gather rides into the kernel wrapper as a
+    rep-indexed prologue (``kernels/fitpdf`` ``ops.fit_errors(row_indices=)``)
+    so the compacted batch is produced inside the same launch that consumes
+    it; other backends (and ``mode='faithful'``) gather with ``gather_rows``
+    and run their ordinary ``fit_all``. Results are bitwise-identical either
+    way — both paths run the same per-row ops on the same gathered rows.
+    """
+    if backend.name == "fused" and mode != "faithful":
+        from repro.kernels.fitpdf import ops as fops
+
+        sub_mom = jax.tree.map(lambda f: f[row_indices], moments)
+        params_all = dists.fit_all(types, sub_mom)
+        errs = fops.fit_errors(
+            values, sub_mom, params_all, types, num_bins, row_indices=row_indices
+        )
+        return select_best(params_all, errs)
+    sub_vals, sub_mom = gather_rows(values, moments, row_indices)
+    return backend.fit_all(sub_vals, sub_mom, types, num_bins, mode)
+
+
 def compute_pdf_and_error(
     values: jax.Array,
     moments: dists.Moments,

@@ -36,6 +36,7 @@ from repro.core import regions
 # the definitions moved to core/executor.py with the staged-executor refactor.
 from repro.core.executor import (  # noqa: F401
     METHODS,
+    SELECT_BACKENDS,
     TREE_FEATURES,
     ExecutorConfig,
     ExecutorReport,
@@ -48,9 +49,10 @@ from repro.core.executor import (  # noqa: F401
 )
 
 __all__ = [
-    "METHODS", "TREE_FEATURES", "ExecutorConfig", "ExecutorReport",
-    "PDFConfig", "PDFComputer", "SliceResult", "StagedExecutor",
-    "WindowStats", "tree_features", "tree_features_np", "train_type_tree",
+    "METHODS", "SELECT_BACKENDS", "TREE_FEATURES", "ExecutorConfig",
+    "ExecutorReport", "PDFConfig", "PDFComputer", "SliceResult",
+    "StagedExecutor", "WindowStats", "tree_features", "tree_features_np",
+    "train_type_tree",
 ]
 
 

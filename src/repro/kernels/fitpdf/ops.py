@@ -86,6 +86,7 @@ def fit_errors(
     block_points: int | None = None,
     block_obs: int | None = None,
     interpret: bool | None = None,
+    row_indices: jax.Array | None = None,
 ) -> jax.Array:
     """(..., n) values + (..., T, 3) params -> (..., T) Eq.-5 errors.
 
@@ -94,12 +95,23 @@ def fit_errors(
     still VMEM-resident. ``edges`` defaults to ``pe.interval_edges`` (the
     reference formula); pass the moments kernel's emitted edges to chain
     the two launches (see kernel.py on why edges are an input).
+
+    ``row_indices`` (1-D, optional) is the rep-indexed gather prologue of
+    the grouping-aware dispatch: ``values`` stays the *full* window while
+    ``moments`` / ``params_all`` / ``edges`` are already per-representative
+    (leading dims == ``row_indices.shape``); the representatives' value rows
+    are gathered here, inside the same jitted computation as the kernel, so
+    the compacted batch is produced by the launch that consumes it instead
+    of bouncing through a host re-dispatch. Bitwise-identical to calling
+    with pre-gathered ``values[row_indices]``.
     """
     interpret, block_points, block_obs = _dispatch(interpret, block_points, block_obs)
-    shape = values.shape
     t = len(types)
     if edges is None:
         edges = pe.interval_edges(moments.vmin, moments.vmax, num_bins)
+    if row_indices is not None:
+        values = values.reshape(-1, values.shape[-1])[row_indices]
+    shape = values.shape
     flat = values.reshape(-1, shape[-1])
     p = flat.shape[0]
     bp = min(block_points, max(1, p))

@@ -52,7 +52,8 @@ NUM_BINS = 20
 TYPES = d.TYPES_4
 
 
-def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS):
+def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS,
+                     group_tol: float = grp.DEFAULT_TOL):
     axes = tuple(mesh.axis_names)
 
     def core(values):
@@ -86,10 +87,13 @@ def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS):
         out = core(values)
         if variant == "grouping_global":
             # §5.2 global shuffle: quantized keys all_gathered + dedup'd.
+            # quantize_keys_from_var matches the host Select path bit-exactly
+            # (f64 sqrt + hi/lo int32 key pairs) at the *configured* tol —
+            # this used to drop the tolerance and always group at DEFAULT_TOL.
             from jax.experimental.shard_map import shard_map
 
             mean, var = out[3], out[4]
-            keys = grp.quantize_keys(mean, jnp.sqrt(jnp.maximum(var, 0.0)))
+            keys = grp.quantize_keys_from_var(mean, var, tol=group_tol)
             rep = shard_map(
                 lambda k: grp.group_device_global(k, axes).rep_for_point,
                 mesh=mesh, in_specs=P(axes), out_specs=P(axes),
@@ -100,14 +104,15 @@ def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS):
     return step
 
 
-def run_pdf_cell(variant: str, shape_name: str, mesh, verbose=True) -> dict:
+def run_pdf_cell(variant: str, shape_name: str, mesh, verbose=True,
+                 group_tol: float = grp.DEFAULT_TOL) -> dict:
     points, obs = PDF_SHAPES[shape_name]
     chips = mesh.devices.size
     axes = tuple(mesh.axis_names)
     values = jax.ShapeDtypeStruct((points, obs), jnp.float32)
     in_sh = NamedSharding(mesh, P(axes, None))
 
-    step = make_window_step(variant, mesh)
+    step = make_window_step(variant, mesh, group_tol=group_tol)
     t0 = time.perf_counter()
     lowered = jax.jit(step, in_shardings=(in_sh,)).lower(values)
     compiled = lowered.compile()
@@ -173,6 +178,10 @@ def main():
     ap.add_argument("--pdf-shape", choices=list(PDF_SHAPES), default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--group-tol", type=float, default=grp.DEFAULT_TOL,
+                    help="grouping tolerance for the grouping_global variant "
+                         "(threads through to quantize_keys; previously the "
+                         "dry-run silently ignored it)")
     ap.add_argument("--out", default="results/dryrun_pdf")
     args = ap.parse_args()
 
@@ -187,7 +196,7 @@ def main():
         for s in shapes:
             cid = f"pdf__{v}__{s}__{'pod2' if args.multi_pod else 'pod1'}"
             try:
-                rec = run_pdf_cell(v, s, mesh)
+                rec = run_pdf_cell(v, s, mesh, group_tol=args.group_tol)
             except Exception as e:  # noqa: BLE001
                 traceback.print_exc()
                 rec = {"ok": False, "variant": v, "shape": s, "error": str(e)}

@@ -21,7 +21,14 @@ import time
 
 from repro.core import distributions as d
 from repro.core import fitting
-from repro.core.executor import METHODS, ExecutorConfig, PDFConfig, StagedExecutor
+from repro.core import grouping as grp
+from repro.core.executor import (
+    METHODS,
+    SELECT_BACKENDS,
+    ExecutorConfig,
+    PDFConfig,
+    StagedExecutor,
+)
 from repro.core.pipeline import train_type_tree
 from repro.core.regions import CubeGeometry
 from repro.data.simulation import SeismicSimulation, SimulationConfig
@@ -38,6 +45,18 @@ def main():
     ap.add_argument("--fit-backend", default="fused",
                     choices=list(fitting.FIT_BACKENDS),
                     help="device-work implementation (DESIGN.md §2.1)")
+    ap.add_argument("--select-backend", default="host",
+                    choices=list(SELECT_BACKENDS),
+                    help="where Select's grouping dedup runs: 'host' "
+                         "(np.unique bounce) or 'device' (quantize + sort + "
+                         "gather + fit + scatter on the accelerator)")
+    ap.add_argument("--group-tol", type=float, default=grp.DEFAULT_TOL,
+                    help="grouping tolerance (paper §5.2 'acceptable "
+                         "fluctuation') for the grouping/reuse methods")
+    ap.add_argument("--rep-bucket", type=int, default=64,
+                    help="geometric padding bucket for representative "
+                         "batches (was hard-coded; 64 suits the reduced "
+                         "default workload, use 256 at paper scale)")
     ap.add_argument("--mode", default="fused", choices=["faithful", "fused"],
                     help="shared-histogram fit (default; the fused backend's "
                          "single-launch kernel path) vs paper-faithful "
@@ -66,7 +85,9 @@ def main():
                            window_lines=args.window_lines) \
         if "ml" in args.method else None
     cfg = PDFConfig(window_lines=args.window_lines, method=args.method,
-                    mode=args.mode, fit_backend=args.fit_backend, rep_bucket=64)
+                    mode=args.mode, fit_backend=args.fit_backend,
+                    select_backend=args.select_backend,
+                    group_tol=args.group_tol, rep_bucket=args.rep_bucket)
     exec_cfg = ExecutorConfig(
         prefetch=not args.serial,
         prefetch_depth=args.prefetch_depth,

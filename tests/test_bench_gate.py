@@ -1,0 +1,55 @@
+"""benchmarks/run.py --check gate logic (drift normalization + retry
+plumbing): pure-function tests — the heavy measurement paths are exercised
+by the CI gate itself."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def test_check_regressions_names_only_reproducible_breaches():
+    committed = {
+        "kernel/a": 10000.0,
+        "kernel/b": 10000.0,
+        "fig06/x": 8000.0,
+        "kernel/tiny": 100.0,  # below GATE_MIN_US: never gated
+        "fig10/overlap": 9000.0,  # non-gated prefix
+    }
+    fresh = {
+        "kernel/a": 10500.0,  # 1.05x: absorbed by drift
+        "kernel/b": 26000.0,  # 2.6x: a real regression
+        "fig06/x": 8300.0,
+        "kernel/tiny": 5000.0,  # 50x but sub-noise-floor
+        "fig10/overlap": 90000.0,  # 10x but untracked
+    }
+    assert bench_run.check_regressions(fresh, committed) == ["kernel/b"]
+
+
+def test_check_regressions_ok_returns_empty_list():
+    committed = {"kernel/a": 10000.0, "kernel/b": 20000.0}
+    fresh = {"kernel/a": 11000.0, "kernel/b": 22000.0}
+    assert bench_run.check_regressions(fresh, committed) == []
+
+
+def test_check_regressions_vacuous_gate_is_none():
+    # nothing measured, or nothing gated in the committed map: the gate must
+    # not silently pass (main exits 2 on None)
+    assert bench_run.check_regressions({}, {"kernel/a": 10000.0}) is None
+    assert bench_run.check_regressions({"kernel/a": 1.0}, {"fig10/x": 9000.0}) is None
+
+
+def test_drift_normalization_forgives_machine_phase():
+    """A uniform 1.4x machine slowdown (shared-runner phase) fails nothing."""
+    committed = {f"kernel/{i}": 10000.0 for i in range(5)}
+    fresh = {f"kernel/{i}": 14000.0 for i in range(5)}
+    assert bench_run.check_regressions(fresh, committed) == []
+
+
+@pytest.mark.parametrize("threshold_attr", ["GATE_MAX_REGRESSION", "GATE_MIN_US"])
+def test_gate_constants_exist(threshold_attr):
+    assert getattr(bench_run, threshold_attr) > 0

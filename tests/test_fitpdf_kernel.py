@@ -100,6 +100,60 @@ def test_fit_errors_chained_from_kernel_edges():
     np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-3, equal_nan=True)
 
 
+@pytest.mark.parametrize("padded_g", [4, 16])
+def test_fit_errors_row_indices_prologue(padded_g):
+    """The rep-indexed gather prologue (grouping-aware dispatch): passing
+    row_indices with per-representative moments/params is bitwise-identical
+    to pre-gathering the value rows — including repeated and padding rows."""
+    import jax
+
+    v = _window((23, 300), seed=17)
+    m = d.moments_from_values(v)
+    rng = np.random.default_rng(3)
+    idx = jnp.asarray(rng.integers(0, 23, size=padded_g), jnp.int32)
+    sub_m = jax.tree.map(lambda f: f[idx], m)
+    params_all = d.fit_all(d.TYPES_4, sub_m)
+    got = np.asarray(
+        fitpdf.fit_errors(v, sub_m, params_all, d.TYPES_4, 20, row_indices=idx)
+    )
+    want = np.asarray(fitpdf.fit_errors(v[idx], sub_m, params_all, d.TYPES_4, 20))
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (padded_g, len(d.TYPES_4))
+
+
+def test_fit_all_rows_matches_gather_then_fit():
+    """fitting.fit_all_rows == gather_rows + fit_all for every backend.
+
+    Both sides are jitted: jit-vs-eager XLA compilation differs by ~1 ulp on
+    the reference chain, and the executor runs everything jitted — what must
+    hold bitwise is jitted-rows vs jitted-gather-then-fit."""
+    import jax
+
+    v = _window((19, 256), seed=23)
+    idx = jnp.asarray([0, 5, 5, 18, 2, 0, 7, 11], jnp.int32)
+    for name in fitting.FIT_BACKENDS:
+        backend = fitting.get_fit_backend(name, 16)
+        m = backend.moments(v)
+        rows = jax.jit(
+            lambda vv, mm: fitting.fit_all_rows(
+                backend, vv, mm, idx, d.TYPES_4, 16, "fused"
+            )
+        )(v, m)
+
+        @jax.jit
+        def direct_f(vv, mm):
+            sub_v, sub_m = fitting.gather_rows(vv, mm, idx)
+            return backend.fit_all(sub_v, sub_m, d.TYPES_4, 16, "fused")
+
+        direct = direct_f(v, m)
+        np.testing.assert_array_equal(
+            np.asarray(rows.type_idx), np.asarray(direct.type_idx), err_msg=name
+        )
+        np.testing.assert_array_equal(
+            np.asarray(rows.error), np.asarray(direct.error), err_msg=name
+        )
+
+
 def test_backend_registry_names():
     assert fitting.FIT_BACKENDS == ("reference", "kernels", "fused")
     for name in fitting.FIT_BACKENDS:

@@ -1,5 +1,6 @@
 """Grouping invariants (host + device paths) — property-based."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -58,6 +59,84 @@ def test_quantize_keys_tolerance():
     assert not (k_tight[0] == k_tight[1]).all() or True  # may or may not merge
     assert (k_loose[0] == k_loose[1]).all()  # within tolerance -> same group
     assert not (k_loose[0] == k_loose[2]).all()
+
+
+# magnitudes spanning the regimes the old mod-2^31 fold got wrong: f32-grid
+# aliasing at seismic scale (~3e3 / 1e-6 tol ~ 3e9 quotients) and the
+# hash-like fold above int32 range (1e9 means).
+_MAGNITUDES = [1e-3, 1.0, 3e3, 1e6, 1e9]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    mag_i=st.integers(0, len(_MAGNITUDES) - 1),
+    negate=st.booleans(),
+    tol=st.sampled_from([1e-6, 1e-2, 3.7e-5, grp.DEFAULT_TOL]),
+    dup=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_device_keys_bitexact_with_host(n, mag_i, negate, tol, dup, seed):
+    """The tentpole invariant: quantize_keys_from_var (device hi/lo int32
+    pairs) and quantize_keys_host (f64 int64) are the SAME function, so the
+    host and device group partitions are identical — across seismic-scale
+    magnitudes, negative means, std=0 degenerates and non-default tols."""
+    rng = np.random.default_rng(seed)
+    mag = _MAGNITUDES[mag_i] * (-1 if negate else 1)
+    mean = rng.normal(mag, abs(mag) * 0.1 + 1e-3, n).astype(np.float32)
+    var = np.abs(rng.normal(100, 30, n)).astype(np.float32)
+    var[::3] = 0.0  # degenerate windows
+    # duplicated rows: the partitions must agree on real groups, not only
+    # on all-singleton windows
+    reps = rng.integers(0, n, size=n * (dup - 1)) if dup > 1 else np.array([], int)
+    mean = np.concatenate([mean, mean[reps]])
+    var = np.concatenate([var, var[reps]])
+
+    host_keys = grp.quantize_keys_host(mean, var, tol)
+    dev_keys = np.asarray(grp.quantize_keys_from_var(mean, var, tol))
+
+    # keys are bit-exact (hi/lo pairs reassemble the host int64 exactly)
+    np.testing.assert_array_equal(grp.keys_to_int64(dev_keys), host_keys)
+
+    # and so are the partitions: host np.unique vs device sort-dedup.
+    # np.unique's return_index is the first occurrence, group_device's rep
+    # is the smallest index with the key — rep_indices[inverse] is therefore
+    # directly comparable to rep_for_point.
+    host = grp.group_host(host_keys)
+    dev = grp.group_device(jnp.asarray(dev_keys))
+    assert int(dev.num_groups) == host.num_groups
+    np.testing.assert_array_equal(
+        host.rep_indices[host.inverse], np.asarray(dev.rep_for_point)
+    )
+
+
+def test_quantize_keys_jit_matches_eager():
+    """The x64 lanes survive being traced into an x64-disabled jit (the
+    executor / dry-run scenario): no constant canonicalization drift."""
+    rng = np.random.default_rng(5)
+    mean = rng.normal(3e3, 300, 64).astype(np.float32)
+    var = np.abs(rng.normal(100, 30, 64)).astype(np.float32)
+    eager = np.asarray(grp.quantize_keys_from_var(mean, var, 1e-6))
+    jitted = np.asarray(
+        jax.jit(lambda m, v: grp.quantize_keys_from_var(m, v, 1e-6))(mean, var)
+    )
+    np.testing.assert_array_equal(eager, jitted)
+
+
+def test_compact_representatives_roundtrip():
+    """gather_idx/point_slot are a device-side (rep_indices, inverse) pair."""
+    keys = jnp.asarray([[1, 1], [2, 2], [1, 1], [3, 3], [2, 2]], jnp.int32)
+    g = grp.group_device(keys)
+    gather_idx, point_slot = jax.jit(
+        grp.compact_representatives, static_argnums=(2,)
+    )(g.rep_for_point, g.is_rep, 8)
+    gather_idx, point_slot = np.asarray(gather_idx), np.asarray(point_slot)
+    assert list(gather_idx[:3]) == [0, 1, 3]  # first-occurrence order
+    np.testing.assert_array_equal(point_slot, [0, 1, 0, 2, 1])
+    # scatter path: every point receives its representative's row
+    np.testing.assert_array_equal(
+        np.asarray(keys)[gather_idx[point_slot]], np.asarray(keys)
+    )
 
 
 def test_pad_representatives_bucket():

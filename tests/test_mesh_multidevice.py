@@ -106,7 +106,9 @@ def test_compressed_pod_allreduce_multiparticipant():
 
 def test_global_grouping_shard_map():
     """group_device_global: all_gather + dedup inside shard_map matches the
-    single-shard result."""
+    single-shard result, and the DeviceGroups count contract holds —
+    num_groups is global (identical on every shard) while num_groups_local
+    (== the shard's sum(is_rep)) varies per shard and sums to the global."""
     print(run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.experimental.shard_map import shard_map
@@ -117,14 +119,30 @@ def test_global_grouping_shard_map():
         mesh = make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         keys = rng.integers(0, 5, size=(32, 2)).astype(np.int32)
+
+        def shard_fn(k):
+            g = grp.group_device_global(k, ("data",))
+            # scalars ride out as per-shard length-1 rows so the test can see
+            # every shard's value without relying on replication inference
+            return (g.rep_for_point, g.is_rep,
+                    g.num_groups[None], g.num_groups_local[None])
+
         f = jax.jit(shard_map(
-            lambda k: grp.group_device_global(k, ("data",)).rep_for_point,
-            mesh=mesh, in_specs=P("data"), out_specs=P("data")))
-        rep_global = np.asarray(f(jnp.asarray(keys)))
+            shard_fn, mesh=mesh, in_specs=P("data"),
+            out_specs=(P("data"), P("data"), P("data"), P("data"))))
+        rep, is_rep, n_glob, n_loc = (np.asarray(o) for o in f(jnp.asarray(keys)))
         rep_local = np.asarray(grp.group_device(jnp.asarray(keys)).rep_for_point)
-        np.testing.assert_array_equal(rep_global, rep_local)
-        print("GLOBAL GROUPING OK, groups:",
-              len(np.unique(keys, axis=0)))
+        np.testing.assert_array_equal(rep, rep_local)
+        n_global = len(np.unique(keys, axis=0))
+        # num_groups is the *global* count, identical on every shard...
+        np.testing.assert_array_equal(n_glob, n_global)
+        # ...while num_groups_local is each shard's sum(is_rep) — generally
+        # different from num_groups — and the locals sum to the global.
+        for i in range(4):
+            assert n_loc[i] == is_rep[i * 8:(i + 1) * 8].sum(), (i, n_loc)
+        assert n_loc.sum() == n_global, (n_loc.tolist(), n_global)
+        print("GLOBAL GROUPING OK, groups:", n_global,
+              "per-shard:", n_loc.tolist())
     """))
 
 

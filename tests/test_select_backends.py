@@ -1,0 +1,132 @@
+"""Select-backend equivalence (the grouping-aware fused dispatch issue's
+acceptance matrix): select_backend='device' must produce *bitwise-identical*
+per-point (type, params, error) to the host Select path for every grouped
+method on both candidate sets — the device hi/lo keys are exact splits of the
+host f64 int64 keys, and every fit backend is row-deterministic, so moving
+the dedup onto the device cannot change a single bit."""
+
+import numpy as np
+import pytest
+
+from repro.core import distributions as d
+from repro.core.executor import SELECT_BACKENDS
+from repro.core.pipeline import PDFComputer, PDFConfig, train_type_tree
+from repro.core.regions import CubeGeometry
+from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+GROUPED_METHODS = ("grouping", "reuse", "grouping_ml", "reuse_ml")
+
+
+@pytest.mark.parametrize("mag", [1e-3, 1.0, 3e3, 1e6, 1e9, -3e3, -1e9])
+@pytest.mark.parametrize("tol", [1e-6, 3.7e-5, 1e-2])
+def test_device_keys_bitexact_with_host_deterministic(mag, tol):
+    """Deterministic twin of the hypothesis property test in
+    tests/test_grouping.py (that module importorskips hypothesis, which the
+    reduced container lacks — this version always runs): device hi/lo keys
+    reassemble the host int64 keys exactly, and the two partitions agree,
+    at seismic-scale magnitudes, negative means, std=0 and non-default tols.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import grouping as grp
+
+    rng = np.random.default_rng(int(abs(mag)) % 997 + int(tol * 1e7) % 97)
+    mean = rng.normal(mag, abs(mag) * 0.1 + 1e-3, 300).astype(np.float32)
+    var = np.abs(rng.normal(100, 30, 300)).astype(np.float32)
+    var[::3] = 0.0  # degenerate windows
+    reps = rng.integers(0, 300, size=200)  # real duplicate groups
+    mean = np.concatenate([mean, mean[reps]])
+    var = np.concatenate([var, var[reps]])
+
+    host_keys = grp.quantize_keys_host(mean, var, tol)
+    dev_keys = np.asarray(grp.quantize_keys_from_var(mean, var, tol))
+    np.testing.assert_array_equal(grp.keys_to_int64(dev_keys), host_keys)
+
+    host = grp.group_host(host_keys)
+    dev = grp.group_device(jnp.asarray(dev_keys))
+    assert int(dev.num_groups) == host.num_groups
+    np.testing.assert_array_equal(
+        host.rep_indices[host.inverse], np.asarray(dev.rep_for_point)
+    )
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SeismicSimulation(
+        SimulationConfig(geometry=CubeGeometry(8, 6, 10), num_simulations=200)
+    )
+
+
+@pytest.fixture(scope="module")
+def trees(sim):
+    return {
+        len(types): train_type_tree(sim, types, window_lines=2)
+        for types in (d.TYPES_4, d.TYPES_10)
+    }
+
+
+def test_registry_and_default():
+    assert SELECT_BACKENDS == ("host", "device")
+    assert PDFConfig().select_backend == "host"
+    with pytest.raises(ValueError, match="select_backend"):
+        PDFConfig(select_backend="gpu")
+    with pytest.raises(ValueError, match="rep_bucket"):
+        PDFConfig(rep_bucket=0)  # padded_size(g, 0) would never terminate
+
+
+@pytest.mark.parametrize("types", [d.TYPES_4, d.TYPES_10], ids=["4types", "10types"])
+@pytest.mark.parametrize("method", GROUPED_METHODS)
+def test_device_select_bitwise_matches_host(sim, trees, method, types):
+    tree = trees[len(types)] if "ml" in method else None
+    res, fitted, hits = {}, {}, {}
+    for backend in SELECT_BACKENDS:
+        cfg = PDFConfig(
+            types=types, window_lines=2, method=method, select_backend=backend
+        )
+        comp = PDFComputer(cfg, sim, tree=tree)
+        res[backend] = comp.run_slice(4)
+        fitted[backend] = [w.num_fitted for w in res[backend].stats]
+        hits[backend] = [w.cache_hits for w in res[backend].stats]
+    a, b = res["host"], res["device"]
+    np.testing.assert_array_equal(a.type_idx, b.type_idx)
+    np.testing.assert_array_equal(a.params, b.params)  # bitwise
+    np.testing.assert_array_equal(a.error, b.error)  # bitwise
+    np.testing.assert_array_equal(a.mean, b.mean)
+    # the dedup bookkeeping agrees too: same per-window group counts, and
+    # for the reuse methods the same cache hit trajectory
+    assert fitted["host"] == fitted["device"]
+    assert hits["host"] == hits["device"]
+
+
+@pytest.mark.parametrize("fit_backend", ["reference", "fused"])
+def test_device_select_across_fit_backends(sim, fit_backend):
+    """The device Select path is fit-backend generic: the gather prologue
+    feeds whichever backend the config selects."""
+    res = {}
+    for backend in SELECT_BACKENDS:
+        cfg = PDFConfig(
+            types=d.TYPES_4, window_lines=2, method="grouping",
+            select_backend=backend, fit_backend=fit_backend,
+        )
+        res[backend] = PDFComputer(cfg, sim).run_slice(2)
+    np.testing.assert_array_equal(res["host"].type_idx, res["device"].type_idx)
+    np.testing.assert_array_equal(res["host"].params, res["device"].params)
+    np.testing.assert_array_equal(res["host"].error, res["device"].error)
+
+
+def test_device_select_nondefault_tol(sim):
+    """group_tol threads through the device probe (the dry-run used to drop
+    it): a loose tolerance must group more aggressively on both backends,
+    identically."""
+    fitted = {}
+    for backend in SELECT_BACKENDS:
+        for tol in (1e-6, 1e2):
+            cfg = PDFConfig(
+                types=d.TYPES_4, window_lines=2, method="grouping",
+                select_backend=backend, group_tol=tol,
+            )
+            r = PDFComputer(cfg, sim).run_slice(3)
+            fitted[(backend, tol)] = sum(w.num_fitted for w in r.stats)
+    assert fitted[("host", 1e-6)] == fitted[("device", 1e-6)]
+    assert fitted[("host", 1e2)] == fitted[("device", 1e2)]
+    assert fitted[("device", 1e2)] <= fitted[("device", 1e-6)]
