@@ -2,7 +2,14 @@
 
 All benchmarks run REDUCED workloads sized for this single-CPU container but
 keep the paper's structure (same method code paths, same ratios of
-points/observations). Rows: ``name,us_per_call,derived``.
+points/observations). Rows: ``name,us_per_call,derived`` — and every row
+that measured a pipeline run carries the run's ``PipelineSpec`` content
+hash (``spec_hash``), which ``run.py`` persists alongside the timing in
+``BENCH_pipeline.json`` (``__specs__``) so a tracked number can always be
+traced back to the exact declarative spec that produced it.
+
+Runs are constructed through the public API (``PipelineSpec`` +
+``PDFSession``): no benchmark declares a pipeline knob outside the spec.
 """
 
 from __future__ import annotations
@@ -12,15 +19,22 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    source_spec_for,
+)
 from repro.core import distributions as d
 from repro.core import ml_predict as mlp
-from repro.core.pipeline import ExecutorConfig, PDFComputer, PDFConfig
 from repro.core.regions import CubeGeometry
 from repro.data.simulation import SeismicSimulation, SimulationConfig
 
 # the pre-refactor strictly serial loop (no prefetch, sync persist): the
 # reference path the staged executor's overlap is measured against
-SERIAL = ExecutorConfig(prefetch=False, async_persist=False)
+SERIAL = ExecSpec(prefetch=False, async_persist=False)
 
 
 @dataclass
@@ -28,6 +42,7 @@ class Row:
     name: str
     us_per_call: float
     derived: str = ""
+    spec_hash: str = ""  # PipelineSpec.content_hash() of the measured run
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
@@ -51,30 +66,43 @@ def train_type_tree(sim, types=d.TYPES_4, slices=(0, 1, 2, 3),
     return _ttt(sim, types=types, slices=slices, window_lines=window_lines)
 
 
+def method_spec(sim, method: str, types, window_lines: int,
+                mode: str = "faithful",
+                exec_config: ExecSpec | None = None, **method_kw) -> PipelineSpec:
+    """The one place benchmarks turn knobs into a spec. ``rep_bucket=32``
+    is sized for the reduced workloads (the default 64+ would pad grouped
+    batches past the baseline's size on these small windows)."""
+    return PipelineSpec(
+        source=source_spec_for(sim),
+        method=MethodSpec(name=method, rep_bucket=32, **method_kw),
+        compute=ComputeSpec(types=tuple(types), window_lines=window_lines,
+                            mode=mode),
+        execution=exec_config if exec_config is not None else ExecSpec(),
+    )
+
+
 def run_method(sim, method: str, types, window_lines: int, slice_i: int,
                tree=None, mode: str = "faithful", warmup: bool = True,
-               exec_config: ExecutorConfig | None = None, reps: int = 1):
-    """Runs one slice through the staged executor (default overlapped config;
+               exec_config: ExecSpec | None = None, reps: int = 1):
+    """Runs one slice through a ``PDFSession`` (default overlapped config;
     pass ``exec_config=SERIAL`` for the reference serial path). Returns
-    (SliceResult, wall_seconds); per-stage totals are on
-    ``res`` stats / the computer's ``last_report``. ``reps > 1`` repeats the
-    measured slice and keeps the best-compute run — container noise is
-    strictly additive, so the min is the estimator stable enough for the
-    ``run.py --check`` gate to diff across runs."""
-    # rep_bucket sized for the reduced workloads (the default 256 would pad
-    # grouped batches past the baseline's size on these small windows)
-    cfg = PDFConfig(types=types, window_lines=window_lines, method=method,
-                    mode=mode, rep_bucket=32)
+    (SliceResult, wall_seconds); per-stage totals are on ``res`` stats /
+    the session's ``report()``, and ``res.spec_hash`` identifies the spec.
+    ``reps > 1`` repeats the measured slice and keeps the best-compute run —
+    container noise is strictly additive, so the min is the estimator stable
+    enough for the ``run.py --check`` gate to diff across runs."""
+    spec = method_spec(sim, method, types, window_lines, mode=mode,
+                       exec_config=exec_config)
     if warmup:
         # trigger jit compilation for this method's shapes on another slice
-        PDFComputer(cfg, sim, tree=tree, exec_config=exec_config).run_slice(
-            (slice_i + 1) % sim.geometry.num_slices
+        PDFSession(spec, data_source=sim, tree=tree).run_all(
+            [(slice_i + 1) % sim.geometry.num_slices]
         )
     runs = []
     for _ in range(max(reps, 1)):
-        comp = PDFComputer(cfg, sim, tree=tree, exec_config=exec_config)
+        session = PDFSession(spec, data_source=sim, tree=tree)
         t0 = time.perf_counter()
-        res = comp.run_slice(slice_i)
+        res = session.run_all([slice_i])[slice_i]
         runs.append((time.perf_counter() - t0, res))
     # Keep the best-compute run's own wall so (res, wall) stay consistent
     # (overlap stats derive from their difference).

@@ -38,6 +38,7 @@ def run(quick: bool = True):
                     f"fig06/{tag}/{method}",
                     compute * 1e6,
                     f"speedup={speedup:.2f}x err={res.avg_error:.4f}",
+                    spec_hash=res.spec_hash or "",
                 )
             )
     return rows

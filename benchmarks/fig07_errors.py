@@ -19,7 +19,9 @@ def run(quick: bool = True):
                 sim, method, types, 4, 3, tree=tree if method == "ml" else None
             )
             errs[(tag, label)] = res.avg_error
-            rows.append(Row(f"fig07/{tag}/{label}", wall * 1e6, f"E={res.avg_error:.4f}"))
+            rows.append(Row(f"fig07/{tag}/{label}", wall * 1e6,
+                            f"E={res.avg_error:.4f}",
+                            spec_hash=res.spec_hash or ""))
     delta4 = errs[("4types", "WithML")] - errs[("4types", "NoML")]
     rows.append(Row("fig07/ml_error_penalty_4types", 0.0, f"delta={delta4:.4f}"))
     return rows

@@ -20,7 +20,8 @@ def run(quick: bool = True):
             best = (wl, per_line)
         rows.append(
             Row(f"fig08/window_{wl:02d}_lines", per_line * 1e6,
-                f"fitted={sum(s.num_fitted for s in res.stats)}")
+                f"fitted={sum(s.num_fitted for s in res.stats)}",
+                spec_hash=res.spec_hash or "")
         )
     rows.append(Row("fig08/optimal_window", best[1] * 1e6, f"lines={best[0]}"))
     return rows

@@ -38,6 +38,7 @@ def run(quick: bool = True):
                 c * 1e6,
                 f"speedup={base / max(c, 1e-9):.2f}x E={res.avg_error:.4f} "
                 f"fitted={sum(s.num_fitted for s in res.stats)}",
+                spec_hash=res.spec_hash or "",
             )
         )
 

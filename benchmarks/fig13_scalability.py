@@ -55,8 +55,10 @@ def run(quick: bool = True):
     key_bytes = 16.0
 
     rows = [
-        Row("fig13/measured/w_fit_per_point", w_fit * 1e6, f"groups={groups}/{points}"),
-        Row("fig13/measured/w_fit_ml_per_point", w_fit_ml * 1e6, ""),
+        Row("fig13/measured/w_fit_per_point", w_fit * 1e6,
+            f"groups={groups}/{points}", spec_hash=res_b.spec_hash or ""),
+        Row("fig13/measured/w_fit_ml_per_point", w_fit_ml * 1e6, "",
+            spec_hash=res_m.spec_hash or ""),
         Row("fig13/measured/load_hidden", hidden * 1e6,
             f"frac={hidden_frac:.0%} load={res_b.total_load_seconds * 1e3:.1f}ms "
             f"wait={res_b.total_wait_seconds * 1e3:.1f}ms "

@@ -5,79 +5,91 @@ Paper: data-loading time falls ~linearly with rate; PDF-computation stays
 rate; the type-percentage distance to the full population shrinks with rate
 (random) while k-means is better at tiny rates.
 
+Sampling is a first-class ``MethodSpec`` entry now: every row here runs
+``method='sampling'`` through the same staged executor as the fitting
+methods (PipelineSpec + PDFSession — no hand-wired moments/classify glue).
 The population mixes two slices of different dominant types so the
-type-percentage vector is non-trivial (our synthetic slices are type-pure).
-Moment computation per rate is warmed up before timing (jit compile excluded,
-as for every other figure).
+type-percentage vector is non-trivial (our synthetic slices are type-pure);
+per-slice sampled counts combine into the population percentage. Rate 1.0
+with the random sampler classifies every point — the full-population
+reference the distances are measured against.
 """
 
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ComputeSpec, MethodSpec, PDFSession, PipelineSpec, source_spec_for
 from repro.core import distributions as d
 from repro.core import sampling as smp
-from repro.core.regions import Window
 from benchmarks.common import Row, small_sim, train_type_tree
-from repro.kernels.moments import moments
+
+SLICES = (2, 3)  # exponential + uniform dominant layers
+
+
+def _sampling_spec(sim, rate: float, sampler: str, iters: int = 10) -> PipelineSpec:
+    return PipelineSpec(
+        source=source_spec_for(sim),
+        method=MethodSpec(name="sampling", sample_frac=rate, sampler=sampler,
+                          kmeans_iters=iters),
+        # one window per slice: the sampler's scope matches the paper's
+        # slice-level Algorithm 5
+        compute=ComputeSpec(window_lines=sim.geometry.lines_per_slice),
+    )
+
+
+def _population_pct(results, num_types: int):
+    """Combine per-slice sampled classifications into population-level type
+    percentages (weighted by each slice's sampled count)."""
+    counts = np.zeros(num_types, dtype=np.float64)
+    sampled = 0
+    for r in results.values():
+        m = r.type_idx >= 0
+        counts += np.bincount(r.type_idx[m], minlength=num_types)
+        sampled += int(m.sum())
+    return counts / max(sampled, 1), sampled
 
 
 def run(quick: bool = True):
     sim = small_sim(lines=16, ppl=40, num_simulations=250 if quick else 1000)
     tree = train_type_tree(sim)
-    geom = sim.geometry
-    # mixed population: slice 2 (exponential) + slice 3 (uniform)
-    vals = np.concatenate(
-        [
-            sim.load_window(Window(s, 0, geom.lines_per_slice))
-            for s in (2, 3)
-        ]
-    )
-    m_all = moments(jnp.asarray(vals))
-    mean_all = np.asarray(m_all.mean)
-    std_all = np.asarray(m_all.std)
-    sk_all = np.asarray(m_all.skew)
-    ku_all = np.asarray(m_all.kurt)
-    full = smp.slice_features_from_moments(
-        mean_all, std_all, tree, d.TYPES_4, skew=sk_all, kurt=ku_all
-    )
+    t_count = len(d.TYPES_4)
+
+    def measure(rate: float, sampler: str, iters: int = 10):
+        spec = _sampling_spec(sim, rate, sampler, iters)
+        # warm this rate's sampled-subset shapes (moments + tree predict jit
+        # compile per distinct sample size) off the clock, like every figure
+        PDFSession(spec, data_source=sim, tree=tree).run_all(SLICES)
+        session = PDFSession(spec, data_source=sim, tree=tree)
+        t0 = time.perf_counter()
+        results = session.run_all(SLICES)
+        wall = time.perf_counter() - t0
+        pct, sampled = _population_pct(results, t_count)
+        return spec, wall, pct, sampled
+
+    # the full-population reference (rate 1.0 == classify everything;
+    # Fig. 17's baseline the distances are measured against)
+    _, _, full_pct, _ = measure(1.0, "random")
 
     rows = []
     for rate in [0.001, 0.01, 0.1, 0.5, 1.0]:
-        idx = smp.sample_indices_random(len(mean_all), rate, seed=1)
-        sub = jnp.asarray(vals[idx])
-        jax.block_until_ready(moments(sub))  # warm the (len(idx), n) shape
-        t0 = time.perf_counter()
-        m = jax.block_until_ready(moments(sub))
-        t_load = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        f = smp.slice_features_from_moments(
-            np.asarray(m.mean), np.asarray(m.std), tree, d.TYPES_4,
-            skew=np.asarray(m.skew), kurt=np.asarray(m.kurt),
-        )
-        t_pdf = time.perf_counter() - t1
-        dist = smp.type_percentage_distance(f.type_percentage, full.type_percentage)
+        spec, wall, pct, sampled = measure(rate, "random")
+        dist = smp.type_percentage_distance(pct, full_pct)
         rows.append(
-            Row(f"fig15/random_rate_{rate}", (t_load + t_pdf) * 1e6,
-                f"load={t_load*1e3:.1f}ms pdf={t_pdf*1e3:.1f}ms dist={dist:.4f} "
-                f"pts={len(idx)}")
+            Row(f"fig15/random_rate_{rate}", wall * 1e6,
+                f"dist={dist:.4f} pts={sampled}",
+                spec_hash=spec.content_hash())
         )
-    # k-means sampling (fig 16/17)
-    feats = np.stack([mean_all, std_all], 1)
+    # k-means "double sampling" (fig 16/17): costs more at the same rate,
+    # buys accuracy at tiny rates
     for rate in [0.01, 0.1, 0.2]:
-        t0 = time.perf_counter()
-        idx = smp.sample_indices_kmeans(feats, rate, iters=5, seed=1)
-        t_kmeans = time.perf_counter() - t0
-        f = smp.slice_features_from_moments(
-            mean_all[idx], std_all[idx], tree, d.TYPES_4,
-            skew=sk_all[idx], kurt=ku_all[idx],
-        )
-        dist = smp.type_percentage_distance(f.type_percentage, full.type_percentage)
+        spec, wall, pct, sampled = measure(rate, "kmeans", iters=5)
+        dist = smp.type_percentage_distance(pct, full_pct)
         rows.append(
-            Row(f"fig16/kmeans_rate_{rate}", t_kmeans * 1e6, f"dist={dist:.4f}")
+            Row(f"fig16/kmeans_rate_{rate}", wall * 1e6,
+                f"dist={dist:.4f} pts={sampled}",
+                spec_hash=spec.content_hash())
         )
     return rows

@@ -30,10 +30,13 @@ def run(quick: bool = True):
         # for representative re-dispatch (the host->device second pass)
         payload = sum(s.num_fitted for s in res_g.stats) * obs * 4
         summary[tag] = (cb / cg, cb / cm)
-        rows.append(Row(f"fig18/{tag}/baseline", cb * 1e6, ""))
+        rows.append(Row(f"fig18/{tag}/baseline", cb * 1e6, "",
+                        spec_hash=res_b.spec_hash or ""))
         rows.append(Row(f"fig18/{tag}/grouping", cg * 1e6,
-                        f"speedup={cb/cg:.2f}x payload={payload/1e6:.1f}MB"))
-        rows.append(Row(f"fig18/{tag}/ml", cm * 1e6, f"speedup={cb/cm:.2f}x"))
+                        f"speedup={cb/cg:.2f}x payload={payload/1e6:.1f}MB",
+                        spec_hash=res_g.spec_hash or ""))
+        rows.append(Row(f"fig18/{tag}/ml", cm * 1e6, f"speedup={cb/cm:.2f}x",
+                        spec_hash=res_m.spec_hash or ""))
     g1, m1 = summary["obs_1x"]
     g10, m10 = summary["obs_10x"]
     rows.append(

@@ -46,6 +46,8 @@ def check_regressions(
     that pass."""
     ratios: dict[str, float] = {}
     for name, old in committed.items():
+        if not isinstance(old, (int, float)):
+            continue  # side maps (e.g. __specs__) are not timing rows
         if not name.startswith(GATE_PREFIXES) or old <= GATE_MIN_US:
             continue
         new = fresh.get(name)
@@ -107,6 +109,7 @@ def main() -> None:
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}
+    specs: dict[str, str] = {}  # row name -> PipelineSpec content hash
     row_module: dict[str, object] = {}  # row name -> module that measured it
 
     def measure(mod, quiet: bool = False) -> None:
@@ -117,6 +120,8 @@ def main() -> None:
                 print(r.csv())
             results[r.name] = round(r.us_per_call, 1)
             row_module[r.name] = mod
+            if getattr(r, "spec_hash", ""):
+                specs[r.name] = r.spec_hash
         print(f"# {mod.__name__} total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
 
     print("name,us_per_call,derived")
@@ -163,15 +168,22 @@ def main() -> None:
 
     if args.json_out and results:
         # merge into any existing map so a --only run refreshes its rows
-        # without clobbering the other figures' tracked numbers
+        # without clobbering the other figures' tracked numbers; the
+        # "__specs__" side map (row -> PipelineSpec content hash) merges the
+        # same way so every tracked number stays traceable to its spec
         out_path = Path(args.json_out)
+        merged_specs: dict[str, str] = {}
         if out_path.exists():
             try:
                 merged = json.loads(out_path.read_text())
             except (json.JSONDecodeError, OSError):
                 merged = {}  # corrupt/truncated previous file: overwrite
+            merged_specs = merged.pop("__specs__", {})
             merged.update(results)
             results = merged
+        merged_specs.update(specs)
+        if merged_specs:
+            results["__specs__"] = merged_specs
         out_path.write_text(json.dumps(results, indent=1, sort_keys=True))
         print(f"# wrote {args.json_out} ({len(results)} entries)", file=sys.stderr)
 

@@ -1,11 +1,14 @@
 """End-to-end driver (the paper's kind of workload): a full slice through
-the production pipeline — windowed loading, method comparison, per-window
-persistence, crash + restart, and slice-feature sampling.
+the production pipeline — slice-feature sampling, method comparison, crash +
+restart — every stage declared as a ``PipelineSpec`` and run by a
+``PDFSession``. The specs differ only in their ``MethodSpec``; everything
+else (cube, windowing, backends) is declared once and shared.
 
-  PYTHONPATH=src python examples/pdf_full_slice.py [--obs 500] [--method all]
+  PYTHONPATH=src python examples/pdf_full_slice.py [--obs 500] [--method grouping]
 """
 
 import argparse
+import dataclasses
 import shutil
 import tempfile
 import time
@@ -13,75 +16,80 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import distributions as d
-from repro.core import ml_predict as mlp
-from repro.core import sampling as smp
-from repro.core.pipeline import PDFComputer, PDFConfig
-from repro.core.regions import CubeGeometry, Window
-from repro.data.simulation import SeismicSimulation, SimulationConfig
-from repro.kernels.moments import moments
-
-import jax.numpy as jnp
+from repro.api import (
+    ComputeSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    add_spec_args,
+    explicit_fields,
+    spec_from_args,
+)
 
 METHODS = ["baseline", "grouping", "reuse", "ml", "grouping_ml"]
+SLICE = 6
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--obs", type=int, default=400)
-    ap.add_argument("--lines", type=int, default=24)
-    ap.add_argument("--ppl", type=int, default=60)
-    ap.add_argument("--method", default="all")
-    ap.add_argument("--types", default="4", choices=["4", "10"])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_spec_args(ap)  # every pipeline knob, incl. --method/--types/--obs
     args = ap.parse_args()
-
-    types = d.TYPES_4 if args.types == "4" else d.TYPES_10
-    sim = SeismicSimulation(
-        SimulationConfig(
-            geometry=CubeGeometry(8, args.lines, args.ppl),
-            num_simulations=args.obs,
-        )
+    base = PipelineSpec(
+        source=dataclasses.replace(
+            PipelineSpec().source, num_slices=8, observations=400),
+        compute=ComputeSpec(window_lines=6, mode="faithful"),
     )
-    slice_i = 6
+    spec = spec_from_args(args, base=base)
+    # default: compare all methods; an explicit --method narrows to one
+    methods = [spec.method.name] if "method.name" in explicit_fields(args) \
+        else METHODS
+
+    def with_method(**method_kw) -> PipelineSpec:
+        return dataclasses.replace(
+            spec, method=dataclasses.replace(spec.method, **method_kw))
 
     # --- sampling first (Algorithm 5): choose the slice cheaply -------------
+    # method='sampling' classifies a fraction of points with the decision
+    # tree — no Eq.-5 fitting — through the same executor as every method.
     t0 = time.perf_counter()
-    from repro.core.pipeline import train_type_tree
-    tree = train_type_tree(sim, types=types, window_lines=6)
-    vals = sim.load_window(Window(slice_i, 0, 2))
-    m = moments(jnp.asarray(vals))
-    f = smp.slice_features_from_moments(
-        np.asarray(m.mean), np.asarray(m.std), tree, types,
-        skew=np.asarray(m.skew), kurt=np.asarray(m.kurt)
-    )
-    print(f"[sampling] slice {slice_i} features in {time.perf_counter()-t0:.2f}s: "
+    s_spec = with_method(name="sampling", sample_frac=0.25)
+    s_session = PDFSession(s_spec)
+    tree = s_session.tree  # trained once (§5.3.1), shared by every run below
+    res = s_session.run_all([SLICE])[SLICE]
+    f = res.features(spec.compute.types)
+    print(f"[sampling] slice {SLICE} features in {time.perf_counter()-t0:.2f}s: "
           f"avg_mu={f.avg_mean:.1f} avg_sigma={f.avg_std:.2f} "
-          f"pct={np.round(f.type_percentage, 3)}")
+          f"pct={np.round(f.type_percentage, 3)} "
+          f"({f.num_sampled} points, spec {s_spec.content_hash()})")
 
     # --- full methods comparison on the chosen slice ------------------------
-    methods = METHODS if args.method == "all" else [args.method]
+    sim = s_session.source  # share the generator across sessions
     base_time = None
     for method in methods:
-        cfg = PDFConfig(types=types, window_lines=6, method=method,
-                        mode="faithful", rep_bucket=64)
+        m_spec = with_method(name=method)
         # warm the jit cache on another slice so timings exclude compilation
-        PDFComputer(cfg, sim, tree=tree if "ml" in method else None).run_slice(1)
-        comp = PDFComputer(cfg, sim, tree=tree if "ml" in method else None)
-        res = comp.run_slice(slice_i)
+        PDFSession(m_spec, data_source=sim, tree=tree).run_all([1])
+        session = PDFSession(m_spec, data_source=sim, tree=tree)
+        res = session.run_all([SLICE])[SLICE]
         c = res.total_compute_seconds
         base_time = c if method == "baseline" else base_time
-        rep = comp.last_report  # staged-executor per-stage totals
-        print(f"[{method:12s}] compute {c:7.2f}s  speedup {base_time/max(c,1e-9):5.2f}x  "
+        rep = session.report()  # per-stage totals (staged executor)
+        cache = session.executor(0).cache
+        print(f"[{method:12s}] compute {c:7.2f}s  "
+              f"speedup {(base_time or c)/max(c,1e-9):5.2f}x  "
               f"E={res.avg_error:.4f}  fitted {sum(s.num_fitted for s in res.stats)}"
-              f"/{sim.geometry.points_per_slice}"
+              f"/{session.geometry.points_per_slice}"
               f"  load_hidden={rep.load_hidden_fraction:.0%}"
-              + (f"  cache_hits={comp.cache.hits}" if method.startswith("reuse") else ""))
+              + (f"  cache_hits={cache.hits}" if method.startswith("reuse") else ""))
 
-    # --- fault tolerance: crash after 2 windows, restart from watermark -----
+    # --- fault tolerance: crash after 1 window, restart from watermark ------
+    # The watermark carries the spec's content hash, so resume refuses to
+    # mix windows persisted by a different computation.
     out = Path(tempfile.mkdtemp(prefix="pdf_ckpt_"))
     try:
-        cfg = PDFConfig(types=types, window_lines=6, method="grouping_ml", rep_bucket=64)
-        comp = PDFComputer(cfg, sim, tree=tree, out_dir=out)
+        c_spec = dataclasses.replace(
+            with_method(name="grouping_ml"),
+            execution=dataclasses.replace(spec.execution, out_dir=str(out)))
         count = 0
 
         class Crash(Exception):
@@ -93,14 +101,15 @@ def main():
             if count == 1:
                 raise Crash()
 
+        session = PDFSession(c_spec, data_source=sim, tree=tree)
         try:
-            comp.run_slice(slice_i, on_window=crash)
+            session.run_all([SLICE], on_window=crash)
         except Crash:
+            mark = session.executor(0).watermark(SLICE)
             print(f"[restart] simulated crash after 1 window "
-                  f"(watermark at line {comp._watermark(slice_i)})")
-        resumed = PDFComputer(cfg, sim, tree=tree, out_dir=out).run_slice(
-            slice_i, resume=True
-        )
+                  f"(watermark at line {mark}, spec {c_spec.content_hash()})")
+        resumed = PDFSession(c_spec, data_source=sim, tree=tree).run_all(
+            [SLICE], resume=True)[SLICE]
         print(f"[restart] resumed: {len(resumed.stats)} windows re-run, "
               f"E={resumed.avg_error:.4f} (matches full run)")
     finally:

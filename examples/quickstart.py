@@ -1,49 +1,61 @@
 """Quickstart: compute PDFs of a spatial slice in ~30 seconds on CPU.
 
-Generates a small seismic cube (the paper's Monte-Carlo structure), runs the
-paper's winning method (Grouping + ML prediction), and prints the per-type
-percentages + average Eq.-6 error.
+One declarative ``PipelineSpec`` describes the whole run — the synthetic
+seismic cube (the paper's Monte-Carlo structure), the paper's winning
+method (Grouping + ML prediction), and the execution strategy — and a
+``PDFSession`` executes it. The spec JSON printed below is a complete,
+replayable description of this run: save it to a file and
+``python -m repro.launch.run_pdf --spec FILE`` reproduces it (same
+content hash, same results).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    SourceSpec,
+)
 from repro.core import distributions as d
-from repro.core import ml_predict as mlp
-from repro.core.pipeline import PDFComputer, PDFConfig
-from repro.core.regions import CubeGeometry
-from repro.data.simulation import SeismicSimulation, SimulationConfig
 
 
 def main():
-    sim = SeismicSimulation(
-        SimulationConfig(geometry=CubeGeometry(16, 12, 40), num_simulations=400)
+    spec = PipelineSpec(
+        # a small cube: 16 slices x 12 lines x 40 points, 400 observations
+        source=SourceSpec(num_slices=16, lines_per_slice=12,
+                          points_per_line=40, observations=400),
+        # the paper's winner (§6): group identical (mu, sigma) points, let
+        # the decision tree skip the per-type Eq.-5 search
+        method=MethodSpec(name="grouping_ml", error_bound=0.5),
+        compute=ComputeSpec(window_lines=4, num_bins=20),
+        execution=ExecSpec(slices=(6,)),
     )
+    print(f"spec {spec.content_hash()}:")
+    print(spec.to_json())
+
+    session = PDFSession(spec)
+    sim = session.source
     print(f"cube: {sim.geometry}, {sim.config.num_simulations} observations/point "
           f"({sim.nominal_bytes() / 1e6:.0f} MB if materialized)")
 
-    # 1-2) 'previously generated output data' (baseline over slices 0-3)
-    #      -> decision tree (§5.3.1).
-    from repro.core.pipeline import train_type_tree
-    tree = train_type_tree(sim)
-    print("trained (mu, sigma) -> type decision tree on slices 0-3")
-
-    # 3) run the paper's winner (Grouping + ML) on the slice of interest.
-    comp = PDFComputer(
-        PDFConfig(window_lines=4, method="grouping_ml", num_bins=20, error_bound=0.5),
-        sim, tree=tree,
-    )
-    res = comp.run_slice(6)
-    fitted = sum(s.num_fitted for s in res.stats)
-    pct = np.bincount(res.type_idx, minlength=4) / len(res.type_idx)
-    print(f"slice 6 grouping+ml: E={res.avg_error:.4f} "
-          f"(bound satisfied: {res.error_bound_satisfied})")
-    print(f"  fitted {fitted}/{len(res.type_idx)} points "
-          f"({res.total_compute_seconds:.2f}s compute, "
-          f"{res.total_load_seconds:.2f}s load)")
-    for t, p in zip(d.TYPES_4, pct):
-        print(f"  {t:12s} {p:6.1%}")
+    # The session trains the (mu, sigma) -> type decision tree on first use
+    # (§5.3.1: baseline over the spec's training slices) and streams one
+    # SliceResult per requested slice.
+    for res in session.run():
+        fitted = sum(s.num_fitted for s in res.stats)
+        pct = np.bincount(res.type_idx, minlength=4) / len(res.type_idx)
+        print(f"slice {res.slice_i} grouping+ml: E={res.avg_error:.4f} "
+              f"(bound satisfied: {res.error_bound_satisfied})")
+        print(f"  fitted {fitted}/{len(res.type_idx)} points "
+              f"({res.total_compute_seconds:.2f}s compute, "
+              f"{res.total_load_seconds:.2f}s load)")
+        for t, p in zip(d.TYPES_4, pct):
+            print(f"  {t:12s} {p:6.1%}")
 
 
 if __name__ == "__main__":

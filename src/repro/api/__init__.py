@@ -1,0 +1,46 @@
+"""Public API: one declarative ``PipelineSpec`` + ``PDFSession`` runner.
+
+    from repro.api import PipelineSpec, MethodSpec, PDFSession
+
+    spec = PipelineSpec(method=MethodSpec(name="grouping_ml"))
+    for result in PDFSession(spec).run(slices=[0, 1]):
+        print(result.slice_i, result.avg_error)
+
+Specs round-trip through JSON (``to_json``/``from_json``), carry a stable
+content hash (``content_hash``) stamped into persisted watermarks and BENCH
+rows, and generate the CLI surface of every launcher (``api.cli``). See
+DESIGN.md §API.
+"""
+
+from repro.api.cli import add_spec_args, explicit_fields, spec_from_args
+from repro.api.session import PDFSession, SessionReport
+from repro.api.spec import (
+    SPEC_VERSION,
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PipelineSpec,
+    SourceSpec,
+    TreeSpec,
+    build_source,
+    source_spec_for,
+    spec_from_config,
+)
+
+__all__ = [
+    "SPEC_VERSION",
+    "ComputeSpec",
+    "ExecSpec",
+    "MethodSpec",
+    "PDFSession",
+    "PipelineSpec",
+    "SessionReport",
+    "SourceSpec",
+    "TreeSpec",
+    "add_spec_args",
+    "build_source",
+    "explicit_fields",
+    "source_spec_for",
+    "spec_from_args",
+    "spec_from_config",
+]

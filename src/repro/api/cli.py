@@ -1,0 +1,123 @@
+"""Argparse flags generated from the spec — declared once, used everywhere.
+
+``add_spec_args(parser)`` walks the ``PipelineSpec`` dataclass tree and
+registers one flag per field from the field's own metadata (help text,
+choices, parser), plus ``--spec FILE`` (load a JSON spec) and ``--serial``
+(the prefetch+async-persist kill switch the launchers always offered).
+``spec_from_args(parsed)`` rebuilds the spec: start from ``--spec``'s JSON
+(or the launcher's ``base`` spec, or all defaults) and overlay *only the
+flags the user actually passed* — generated flags default to
+``argparse.SUPPRESS``, so a launcher-specific base default (e.g. the
+dry-run's 20 bins) survives unless overridden explicitly.
+
+No consumer declares a pipeline knob by hand anymore: adding a field to a
+spec dataclass (with its ``_meta``) is all it takes for every launcher,
+benchmark, and example to grow the flag — the drift class where one surface
+silently dropped ``--group-tol`` (PR 3's dryrun fix) cannot recur.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from dataclasses import fields
+from pathlib import Path
+
+from repro.api.spec import _GROUPS, PipelineSpec
+
+
+def _dest(path: str, name: str) -> str:
+    return f"spec__{path.replace('.', '_')}__{name}"
+
+
+def _iter_flag_fields():
+    for path, cls, prefix in _GROUPS:
+        for f in fields(cls):
+            meta = f.metadata
+            if not meta or meta.get("type") is None:
+                continue  # nested spec fields (e.g. method.tree) have no flag
+            yield path, prefix, f, meta
+
+
+def add_spec_args(parser: argparse.ArgumentParser) -> None:
+    """Register every spec field as a flag (grouped per sub-spec), plus
+    ``--spec`` and ``--serial``. Safe to call once per parser."""
+    parser.add_argument(
+        "--spec", default=None, metavar="FILE",
+        help="JSON PipelineSpec to load; explicit flags override its fields")
+    parser.add_argument(
+        "--serial", action="store_true", default=argparse.SUPPRESS,
+        help="disable prefetch + async persist (the serial reference path)")
+    groups = {}
+    for path, prefix, f, meta in _iter_flag_fields():
+        top = path.split(".")[0]
+        if top not in groups:
+            groups[top] = parser.add_argument_group(f"{top} spec")
+        flag = meta.get("flag") or "--" + prefix + f.name.replace("_", "-")
+        kwargs: dict = {
+            "dest": _dest(path, f.name),
+            "default": argparse.SUPPRESS,
+            "help": meta["help"],
+        }
+        if meta["type"] is bool:
+            kwargs["action"] = argparse.BooleanOptionalAction
+        else:
+            kwargs["type"] = meta["type"]
+            if meta.get("choices"):
+                kwargs["choices"] = meta["choices"]
+            if meta.get("nargs"):
+                kwargs["nargs"] = meta["nargs"]
+        groups[top].add_argument(flag, **kwargs)
+
+
+def explicit_fields(args: argparse.Namespace) -> set[str]:
+    """Dotted spec paths the user passed explicitly (e.g. ``method.name``,
+    ``compute.types``) — launchers use this to distinguish 'user chose X'
+    from 'X is the default' (generated flags default to SUPPRESS)."""
+    out = set()
+    for path, _prefix, f, _meta in _iter_flag_fields():
+        if hasattr(args, _dest(path, f.name)):
+            out.add(f"{path}.{f.name}")
+    return out
+
+
+def spec_from_args(
+    args: argparse.Namespace, base: PipelineSpec | None = None
+) -> PipelineSpec:
+    """Build the run's ``PipelineSpec`` from parsed args.
+
+    Precedence: explicit flags > ``--spec`` JSON > ``base`` > spec defaults.
+    Every override goes through ``dataclasses.replace``, so the frozen
+    specs re-validate after overlay."""
+    spec_file = getattr(args, "spec", None)
+    if spec_file:
+        spec = PipelineSpec.from_json(Path(spec_file).read_text())
+    else:
+        spec = base if base is not None else PipelineSpec()
+
+    overrides: dict[str, dict] = {}
+    for path, _prefix, f, meta in _iter_flag_fields():
+        dest = _dest(path, f.name)
+        if not hasattr(args, dest):
+            continue
+        v = getattr(args, dest)
+        if meta.get("convert") is not None:
+            v = meta["convert"](v)
+        elif isinstance(v, list):
+            v = tuple(v)
+        overrides.setdefault(path, {})[f.name] = v
+    if getattr(args, "serial", False):
+        overrides.setdefault("execution", {}).update(
+            prefetch=False, async_persist=False)
+
+    tree = dataclasses.replace(spec.method.tree, **overrides.get("method.tree", {}))
+    method_over = overrides.get("method", {})
+    if tree != spec.method.tree:
+        method_over = {**method_over, "tree": tree}
+    return dataclasses.replace(
+        spec,
+        source=dataclasses.replace(spec.source, **overrides.get("source", {})),
+        method=dataclasses.replace(spec.method, **method_over),
+        compute=dataclasses.replace(spec.compute, **overrides.get("compute", {})),
+        execution=dataclasses.replace(spec.execution, **overrides.get("execution", {})),
+    )

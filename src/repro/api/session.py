@@ -1,0 +1,212 @@
+"""``PDFSession``: execute a ``PipelineSpec`` — the one run surface.
+
+A session owns everything a run needs (the data source, the decision tree
+when the method wants one, one ``StagedExecutor`` per shard) and exposes a
+*streaming* entry point: ``run(slices)`` is a generator yielding one
+``SliceResult`` as each slice completes, so callers can persist / print /
+aggregate incrementally at paper scale instead of holding every slice's
+arrays until the end. ``run_all`` drains it into the familiar
+``{slice: result}`` map; ``report()`` aggregates the per-stage executor
+reports plus the spec's provenance hash.
+
+Slices are dealt round-robin over ``spec.execution.shards`` (the paper's
+per-node whole-slice assignment, runtime/scheduler.assign_slices); each
+shard's executor is cached on the session, so its reuse cache spans all the
+slices that shard processes — exactly the semantics of the legacy
+``PDFComputer`` facade, which is now a deprecation shim over the same
+machinery and produces bitwise-identical results (tests/test_api.py).
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Callable, Iterator
+
+from repro.api.spec import PipelineSpec, build_source
+from repro.core import ml_predict as mlp
+from repro.core import regions
+from repro.core.executor import ExecutorReport, SliceResult, StagedExecutor
+from repro.runtime.scheduler import assign_slices
+
+
+@dataclass(frozen=True)
+class SessionReport:
+    """Per-stage totals over every executor run the session has done, plus
+    the spec provenance hash (the same hash stamped into persisted
+    watermarks and BENCH rows)."""
+
+    spec_hash: str
+    slices_done: int
+    windows: int
+    wall_seconds: float
+    load_seconds: float
+    wait_seconds: float
+    compute_seconds: float
+    persist_seconds: float
+    shard_reports: dict[int, list[ExecutorReport]] = field(default_factory=dict)
+
+    @property
+    def load_hidden_seconds(self) -> float:
+        return max(0.0, self.load_seconds - self.wait_seconds)
+
+    @property
+    def load_hidden_fraction(self) -> float:
+        return (self.load_hidden_seconds / self.load_seconds
+                if self.load_seconds > 0 else 0.0)
+
+
+class PDFSession:
+    """Execute a validated ``PipelineSpec``.
+
+    ``data_source`` overrides the source the spec would build (required for
+    ``source.kind='external'``; it must expose ``geometry`` and
+    ``load_window``). ``tree`` injects a pre-trained decision tree —
+    otherwise one is trained lazily per ``spec.method.tree`` the first time
+    an ml/sampling method needs it.
+    """
+
+    def __init__(self, spec: PipelineSpec, data_source=None,
+                 tree: mlp.DecisionTree | None = None):
+        if not isinstance(spec, PipelineSpec):
+            raise TypeError(f"spec must be a PipelineSpec, got {type(spec).__name__}")
+        self.spec = spec
+        self.source = data_source if data_source is not None else build_source(spec.source)
+        self._tree = tree
+        self._executors: dict[int, StagedExecutor] = {}
+        self._reports: dict[int, list[ExecutorReport]] = {}
+        self._slices_done = 0
+
+    # -- components ------------------------------------------------------------
+
+    @property
+    def geometry(self) -> regions.CubeGeometry:
+        return self.source.geometry
+
+    @property
+    def spec_hash(self) -> str:
+        return self.spec.content_hash()
+
+    def _needs_tree(self) -> bool:
+        m = self.spec.method.name
+        return "ml" in m or m == "sampling"
+
+    @property
+    def tree(self) -> mlp.DecisionTree | None:
+        """The decision tree (§5.3.1), trained on demand from the spec's
+        TreeSpec when the method requires one."""
+        if self._tree is None and self._needs_tree():
+            from repro.core.pipeline import train_type_tree
+
+            ts = self.spec.method.tree
+            slices = ts.train_slices
+            if slices is None:
+                slices = tuple(range(min(4, self.geometry.num_slices)))
+            self._tree = train_type_tree(
+                self.source,
+                types=tuple(self.spec.compute.types),
+                slices=slices,
+                window_lines=ts.train_window_lines,
+                depth=ts.depth,
+                max_bins=ts.max_bins,
+            )
+        return self._tree
+
+    def executor(self, shard: int = 0) -> StagedExecutor:
+        """The shard's ``StagedExecutor`` (built on first use; its reuse
+        cache persists across every slice the shard runs)."""
+        if shard not in self._executors:
+            self._executors[shard] = StagedExecutor(
+                self.spec.pdf_config(),
+                self.source,
+                tree=self.tree,
+                out_dir=self.spec.execution.out_dir,
+                exec_config=self.spec.exec_config(),
+                spec_hash=self.spec_hash,
+            )
+        return self._executors[shard]
+
+    # -- execution -------------------------------------------------------------
+
+    def resolve_slices(self, slices) -> list[int]:
+        if slices is None:
+            slices = self.spec.execution.slices
+        if slices is None:
+            slices = range(self.geometry.num_slices)
+        return list(slices)
+
+    def run(
+        self,
+        slices=None,
+        resume: bool | None = None,
+        on_window: Callable | None = None,
+    ) -> Iterator[SliceResult]:
+        """Stream ``SliceResult``s (each carries its ``slice_i`` and the
+        spec hash). ``slices`` defaults to ``spec.execution.slices`` (then
+        to the whole cube); ``resume`` defaults to ``spec.execution.resume``.
+        Shards run in assignment order; within a shard, slices stream in the
+        order given."""
+        if resume is None:
+            resume = self.spec.execution.resume
+        if resume and self.spec.source.kind == "external":
+            # The hash covers the pipeline knobs but admits it cannot
+            # capture an external source's identity — two different
+            # datasets with the same knobs hash alike, so the watermark
+            # check cannot catch that particular mixup.
+            warnings.warn(
+                "resuming with an external data source: the spec hash "
+                "verifies the pipeline knobs only, not the dataset's "
+                "identity — make sure out_dir belongs to this source",
+                stacklevel=2)
+        exe = self.spec.execution
+        for a in assign_slices(self.resolve_slices(slices), exe.shards):
+            if exe.shard is not None and a.shard != exe.shard:
+                continue
+            if not a.slices:
+                continue
+            ex = self.executor(a.shard)
+            for s in a.slices:
+                plan = regions.build_plan(
+                    self.geometry, [s], self.spec.compute.window_lines
+                )
+                result = ex.run(plan, resume=resume, on_window=on_window)[s]
+                if ex.last_report is not None:
+                    self._reports.setdefault(a.shard, []).append(ex.last_report)
+                self._slices_done += 1
+                yield result
+
+    def run_all(
+        self,
+        slices=None,
+        resume: bool | None = None,
+        on_window: Callable | None = None,
+    ) -> dict[int, SliceResult]:
+        """Drain ``run`` into a ``{slice: SliceResult}`` map."""
+        return {
+            r.slice_i: r
+            for r in self.run(slices, resume=resume, on_window=on_window)
+        }
+
+    def report(self) -> SessionReport:
+        """Aggregate per-stage totals over everything run so far."""
+        totals = dict(wall=0.0, load=0.0, wait=0.0, compute=0.0, persist=0.0)
+        windows = 0
+        for reps in self._reports.values():
+            for r in reps:
+                totals["wall"] += r.wall_seconds
+                totals["load"] += r.load_seconds
+                totals["wait"] += r.wait_seconds
+                totals["compute"] += r.compute_seconds
+                totals["persist"] += r.persist_seconds
+                windows += r.units
+        return SessionReport(
+            spec_hash=self.spec_hash,
+            slices_done=self._slices_done,
+            windows=windows,
+            wall_seconds=totals["wall"],
+            load_seconds=totals["load"],
+            wait_seconds=totals["wait"],
+            compute_seconds=totals["compute"],
+            persist_seconds=totals["persist"],
+            shard_reports={k: list(v) for k, v in self._reports.items()},
+        )

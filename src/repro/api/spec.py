@@ -1,0 +1,522 @@
+"""The declarative pipeline spec: one serializable object drives every run.
+
+The paper's pipeline is one conceptual object — a cube source, a method
+(baseline / grouping / reuse / ML / sampling), and an execution strategy —
+but through PRs 1-3 the public surface fractured into ``PDFConfig`` +
+``ExecutorConfig`` + per-launcher flag subsets that drifted (the dry-run
+silently dropped ``--group-tol`` for a whole PR). ``PipelineSpec`` is the
+fix: a frozen, versioned dataclass tree that
+
+  * validates every knob at construction (not deep inside a run),
+  * round-trips through JSON (``to_json`` / ``from_json``), and
+  * has a stable content hash over its *result-defining* subtree
+    (``content_hash``) — embedded in persisted ``.npz`` watermarks and
+    BENCH rows for provenance and resume-mismatch detection.
+
+Hash rule: ``version + source + method + compute`` are hashed; ``execution``
+is NOT — staging knobs (prefetch, shards, persist dir) are bitwise-invariant
+by the staged-executor equivalence contract (DESIGN.md §9), so two runs with
+the same hash must produce identical per-point results.
+
+Every field carries its own CLI metadata (``help``/``choices``/parsers), so
+``api.cli`` can generate argparse flags from this single declaration —
+consumers never declare a pipeline knob by hand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field, fields
+from typing import Any
+
+from repro.core import distributions as dists
+from repro.core import fitting
+from repro.core import grouping as grp
+from repro.core.executor import (
+    METHODS,
+    SAMPLERS,
+    SELECT_BACKENDS,
+    ExecutorConfig,
+    PDFConfig,
+)
+
+SPEC_VERSION = 1
+
+MODES = ("faithful", "fused")
+SOURCE_KINDS = ("simulation", "external")
+
+
+def _meta(help_: str, *, type_: Any = None, choices=None, nargs=None,
+          flag: str | None = None, convert=None) -> dict:
+    """CLI metadata attached to a spec field (consumed by ``api.cli``):
+    ``type_``/``choices``/``nargs`` feed argparse, ``flag`` overrides the
+    auto-derived flag name, ``convert`` post-processes the parsed value
+    (e.g. '--types 4' -> the TYPES_4 tuple)."""
+    return {"help": help_, "type": type_, "choices": choices, "nargs": nargs,
+            "flag": flag, "convert": convert}
+
+
+def _types_convert(vals):
+    """'--types 4' / '--types 10' expand to the paper's candidate sets;
+    anything else is an explicit list of distribution names."""
+    vals = list(vals)
+    if vals == ["4"]:
+        return dists.TYPES_4
+    if vals == ["10"]:
+        return dists.TYPES_10
+    return tuple(vals)
+
+
+@dataclass(frozen=True)
+class SourceSpec:
+    """Where observations come from. ``kind='simulation'`` is the lazy
+    Monte-Carlo seismic cube (data/simulation.py) and is fully described by
+    these fields; ``kind='external'`` marks a caller-supplied window source
+    (``PDFSession(spec, data_source=...)`` or the ``PDFComputer`` shim) whose
+    identity the spec cannot capture — geometry fields are advisory then."""
+
+    kind: str = field(default="simulation", metadata=_meta(
+        "observation source", type_=str, choices=list(SOURCE_KINDS)))
+    num_slices: int = field(default=8, metadata=_meta(
+        "cube depth (slices)", type_=int))
+    lines_per_slice: int = field(default=24, metadata=_meta(
+        "lines per slice", type_=int, flag="--lines"))
+    points_per_line: int = field(default=60, metadata=_meta(
+        "points per line", type_=int, flag="--ppl"))
+    observations: int = field(default=300, metadata=_meta(
+        "Monte-Carlo observations per point", type_=int, flag="--obs"))
+    num_layers: int = field(default=16, metadata=_meta(
+        "velocity-model layers (type cycle)", type_=int))
+    base_vp: float = field(default=3000.0, metadata=_meta(
+        "m/s scale of the layered velocity model", type_=float))
+    quantize_decimals: int = field(default=3, metadata=_meta(
+        "output rounding -> grouping redundancy", type_=int))
+    group_block: int = field(default=4, metadata=_meta(
+        "points per line sharing one generator cell", type_=int))
+    line_block: int = field(default=2, metadata=_meta(
+        "consecutive lines sharing generator cells", type_=int))
+    seed: int = field(default=0, metadata=_meta(
+        "simulation seed", type_=int))
+    throttle_mb_s: float | None = field(default=None, metadata=_meta(
+        "model NFS reads at this bandwidth (MB/s; overlap benchmarks)",
+        type_=float))
+
+    def __post_init__(self):
+        if self.kind not in SOURCE_KINDS:
+            raise ValueError(f"source kind must be one of {SOURCE_KINDS}, "
+                             f"got {self.kind!r}")
+        for name in ("num_slices", "lines_per_slice", "points_per_line",
+                     "observations", "num_layers", "group_block", "line_block"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"source.{name} must be a positive int, got {v!r}")
+        if self.quantize_decimals < 0:
+            raise ValueError(
+                f"source.quantize_decimals must be >= 0, got {self.quantize_decimals}")
+        if self.throttle_mb_s is not None and not self.throttle_mb_s > 0:
+            raise ValueError(
+                f"source.throttle_mb_s must be > 0, got {self.throttle_mb_s}")
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """§5.3.1 decision-tree training config (used by the ml/sampling
+    methods). ``train_slices=None`` auto-selects the first
+    ``min(4, num_slices)`` slices — four consecutive slices cover all four
+    distribution types in the synthetic cube."""
+
+    depth: int = field(default=4, metadata=_meta(
+        "decision tree depth", type_=int, flag="--tree-depth"))
+    max_bins: int = field(default=32, metadata=_meta(
+        "candidate split thresholds per feature", type_=int,
+        flag="--tree-max-bins"))
+    train_slices: tuple[int, ...] | None = field(default=None, metadata=_meta(
+        "slices of 'previously generated output data' (default: first 4)",
+        type_=int, nargs="+", flag="--tree-train-slices"))
+    train_window_lines: int = field(default=4, metadata=_meta(
+        "window size for the training baseline runs", type_=int,
+        flag="--tree-train-window-lines"))
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"tree.depth must be >= 1, got {self.depth}")
+        if self.max_bins < 2:
+            raise ValueError(f"tree.max_bins must be >= 2, got {self.max_bins}")
+        if self.train_window_lines < 1:
+            raise ValueError(
+                f"tree.train_window_lines must be >= 1, got {self.train_window_lines}")
+        if self.train_slices is not None:
+            ts = tuple(self.train_slices)
+            object.__setattr__(self, "train_slices", ts)
+            if not ts or any((not isinstance(s, int)) or s < 0 for s in ts):
+                raise ValueError(
+                    f"tree.train_slices must be non-empty non-negative ints, got {ts}")
+
+
+@dataclass(frozen=True)
+class MethodSpec:
+    """Which of the paper's methods runs, with its knobs — including
+    sampling (§5.4, Algorithm 5), which is a first-class registry entry
+    here rather than benchmark-side glue."""
+
+    name: str = field(default="baseline", metadata=_meta(
+        "paper method (§5/§6)", type_=str, choices=list(METHODS),
+        flag="--method"))
+    group_tol: float = field(default=grp.DEFAULT_TOL, metadata=_meta(
+        "grouping tolerance (§5.2 'acceptable fluctuation')", type_=float))
+    rep_bucket: int = field(default=64, metadata=_meta(
+        "geometric padding bucket for representative batches "
+        "(64 suits reduced workloads, 256 at paper scale)", type_=int))
+    error_bound: float | None = field(default=None, metadata=_meta(
+        "the paper's bounded-error constraint on Eq.-6 E", type_=float))
+    sample_frac: float = field(default=0.1, metadata=_meta(
+        "sampling rate for method=sampling", type_=float))
+    sampler: str = field(default="random", metadata=_meta(
+        "point sampler for method=sampling", type_=str,
+        choices=list(SAMPLERS)))
+    kmeans_iters: int = field(default=10, metadata=_meta(
+        "Lloyd iterations for sampler=kmeans", type_=int))
+    sample_seed: int = field(default=0, metadata=_meta(
+        "base seed for the per-window sample draw", type_=int))
+    tree: TreeSpec = field(default=TreeSpec(), metadata=_meta(
+        "decision-tree training config"))
+
+    def __post_init__(self):
+        if self.name not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}, got {self.name!r}")
+        if not self.group_tol > 0:
+            raise ValueError(f"method.group_tol must be > 0, got {self.group_tol}")
+        if self.rep_bucket < 1:
+            raise ValueError(f"method.rep_bucket must be >= 1, got {self.rep_bucket}")
+        if self.error_bound is not None and not self.error_bound > 0:
+            raise ValueError(
+                f"method.error_bound must be > 0 (or null), got {self.error_bound}")
+        if not 0 < self.sample_frac <= 1:
+            raise ValueError(
+                f"method.sample_frac must be in (0, 1], got {self.sample_frac}")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(
+                f"method.sampler must be one of {SAMPLERS}, got {self.sampler!r}")
+        if self.kmeans_iters < 1:
+            raise ValueError(
+                f"method.kmeans_iters must be >= 1, got {self.kmeans_iters}")
+
+
+@dataclass(frozen=True)
+class ComputeSpec:
+    """The per-window device computation: candidate set, binning, windowing,
+    and which backend implements fit / Select."""
+
+    types: tuple[str, ...] = field(default=dists.TYPES_4, metadata=_meta(
+        "candidate distribution set: '4', '10', or explicit names",
+        type_=str, nargs="+", convert=_types_convert))
+    num_bins: int = field(default=64, metadata=_meta(
+        "histogram bins L for the Eq.-5 error", type_=int))
+    window_lines: int = field(default=6, metadata=_meta(
+        "lines per window (§4.2; grouping dedup scope)", type_=int))
+    mode: str = field(default="fused", metadata=_meta(
+        "shared-histogram fit vs paper-faithful per-type passes",
+        type_=str, choices=list(MODES)))
+    fit_backend: str = field(default="fused", metadata=_meta(
+        "device-work implementation (DESIGN.md §2.1)", type_=str,
+        choices=list(fitting.FIT_BACKENDS)))
+    select_backend: str = field(default="host", metadata=_meta(
+        "where Select's dedup runs (DESIGN.md §6)", type_=str,
+        choices=list(SELECT_BACKENDS)))
+
+    def __post_init__(self):
+        object.__setattr__(self, "types", tuple(self.types))
+        if not self.types:
+            raise ValueError("compute.types must not be empty")
+        for t in self.types:
+            if t not in dists.TYPES_10:
+                raise ValueError(
+                    f"unknown distribution type {t!r} (candidates: {dists.TYPES_10})")
+        if self.num_bins < 2:
+            raise ValueError(f"compute.num_bins must be >= 2, got {self.num_bins}")
+        if self.window_lines < 1:
+            raise ValueError(
+                f"compute.window_lines must be >= 1, got {self.window_lines}")
+        if self.mode not in MODES:
+            raise ValueError(f"compute.mode must be one of {MODES}, got {self.mode!r}")
+        if self.fit_backend not in fitting.FIT_BACKENDS:
+            raise ValueError(
+                f"compute.fit_backend must be one of {fitting.FIT_BACKENDS}, "
+                f"got {self.fit_backend!r}")
+        if self.select_backend not in SELECT_BACKENDS:
+            raise ValueError(
+                f"compute.select_backend must be one of {SELECT_BACKENDS}, "
+                f"got {self.select_backend!r}")
+
+
+@dataclass(frozen=True)
+class ExecSpec:
+    """Execution strategy: slice assignment, staging, persistence, resume.
+    Excluded from ``content_hash`` — none of these change per-point results
+    (the staged-executor bitwise-equivalence contract, DESIGN.md §9)."""
+
+    slices: tuple[int, ...] | None = field(default=None, metadata=_meta(
+        "slices to run (default: every slice of the cube)", type_=int,
+        nargs="+"))
+    shards: int = field(default=1, metadata=_meta(
+        "shards of the mesh data axis (per-node slice assignment)", type_=int))
+    shard: int | None = field(default=None, metadata=_meta(
+        "run only this shard's assignment (per-node mode)", type_=int))
+    prefetch: bool = field(default=True, metadata=_meta(
+        "overlap window loading with device compute", type_=bool))
+    prefetch_depth: int = field(default=2, metadata=_meta(
+        "how many windows the load stage may run ahead", type_=int))
+    async_persist: bool = field(default=True, metadata=_meta(
+        "write .npz watermarks off the critical path", type_=bool))
+    out_dir: str | None = field(default=None, metadata=_meta(
+        "persist per-window .npz + watermarks here", type_=str, flag="--out-dir"))
+    resume: bool = field(default=False, metadata=_meta(
+        "skip windows completed under a matching spec hash", type_=bool))
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(f"execution.shards must be >= 1, got {self.shards}")
+        if self.shard is not None and not 0 <= self.shard < self.shards:
+            raise ValueError(
+                f"execution.shard {self.shard} outside range 0..{self.shards - 1}")
+        if self.prefetch_depth < 1:
+            raise ValueError(
+                f"execution.prefetch_depth must be >= 1, got {self.prefetch_depth}")
+        if self.slices is not None:
+            ts = tuple(self.slices)
+            object.__setattr__(self, "slices", ts)
+            if not ts or any((not isinstance(s, int)) or s < 0 for s in ts):
+                raise ValueError(
+                    f"execution.slices must be non-empty non-negative ints, got {ts}")
+        if self.resume and self.out_dir is None:
+            raise ValueError("execution.resume requires execution.out_dir")
+
+
+_GROUPS: tuple[tuple[str, type, str], ...] = (
+    # (dotted path into PipelineSpec, dataclass, auto flag prefix)
+    ("source", SourceSpec, ""),
+    ("method", MethodSpec, ""),
+    ("method.tree", TreeSpec, "tree-"),
+    ("compute", ComputeSpec, ""),
+    ("execution", ExecSpec, ""),
+)
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """The one public entry point: everything a run needs, declared once.
+
+    Construct directly, from JSON (``from_json``), or from CLI flags
+    (``api.cli.spec_from_args``); execute with ``api.PDFSession``.
+    """
+
+    version: int = SPEC_VERSION
+    source: SourceSpec = SourceSpec()
+    method: MethodSpec = MethodSpec()
+    compute: ComputeSpec = ComputeSpec()
+    execution: ExecSpec = ExecSpec()
+
+    def __post_init__(self):
+        if self.version != SPEC_VERSION:
+            raise ValueError(
+                f"spec version {self.version} unsupported (this build speaks "
+                f"version {SPEC_VERSION}; re-emit the spec with to_json)")
+        if self.execution.slices is not None and self.source.kind == "simulation":
+            bad = [s for s in self.execution.slices if s >= self.source.num_slices]
+            if bad:
+                raise ValueError(
+                    f"execution.slices {bad} outside the cube's "
+                    f"{self.source.num_slices} slices")
+
+    # -- serialization ---------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineSpec":
+        if not isinstance(d, dict):
+            raise ValueError(f"spec must be a JSON object, got {type(d).__name__}")
+        d = dict(d)
+        parts = {}
+        for name, sub_cls in (("source", SourceSpec), ("method", MethodSpec),
+                              ("compute", ComputeSpec), ("execution", ExecSpec)):
+            if name in d:
+                parts[name] = _sub_from_dict(sub_cls, d.pop(name), name)
+        version = d.pop("version", SPEC_VERSION)
+        if d:
+            raise ValueError(f"unknown spec keys: {sorted(d)}")
+        return cls(version=version, **parts)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PipelineSpec":
+        return cls.from_dict(json.loads(text))
+
+    # -- provenance ------------------------------------------------------------
+
+    def content_hash(self) -> str:
+        """Stable hash of the result-defining subtree (version + source +
+        method + compute). Two specs with equal hashes must produce bitwise
+        identical per-point results; ``execution`` is staging-only and
+        excluded, and so is ``source.throttle_mb_s`` — the NFS-bandwidth
+        model only *sleeps* (data is unchanged), so a throttled benchmark
+        run and its unthrottled resume are the same computation
+        (DESIGN.md §API)."""
+        source = dataclasses.asdict(self.source)
+        source.pop("throttle_mb_s")
+        payload = {
+            "version": self.version,
+            "source": source,
+            "method": dataclasses.asdict(self.method),
+            "compute": dataclasses.asdict(self.compute),
+        }
+        blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # -- bridges to the internal configs --------------------------------------
+
+    def pdf_config(self) -> PDFConfig:
+        return PDFConfig(
+            types=tuple(self.compute.types),
+            num_bins=self.compute.num_bins,
+            window_lines=self.compute.window_lines,
+            method=self.method.name,
+            mode=self.compute.mode,
+            group_tol=self.method.group_tol,
+            rep_bucket=self.method.rep_bucket,
+            error_bound=self.method.error_bound,
+            fit_backend=self.compute.fit_backend,
+            select_backend=self.compute.select_backend,
+            sample_frac=self.method.sample_frac,
+            sampler=self.method.sampler,
+            kmeans_iters=self.method.kmeans_iters,
+            sample_seed=self.method.sample_seed,
+        )
+
+    def exec_config(self) -> ExecutorConfig:
+        return ExecutorConfig(
+            prefetch=self.execution.prefetch,
+            prefetch_depth=self.execution.prefetch_depth,
+            async_persist=self.execution.async_persist,
+        )
+
+
+def _sub_from_dict(cls, d: dict, path: str):
+    if not isinstance(d, dict):
+        raise ValueError(f"spec.{path} must be a JSON object, got {type(d).__name__}")
+    d = dict(d)
+    kwargs = {}
+    for f in fields(cls):
+        if f.name not in d:
+            continue
+        v = d.pop(f.name)
+        if f.name == "tree":
+            v = _sub_from_dict(TreeSpec, v, f"{path}.tree")
+        elif isinstance(v, list):
+            v = tuple(v)
+        kwargs[f.name] = v
+    if d:
+        raise ValueError(f"unknown spec.{path} keys: {sorted(d)}")
+    return cls(**kwargs)
+
+
+# -- spec construction from legacy configs / live sources ----------------------
+
+
+def spec_from_config(
+    config: PDFConfig,
+    exec_config: ExecutorConfig | None = None,
+    source: SourceSpec | None = None,
+) -> PipelineSpec:
+    """Lift a legacy ``PDFConfig`` (+``ExecutorConfig``) into a spec — the
+    ``PDFComputer`` shim uses this so even legacy construction stamps the
+    same provenance hash the session would."""
+    ec = exec_config or ExecutorConfig()
+    return PipelineSpec(
+        source=source or SourceSpec(kind="external"),
+        method=MethodSpec(
+            name=config.method,
+            group_tol=config.group_tol,
+            rep_bucket=config.rep_bucket,
+            error_bound=config.error_bound,
+            sample_frac=config.sample_frac,
+            sampler=config.sampler,
+            kmeans_iters=config.kmeans_iters,
+            sample_seed=config.sample_seed,
+        ),
+        compute=ComputeSpec(
+            types=tuple(config.types),
+            num_bins=config.num_bins,
+            window_lines=config.window_lines,
+            mode=config.mode,
+            fit_backend=config.fit_backend,
+            select_backend=config.select_backend,
+        ),
+        execution=ExecSpec(
+            prefetch=ec.prefetch,
+            prefetch_depth=ec.prefetch_depth,
+            async_persist=ec.async_persist,
+        ),
+    )
+
+
+def source_spec_for(data_source) -> SourceSpec:
+    """Describe a live window source as a ``SourceSpec``: the synthetic
+    simulation (optionally behind a ``ThrottledSource``) round-trips exactly;
+    anything else is marked ``kind='external'``."""
+    from repro.data.loader import ThrottledSource
+    from repro.data.simulation import SeismicSimulation
+
+    throttle = None
+    if isinstance(data_source, ThrottledSource):
+        throttle = data_source.bandwidth / 1e6
+        data_source = data_source.inner
+    if isinstance(data_source, SeismicSimulation):
+        cfg = data_source.config
+        g = cfg.geometry
+        return SourceSpec(
+            kind="simulation",
+            num_slices=g.num_slices,
+            lines_per_slice=g.lines_per_slice,
+            points_per_line=g.points_per_line,
+            observations=cfg.num_simulations,
+            num_layers=cfg.num_layers,
+            base_vp=cfg.base_vp,
+            quantize_decimals=cfg.quantize_decimals,
+            group_block=cfg.group_block,
+            line_block=cfg.line_block,
+            seed=cfg.seed,
+            throttle_mb_s=throttle,
+        )
+    return SourceSpec(kind="external", throttle_mb_s=throttle)
+
+
+def build_source(spec: SourceSpec):
+    """Materialize the window source a ``SourceSpec`` describes."""
+    from repro.core.regions import CubeGeometry
+    from repro.data.loader import ThrottledSource
+    from repro.data.simulation import SeismicSimulation, SimulationConfig
+
+    if spec.kind != "simulation":
+        raise ValueError(
+            "source.kind='external' cannot be materialized from the spec — "
+            "pass the source object: PDFSession(spec, data_source=...)")
+    sim = SeismicSimulation(SimulationConfig(
+        geometry=CubeGeometry(spec.num_slices, spec.lines_per_slice,
+                              spec.points_per_line),
+        num_simulations=spec.observations,
+        num_layers=spec.num_layers,
+        base_vp=spec.base_vp,
+        quantize_decimals=spec.quantize_decimals,
+        group_block=spec.group_block,
+        line_block=spec.line_block,
+        seed=spec.seed,
+    ))
+    if spec.throttle_mb_s is not None:
+        return ThrottledSource(sim, spec.throttle_mb_s * 1e6)
+    return sim

@@ -37,3 +37,25 @@ SET3 = PDFWorkloadConfig(
 SET1_10TYPES = dataclasses.replace(SET1, name="pdf-seismic-set1-10t", types=TYPES_10)
 
 CONFIG = SET1
+
+
+def to_spec(cfg: PDFWorkloadConfig = CONFIG):
+    """Express a paper-scale workload as a declarative ``PipelineSpec``
+    (DESIGN.md §11) — ``to_spec(SET1).to_json()`` is a runnable
+    ``--spec`` file for the launchers."""
+    from repro.api import (ComputeSpec, ExecSpec, MethodSpec, PipelineSpec,
+                           SourceSpec)
+
+    g = cfg.geometry
+    return PipelineSpec(
+        source=SourceSpec(
+            num_slices=g.num_slices,
+            lines_per_slice=g.lines_per_slice,
+            points_per_line=g.points_per_line,
+            observations=cfg.num_simulations,
+        ),
+        method=MethodSpec(name=cfg.method, rep_bucket=256),
+        compute=ComputeSpec(types=cfg.types, num_bins=cfg.num_bins,
+                            window_lines=cfg.window_lines),
+        execution=ExecSpec(slices=(cfg.slice_index,)),
+    )

@@ -56,7 +56,18 @@ from repro.core.reuse import ReuseCache
 from repro.data.loader import WindowPrefetcher
 from repro.runtime.monitor import StepMonitor
 
-METHODS = ("baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml")
+METHODS = (
+    "baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml",
+    # §5.4 / Algorithm 5: estimate slice features from a sampled fraction of
+    # points — tree classification only, no Eq.-5 fitting. A first-class
+    # registry entry so the sampling figures run through the same staged
+    # executor as every other method (it used to be benchmark-side glue).
+    "sampling",
+)
+
+# Point samplers for method='sampling' (§5.4: random is the paper's
+# recommendation; k-means "double sampling" wins at tiny rates).
+SAMPLERS = ("random", "kmeans")
 
 # Where the Select step's dedup runs (DESIGN.md §6): 'host' bounces the
 # window's quantized keys through np.unique + a padded representative
@@ -122,10 +133,33 @@ class PDFConfig:
     # the per-window key D2H + rep-index H2D bounce entirely (the win on real
     # accelerators — see the kernel/select_* BENCH rows).
     select_backend: str = "host"
+    # method='sampling' (§5.4): fraction of window points classified, which
+    # sampler draws them, and the Lloyd iteration count for 'kmeans'. The
+    # per-window draw is seeded from (sample_seed, slice, line), so results
+    # are independent of window execution order and survive resume.
+    sample_frac: float = 0.1
+    sampler: str = "random"
+    kmeans_iters: int = 10
+    sample_seed: int = 0
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"method must be one of {METHODS}, got {self.method!r}")
+        if self.num_bins < 2:
+            raise ValueError(f"num_bins must be >= 2, got {self.num_bins}")
+        if self.window_lines < 1:
+            raise ValueError(f"window_lines must be >= 1, got {self.window_lines}")
+        if self.error_bound is not None and not self.error_bound > 0:
+            # error_bound <= 0 used to sail through construction and report
+            # error_bound_satisfied=False at the end of a full run
+            raise ValueError(
+                f"error_bound must be > 0 (or None), got {self.error_bound}")
+        if not 0 < self.sample_frac <= 1:
+            raise ValueError(f"sample_frac must be in (0, 1], got {self.sample_frac}")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"sampler must be one of {SAMPLERS}, got {self.sampler!r}")
+        if self.kmeans_iters < 1:
+            raise ValueError(f"kmeans_iters must be >= 1, got {self.kmeans_iters}")
         if self.fit_backend not in fitting.FIT_BACKENDS:
             raise ValueError(
                 f"fit_backend must be one of {fitting.FIT_BACKENDS}, "
@@ -179,6 +213,27 @@ class SliceResult:
     avg_error: float  # Eq. 6
     stats: list[WindowStats] = field(default_factory=list)
     error_bound_satisfied: bool | None = None
+    slice_i: int | None = None
+    # Provenance: content hash of the PipelineSpec that produced this result
+    # (api/spec.py); also stamped into persisted .npz files and watermarks.
+    spec_hash: str | None = None
+
+    def features(self, types) -> "object":
+        """§5.4 slice features (SliceFeatures) from this result: average
+        mean/std and type percentages over the *classified* points — all of
+        them for the fitting methods, the sampled subset for
+        ``method='sampling'`` (unsampled points carry ``type_idx == -1``)."""
+        from repro.core.sampling import SliceFeatures
+
+        m = self.type_idx >= 0
+        n = int(m.sum())
+        pct = (np.bincount(self.type_idx[m], minlength=len(types))
+               .astype(np.float64) / max(n, 1))
+        return SliceFeatures(
+            float(self.mean[m].mean()) if n else 0.0,
+            float(self.std[m].mean()) if n else 0.0,
+            pct, n,
+        )
 
     @property
     def total_load_seconds(self) -> float:
@@ -365,9 +420,11 @@ class PersistStage:
     """
 
     def __init__(self, out_dir: str | Path | None, async_writes: bool = True,
-                 monitor: StepMonitor | None = None):
+                 monitor: StepMonitor | None = None,
+                 spec_hash: str | None = None):
         self.out_dir = Path(out_dir) if out_dir else None
         self.monitor = monitor
+        self.spec_hash = spec_hash  # stamped into every .npz + watermark
         self.seconds = 0.0
         self.writes = 0
         self._error: BaseException | None = None
@@ -411,12 +468,13 @@ class PersistStage:
         if self.monitor is not None:
             self.monitor.start(uid, now=t0)
         self.out_dir.mkdir(parents=True, exist_ok=True)
+        extra = {"spec_hash": self.spec_hash} if self.spec_hash else {}
         np.savez(
             self.out_dir / f"slice{slice_i}_window_{w.line_start:05d}.npz",
-            line_start=w.line_start, line_end=w.line_end, **arrays,
+            line_start=w.line_start, line_end=w.line_end, **extra, **arrays,
         )
         (self.out_dir / f"slice{slice_i}_watermark.json").write_text(
-            json.dumps({"next_line": int(w.line_end)})
+            json.dumps({"next_line": int(w.line_end), **extra})
         )
         t1 = time.perf_counter()
         if self.monitor is not None:
@@ -444,13 +502,29 @@ class PersistStage:
 
     # -- watermark / restore (resume) -----------------------------------------
 
-    def watermark(self, slice_i: int) -> int:
+    def watermark_info(self, slice_i: int) -> dict:
         if self.out_dir is None:
-            return 0
+            return {"next_line": 0}
         f = self.out_dir / f"slice{slice_i}_watermark.json"
         if not f.exists():
-            return 0
-        return int(json.loads(f.read_text())["next_line"])
+            return {"next_line": 0}
+        return json.loads(f.read_text())
+
+    def watermark(self, slice_i: int) -> int:
+        return int(self.watermark_info(slice_i)["next_line"])
+
+    def check_resume_hash(self, slice_i: int, info: dict):
+        """Resume-mismatch detection: a watermark written under a different
+        spec hash describes a *different computation* (other tolerance,
+        candidate set, source seed...) — silently mixing its windows into
+        this run would corrupt the output, so refuse."""
+        stored = info.get("spec_hash")
+        if stored and self.spec_hash and stored != self.spec_hash:
+            raise ValueError(
+                f"resume mismatch for slice {slice_i}: watermark in "
+                f"{self.out_dir} was written by spec {stored}, this run is "
+                f"spec {self.spec_hash} — point --out-dir elsewhere or "
+                "re-run without resume")
 
     def restore_windows(self, slice_i: int, upto_line: int, ppl: int,
                         outs: dict[str, np.ndarray]):
@@ -480,6 +554,7 @@ class StagedExecutor:
         out_dir: str | Path | None = None,
         sharding: jax.sharding.Sharding | None = None,
         exec_config: ExecutorConfig | None = None,
+        spec_hash: str | None = None,
     ):
         self.config = config
         self.data = data_source
@@ -487,8 +562,9 @@ class StagedExecutor:
         self.out_dir = Path(out_dir) if out_dir else None
         self.sharding = sharding
         self.exec_config = exec_config or ExecutorConfig()
+        self.spec_hash = spec_hash  # provenance stamp (api/spec.py hash)
         self.cache = ReuseCache()
-        if "ml" in config.method and tree is None:
+        if ("ml" in config.method or config.method == "sampling") and tree is None:
             raise ValueError(f"method {config.method!r} requires a decision tree")
 
         self._moments, self._fit_all, self._fit_pred, self._gather = _jitted_fns(
@@ -569,16 +645,25 @@ class StagedExecutor:
             mean, var, self.config.group_tol, out=self._key_buf, tmp=self._key_tmp
         )
 
-    def _select_and_fit(self, values: jax.Array, moments: dists.Moments):
+    def _select_and_fit(self, values: jax.Array, moments: dists.Moments,
+                        window: regions.Window,
+                        sample_idx: np.ndarray | None = None,
+                        total_points: int | None = None):
         """The Select step (§5.1/5.2): returns per-point results + bookkeeping.
 
         Dispatches on ``config.select_backend``: 'host' dedups via np.unique
         over host-quantized keys, 'device' keeps the dedup on the
         accelerator. Both are bitwise-equivalent (the device keys are exact
         hi/lo splits of the host int64 keys, and fits are row-deterministic).
+        ``window``/``sample_idx``/``total_points`` only feed the sampling
+        method (for every other method ``values`` covers the whole window).
         """
         method = self.config.method
         num_points = values.shape[0]
+        if method == "sampling":
+            return self._sample_classify(
+                moments, window, total_points or num_points, sample_idx
+            )
         if method in ("baseline", "ml"):
             t, p, e = self._fit(values, moments)
             return t, p, e, num_points, 0
@@ -692,6 +777,68 @@ class StagedExecutor:
         inv = np.asarray(point_slot)
         return rep_t[inv], rep_p[inv], rep_e[inv], fitted, cache_hits
 
+    def _sample_seed(self, w: regions.Window) -> int:
+        """Per-window draw seed from (sample_seed, slice, line): results do
+        not depend on window execution order and survive resume."""
+        return (self.config.sample_seed * 1_000_003 + w.slice_i * 100_003
+                + w.line_start)
+
+    def _draw_sample(self, num_points: int, w: regions.Window) -> np.ndarray:
+        """The random sampler's index draw — needs only the window's point
+        count, so the compute stage can subset the window *before* the
+        moments pass (§5.4's cost is meant to fall with the rate)."""
+        from repro.core import sampling as smp
+
+        return smp.sample_indices_random(
+            num_points, self.config.sample_frac, seed=self._sample_seed(w)
+        )
+
+    def _sample_classify(self, moments: dists.Moments, w: regions.Window,
+                         num_points: int, idx: np.ndarray | None):
+        """method='sampling' (§5.4, Algorithm 5): classify the sampled
+        points' types with the decision tree (grouping-first dedup, Alg. 5
+        lines 15-26) — no Eq.-5 fitting at all, which is the method's
+        entire speedup. Unsampled points get ``type_idx = -1`` and zero
+        params/error; ``SliceResult.features`` aggregates over the sampled
+        subset only.
+
+        ``idx`` is the pre-drawn random sample (``moments`` then cover only
+        those rows — the run loop subsets the window before the moments
+        pass, so load-side device work scales with the rate). For the
+        k-means sampler ``idx`` is None: double sampling clusters on every
+        point's (mu, sigma), so it inherently needs the full moments pass
+        (the paper's extra cost for k-means, Fig. 16)."""
+        from repro.core import sampling as smp
+
+        cfg = self.config
+        mean = np.asarray(moments.mean)
+        var = np.asarray(moments.var)
+        std = np.sqrt(np.maximum(var, 0.0))
+        if idx is None:  # kmeans: cluster over the full window's features
+            idx = smp.sample_indices_kmeans(
+                np.stack([mean, std], axis=-1), cfg.sample_frac,
+                iters=cfg.kmeans_iters, seed=self._sample_seed(w),
+            )
+            sub_mean, sub_std = mean[idx], std[idx]
+            sub_skew = np.asarray(moments.skew)[idx]
+            sub_kurt = np.asarray(moments.kurt)[idx]
+        else:  # random: moments were computed on the sampled rows only
+            sub_mean, sub_std = mean, std
+            sub_skew = np.asarray(moments.skew)
+            sub_kurt = np.asarray(moments.kurt)
+
+        pred = smp.predict_types(
+            sub_mean, sub_std, self.tree, group_tol=cfg.group_tol,
+            skew=sub_skew, kurt=sub_kurt,
+        )
+        t = np.full((num_points,), -1, dtype=np.int32)
+        t[idx] = pred
+        params = np.zeros((num_points, 3), dtype=np.float32)
+        err = np.zeros((num_points,), dtype=np.float32)
+        # 'fitted' reports the classified sample count (nothing runs through
+        # ComputePDF&Error for this method — that is the point).
+        return t, params, err, len(idx), 0
+
     # -- run (Algorithm 1 over a Plan) -----------------------------------------
 
     def run(
@@ -715,6 +862,7 @@ class StagedExecutor:
             self.out_dir,
             async_writes=self.exec_config.async_persist,
             monitor=self.monitors["persist"],
+            spec_hash=self.spec_hash,
         )
 
         outs = {
@@ -733,7 +881,10 @@ class StagedExecutor:
 
         units = list(plan.units)
         if resume and self.out_dir is not None:
-            marks = {s: persist.watermark(s) for s in requested}
+            infos = {s: persist.watermark_info(s) for s in requested}
+            for s, info in infos.items():
+                persist.check_resume_hash(s, info)
+            marks = {s: int(info["next_line"]) for s, info in infos.items()}
             for s, mark in marks.items():
                 if mark > 0:
                     persist.restore_windows(s, mark, ppl, outs[s])
@@ -761,13 +912,27 @@ class StagedExecutor:
                 # (serial mode does the whole load inline here, so wait ==
                 # load by construction; with prefetch it is the shortfall).
                 wait_s = time.perf_counter() - w0
-                moments = jax.block_until_ready(self._moments(item.values))
+                w = item.unit.window
+                values = item.values
+                total_points = values.shape[0]
+                sample_idx = None
+                if (self.config.method == "sampling"
+                        and self.config.sampler == "random"):
+                    # §5.4's entire point: only the sampled fraction is
+                    # touched — subset the window on device *before* the
+                    # moments pass, so per-window device work (and the
+                    # figure-15 cost curve) scales with the rate. k-means
+                    # keeps the full pass: it clusters on every point's
+                    # (mu, sigma) by construction.
+                    sample_idx = self._draw_sample(total_points, w)
+                    values = values[jnp.asarray(sample_idx)]
+                moments = jax.block_until_ready(self._moments(values))
                 t1 = time.perf_counter()
 
-                w = item.unit.window
                 cmon.start(item.unit.unit_id, now=t1)
                 t, p, e, fitted, hits = self._select_and_fit(
-                    item.values, dists.Moments(*moments)
+                    values, dists.Moments(*moments), w,
+                    sample_idx=sample_idx, total_points=total_points,
                 )
                 t2 = time.perf_counter()
                 cmon.finish(item.unit.unit_id, now=t2)
@@ -775,10 +940,17 @@ class StagedExecutor:
                 o = outs[w.slice_i]
                 lo, hi = w.line_start * ppl, w.line_end * ppl
                 o["type_idx"][lo:hi], o["params"][lo:hi], o["error"][lo:hi] = t, p, e
-                o["mean"][lo:hi] = np.asarray(moments[0])
-                o["std"][lo:hi] = np.sqrt(np.maximum(np.asarray(moments[1]), 0))
-                o["skew"][lo:hi] = np.asarray(moments[2])
-                o["kurt"][lo:hi] = np.asarray(moments[3])
+                mom_np = (np.asarray(moments[0]),
+                          np.sqrt(np.maximum(np.asarray(moments[1]), 0)),
+                          np.asarray(moments[2]), np.asarray(moments[3]))
+                if sample_idx is None:
+                    for name, col in zip(("mean", "std", "skew", "kurt"), mom_np):
+                        o[name][lo:hi] = col
+                else:
+                    # random sampling computed moments for the sampled rows
+                    # only; unsampled rows stay zero (their type_idx is -1)
+                    for name, col in zip(("mean", "std", "skew", "kurt"), mom_np):
+                        o[name][lo:hi][sample_idx] = col
 
                 ws = WindowStats(w, hi - lo, fitted, item.load_seconds,
                                  t2 - t1, hits, wait_s)
@@ -813,7 +985,8 @@ class StagedExecutor:
             o = outs[s]
             avg_err = float(o["error"].mean())
             r = SliceResult(o["type_idx"], o["params"], o["error"], o["mean"],
-                            o["std"], o["skew"], o["kurt"], avg_err, stats[s])
+                            o["std"], o["skew"], o["kurt"], avg_err, stats[s],
+                            slice_i=s, spec_hash=self.spec_hash)
             if self.config.error_bound is not None:
                 r.error_bound_satisfied = avg_err <= self.config.error_bound
             results[s] = r

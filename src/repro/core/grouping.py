@@ -153,6 +153,22 @@ def quantize_keys_host(
     return out
 
 
+def quantize_features_host(
+    mean: np.ndarray, std: np.ndarray, tol: float = DEFAULT_TOL
+) -> np.ndarray:
+    """(P,) mean/std -> (P, 2) int64 keys, for callers that already hold the
+    standard deviation (the sampling path, Alg. 5 line 16). Same semantics
+    as ``quantize_keys_host`` minus the var -> std derivation: widen to f64
+    *before* the divide — the NEP-50 f32-loop trap applies here identically
+    (``np.round(mean_f32 / tol)`` aliased on f32's 2^24 grid)."""
+    mean = np.asarray(mean)
+    std = np.asarray(std)
+    out = np.empty((mean.shape[0], 2), dtype=np.int64)
+    out[:, 0] = np.rint(mean.astype(np.float64) / tol)
+    out[:, 1] = np.rint(std.astype(np.float64) / tol)
+    return out
+
+
 def keys_to_int64(keys: np.ndarray) -> np.ndarray:
     """(..., 2k) hi/lo int32 device keys -> (..., k) int64 host keys
     (the exact inverse of the hi/lo split; used for reuse-cache interop)."""

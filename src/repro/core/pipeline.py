@@ -18,6 +18,10 @@ Fault tolerance: after each window the per-window results are persisted as
 ``window_NNNN.npz`` plus a watermark; ``run_slice`` with ``resume=True``
 skips completed windows — a restart after a crash re-does at most one window
 (the paper's window-at-a-time structure, reused for restartability).
+
+NOTE: the public entry point is now ``repro.api`` (``PipelineSpec`` +
+``PDFSession``, DESIGN.md §API); ``PDFComputer`` remains as a
+bitwise-equivalent deprecation shim for existing callers.
 """
 
 from __future__ import annotations
@@ -57,13 +61,18 @@ __all__ = [
 
 
 class PDFComputer:
-    """Thin facade over :class:`repro.core.executor.StagedExecutor`.
+    """DEPRECATED shim over the ``repro.api`` surface — prefer
+    ``api.PipelineSpec`` + ``api.PDFSession`` for new code.
 
-    Keeps the historical construction/`run_slice` surface; ``exec_config``
-    selects staging behaviour (prefetch depth, async persist) and defaults
-    to the overlapped pipeline. ``data_source`` must expose ``geometry:
-    regions.CubeGeometry`` and ``load_window(window) -> np.ndarray
-    (num_points, n_obs) float32``.
+    Keeps the historical construction/`run_slice` surface and produces
+    bitwise-identical results to a session running the equivalent spec
+    (asserted in tests/test_api.py). Internally it lifts its
+    ``PDFConfig``/``ExecutorConfig`` pair into a ``PipelineSpec``
+    (``api.spec.spec_from_config``), so even legacy construction stamps the
+    same provenance hash into persisted watermarks that a session would —
+    resume works across the two surfaces. ``data_source`` must expose
+    ``geometry: regions.CubeGeometry`` and ``load_window(window) ->
+    np.ndarray (num_points, n_obs) float32``.
     """
 
     def __init__(
@@ -75,14 +84,22 @@ class PDFComputer:
         sharding: jax.sharding.Sharding | None = None,
         exec_config: ExecutorConfig | None = None,
     ):
+        # Lazy import: api.spec imports core.executor; loading it here (not
+        # at module top) keeps the import graph acyclic.
+        from repro.api.spec import source_spec_for, spec_from_config
+
         self.config = config
         self.data = data_source
         self.tree = tree
         self.out_dir = Path(out_dir) if out_dir else None
         self.sharding = sharding
+        self.spec = spec_from_config(
+            config, exec_config, source=source_spec_for(data_source)
+        )
         self._executor = StagedExecutor(
             config, data_source, tree=tree, out_dir=out_dir,
             sharding=sharding, exec_config=exec_config,
+            spec_hash=self.spec.content_hash(),
         )
 
     @property
@@ -100,12 +117,23 @@ class PDFComputer:
         """Per-stage totals of the most recent run (overlap evidence)."""
         return self._executor.last_report
 
+    def _warn_unverifiable_resume(self, resume: bool):
+        if resume and self.spec.source.kind == "external":
+            import warnings
+
+            warnings.warn(
+                "resuming with an external data source: the spec hash "
+                "verifies the pipeline knobs only, not the dataset's "
+                "identity — make sure out_dir belongs to this source",
+                stacklevel=3)
+
     def run_slice(
         self,
         slice_i: int,
         resume: bool = False,
         on_window: Callable[[WindowStats], None] | None = None,
     ) -> SliceResult:
+        self._warn_unverifiable_resume(resume)
         return self._executor.run_slice(slice_i, resume=resume, on_window=on_window)
 
     def run(
@@ -116,6 +144,7 @@ class PDFComputer:
     ) -> dict[int, SliceResult]:
         """Multi-slice entry point: one plan spanning ``slices`` (processed
         slice-major, sharing the reuse cache across slices)."""
+        self._warn_unverifiable_resume(resume)
         plan = regions.build_plan(
             self.data.geometry, list(slices), self.config.window_lines
         )

@@ -85,6 +85,44 @@ def sample_indices_kmeans(
     return np.sort(np.unique(order[first].astype(np.int64)))
 
 
+def predict_types(
+    mean: np.ndarray,
+    std: np.ndarray,
+    tree: mlp.DecisionTree,
+    group_first: bool = True,
+    group_tol: float = grp.DEFAULT_TOL,
+    skew: np.ndarray | None = None,
+    kurt: np.ndarray | None = None,
+) -> np.ndarray:
+    """Algorithm 5 lines 15-24: (optionally) group, then tree-classify —
+    returns the per-point type prediction. Grouped predictions are expanded
+    back through the inverse map, so the output is always (P,).
+
+    ``skew``/``kurt`` extend the features when the tree was trained with the
+    scale-invariant feature set (executor.TREE_FEATURES); they are free
+    outputs of the fused moments kernel. This is the classification core of
+    both the standalone feature helper below and the staged executor's
+    ``method='sampling'`` path.
+    """
+    if skew is not None:
+        from repro.core.executor import tree_features_np
+
+        feats = tree_features_np(mean, std, skew,
+                                 kurt if kurt is not None else np.zeros_like(skew))
+    else:  # paper-faithful 2-feature mode (tests cover it)
+        feats = np.stack([mean, std], axis=-1).astype(np.float32)
+    if group_first:
+        # One key definition repo-wide (DESIGN.md §2.0): the f64-widened
+        # grouping quantization — the previous inline np.round(mean / tol)
+        # ran on the f32 loop, the exact aliasing PR 3 fixed elsewhere.
+        keys = grp.quantize_features_host(mean, std, group_tol)
+        groups = grp.group_host(keys)
+        rep_feats = feats[groups.rep_indices]
+        rep_pred = np.asarray(mlp.predict(tree.as_device(), jnp.asarray(rep_feats)))
+        return rep_pred[groups.inverse]
+    return np.asarray(mlp.predict(tree.as_device(), jnp.asarray(feats)))
+
+
 def slice_features_from_moments(
     mean: np.ndarray,
     std: np.ndarray,
@@ -95,32 +133,12 @@ def slice_features_from_moments(
     skew: np.ndarray | None = None,
     kurt: np.ndarray | None = None,
 ) -> SliceFeatures:
-    """Algorithm 5 lines 15-26: (optionally) group, predict types, aggregate.
+    """Algorithm 5 lines 15-26: classify (``predict_types``) + aggregate.
 
-    Note the type percentages are over *points*, so grouped predictions are
-    expanded back through the inverse map before the percentage calculation.
-    ``skew``/``kurt`` extend the features when the tree was trained with the
-    4-moment feature set (pipeline.TREE_FEATURES); they are free outputs of
-    the fused moments kernel.
-    """
-    if skew is not None:
-        from repro.core.pipeline import tree_features_np
-
-        feats = tree_features_np(mean, std, skew,
-                                 kurt if kurt is not None else np.zeros_like(skew))
-    else:  # paper-faithful 2-feature mode (tests cover it)
-        feats = np.stack([mean, std], axis=-1).astype(np.float32)
-    if group_first:
-        keys = np.stack(
-            [np.round(mean / group_tol), np.round(std / group_tol)], axis=-1
-        ).astype(np.int64)
-        groups = grp.group_host(keys)
-        rep_feats = feats[groups.rep_indices]
-        rep_pred = np.asarray(mlp.predict(tree.as_device(), jnp.asarray(rep_feats)))
-        pred = rep_pred[groups.inverse]
-    else:
-        pred = np.asarray(mlp.predict(tree.as_device(), jnp.asarray(feats)))
-
+    Note the type percentages are over *points* (grouped predictions already
+    expanded), matching the paper's per-point percentage definition."""
+    pred = predict_types(mean, std, tree, group_first=group_first,
+                         group_tol=group_tol, skew=skew, kurt=kurt)
     pct = np.bincount(pred, minlength=len(types)).astype(np.float64) / len(pred)
     return SliceFeatures(float(mean.mean()), float(std.mean()), pct, len(mean))
 

@@ -51,6 +51,16 @@ VARIANTS = ("faithful", "fused", "fused_scatter", "fused_scatter_shmap", "groupi
 NUM_BINS = 20
 TYPES = d.TYPES_4
 
+# Pipeline knobs (types / num_bins / group_tol) come from the shared
+# PipelineSpec surface — the dry-run declares only its own defaults here
+# (the paper's 20-bin histogram) and no flags of its own for them, so it can
+# never again drift from the launchers (PR 3 had to fix this file silently
+# dropping --group-tol).
+def _base_spec():
+    from repro.api import ComputeSpec, PipelineSpec
+
+    return PipelineSpec(compute=ComputeSpec(num_bins=NUM_BINS, types=TYPES))
+
 
 def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS,
                      group_tol: float = grp.DEFAULT_TOL):
@@ -105,14 +115,16 @@ def make_window_step(variant: str, mesh, types=TYPES, num_bins=NUM_BINS,
 
 
 def run_pdf_cell(variant: str, shape_name: str, mesh, verbose=True,
-                 group_tol: float = grp.DEFAULT_TOL) -> dict:
+                 group_tol: float = grp.DEFAULT_TOL, types=TYPES,
+                 num_bins: int = NUM_BINS, spec_hash: str | None = None) -> dict:
     points, obs = PDF_SHAPES[shape_name]
     chips = mesh.devices.size
     axes = tuple(mesh.axis_names)
     values = jax.ShapeDtypeStruct((points, obs), jnp.float32)
     in_sh = NamedSharding(mesh, P(axes, None))
 
-    step = make_window_step(variant, mesh, group_tol=group_tol)
+    step = make_window_step(variant, mesh, types=types, num_bins=num_bins,
+                            group_tol=group_tol)
     t0 = time.perf_counter()
     lowered = jax.jit(step, in_shardings=(in_sh,)).lower(values)
     compiled = lowered.compile()
@@ -128,13 +140,14 @@ def run_pdf_cell(variant: str, shape_name: str, mesh, verbose=True,
 
     # "model flops" for the PDF step: the minimum useful work = one moments
     # pass (5 flops/value) + one histogram pass (2) + T x O(L) CDF math.
-    t_types = len(TYPES)
-    model_flops = points * obs * (5.0 + 2.0) + points * t_types * NUM_BINS * 25.0
+    t_types = len(types)
+    model_flops = points * obs * (5.0 + 2.0) + points * t_types * num_bins * 25.0
     roof = rl.make_roofline(flops_dev, bytes_dev, coll, chips, model_flops)
 
     rec = {
         "workload": "pdf-seismic",
         "variant": variant,
+        "spec_hash": spec_hash,
         "shape": shape_name,
         "points": points,
         "obs": obs,
@@ -173,17 +186,23 @@ def run_pdf_cell(variant: str, shape_name: str, mesh, verbose=True,
 
 
 def main():
+    from repro.api import add_spec_args, spec_from_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", choices=VARIANTS, default=None)
     ap.add_argument("--pdf-shape", choices=list(PDF_SHAPES), default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--group-tol", type=float, default=grp.DEFAULT_TOL,
-                    help="grouping tolerance for the grouping_global variant "
-                         "(threads through to quantize_keys; previously the "
-                         "dry-run silently ignored it)")
-    ap.add_argument("--out", default="results/dryrun_pdf")
+    ap.add_argument("--out", default="results/dryrun_pdf",
+                    help="directory for per-cell roofline records")
+    # every pipeline knob (--group-tol, --types, --num-bins, --spec ...)
+    # comes from the shared spec surface
+    add_spec_args(ap)
     args = ap.parse_args()
+    spec = spec_from_args(args, base=_base_spec())
+    print(f"[spec] hash={spec.content_hash()} "
+          f"types={len(spec.compute.types)} bins={spec.compute.num_bins} "
+          f"group_tol={spec.method.group_tol}")
 
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
@@ -196,7 +215,13 @@ def main():
         for s in shapes:
             cid = f"pdf__{v}__{s}__{'pod2' if args.multi_pod else 'pod1'}"
             try:
-                rec = run_pdf_cell(v, s, mesh, group_tol=args.group_tol)
+                rec = run_pdf_cell(
+                    v, s, mesh,
+                    group_tol=spec.method.group_tol,
+                    types=tuple(spec.compute.types),
+                    num_bins=spec.compute.num_bins,
+                    spec_hash=spec.content_hash(),
+                )
             except Exception as e:  # noqa: BLE001
                 traceback.print_exc()
                 rec = {"ok": False, "variant": v, "shape": s, "error": str(e)}

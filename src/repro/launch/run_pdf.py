@@ -1,17 +1,19 @@
-"""Multi-slice PDF run through the staged executor + slice scheduler.
+"""Multi-slice PDF run — the production launcher over the ``repro.api``
+surface.
 
-The production entry point for the paper's workload shape: whole slices are
-assigned to shards of the mesh data axis (runtime/scheduler.py — the
-paper's per-node slice assignment), each shard's plan runs through the
-staged executor (core/executor.py) with window prefetch and async persist,
-and the per-stage report shows how much load time was hidden behind
-compute. ``--shard`` restricts execution to one shard — on a cluster, each
-node runs this script with its own shard index against the shared
-filesystem; watermark files are per-slice, and slices never span shards,
-so restart (``--resume``) stays per-node.
+Every pipeline knob comes from the declarative ``PipelineSpec``: flags are
+auto-generated from the spec fields (``api.cli``), ``--spec FILE`` loads a
+JSON spec (explicit flags override), and the run streams slice results from
+a ``PDFSession``. Whole slices are dealt to shards of the mesh data axis
+(the paper's per-node slice assignment); ``--shard`` restricts execution to
+one shard — on a cluster, each node runs this script with its own shard
+index against the shared filesystem. Watermark files are per-slice and
+stamped with the spec's content hash, so ``--resume`` refuses to mix
+windows persisted by a *different* computation (DESIGN.md §API).
 
   PYTHONPATH=src python -m repro.launch.run_pdf --slices 0 1 2 3 --shards 2
   PYTHONPATH=src python -m repro.launch.run_pdf --method grouping_ml --serial
+  PYTHONPATH=src python -m repro.launch.run_pdf --spec run.json --resume
 """
 
 from __future__ import annotations
@@ -19,115 +21,70 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core import distributions as d
-from repro.core import fitting
-from repro.core import grouping as grp
-from repro.core.executor import (
-    METHODS,
-    SELECT_BACKENDS,
-    ExecutorConfig,
-    PDFConfig,
-    StagedExecutor,
+from repro.api import (
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    add_spec_args,
+    spec_from_args,
 )
-from repro.core.pipeline import train_type_tree
-from repro.core.regions import CubeGeometry
-from repro.data.simulation import SeismicSimulation, SimulationConfig
-from repro.runtime.scheduler import SliceScheduler
+
+# The launcher's only defaults that differ from the spec's own: the paper's
+# headline method and a 4-slice demo run. Everything else — geometry,
+# backends, staging — is the spec's single declaration.
+BASE_SPEC = PipelineSpec(
+    method=MethodSpec(name="grouping"),
+    execution=ExecSpec(slices=(0, 1, 2, 3)),
+)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--slices", type=int, nargs="+", default=[0, 1, 2, 3])
-    ap.add_argument("--shards", type=int, default=1)
-    ap.add_argument("--shard", type=int, default=None,
-                    help="run only this shard's assignment (per-node mode)")
-    ap.add_argument("--method", default="grouping", choices=list(METHODS))
-    ap.add_argument("--fit-backend", default="fused",
-                    choices=list(fitting.FIT_BACKENDS),
-                    help="device-work implementation (DESIGN.md §2.1)")
-    ap.add_argument("--select-backend", default="host",
-                    choices=list(SELECT_BACKENDS),
-                    help="where Select's grouping dedup runs: 'host' "
-                         "(np.unique bounce) or 'device' (quantize + sort + "
-                         "gather + fit + scatter on the accelerator)")
-    ap.add_argument("--group-tol", type=float, default=grp.DEFAULT_TOL,
-                    help="grouping tolerance (paper §5.2 'acceptable "
-                         "fluctuation') for the grouping/reuse methods")
-    ap.add_argument("--rep-bucket", type=int, default=64,
-                    help="geometric padding bucket for representative "
-                         "batches (was hard-coded; 64 suits the reduced "
-                         "default workload, use 256 at paper scale)")
-    ap.add_argument("--mode", default="fused", choices=["faithful", "fused"],
-                    help="shared-histogram fit (default; the fused backend's "
-                         "single-launch kernel path) vs paper-faithful "
-                         "per-type passes (always the chained path — a "
-                         "single launch cannot model the paper's cost)")
-    ap.add_argument("--window-lines", type=int, default=6)
-    ap.add_argument("--lines", type=int, default=24)
-    ap.add_argument("--ppl", type=int, default=60)
-    ap.add_argument("--obs", type=int, default=300)
-    ap.add_argument("--num-slices", type=int, default=8)
-    ap.add_argument("--serial", action="store_true",
-                    help="disable prefetch + async persist (reference path)")
-    ap.add_argument("--prefetch-depth", type=int, default=2)
-    ap.add_argument("--out", default=None, help="persist .npz watermarks here")
-    ap.add_argument("--resume", action="store_true")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_spec_args(ap)
     args = ap.parse_args()
-    if args.shard is not None and not 0 <= args.shard < args.shards:
-        ap.error(f"--shard {args.shard} outside range 0..{args.shards - 1}")
+    spec = spec_from_args(args, base=BASE_SPEC)
 
-    sim = SeismicSimulation(SimulationConfig(
-        geometry=CubeGeometry(args.num_slices, args.lines, args.ppl),
-        num_simulations=args.obs,
-    ))
-    # training slices clamped to the cube (the default 4 cover all types)
-    tree = train_type_tree(sim, slices=tuple(range(min(4, args.num_slices))),
-                           window_lines=args.window_lines) \
-        if "ml" in args.method else None
-    cfg = PDFConfig(window_lines=args.window_lines, method=args.method,
-                    mode=args.mode, fit_backend=args.fit_backend,
-                    select_backend=args.select_backend,
-                    group_tol=args.group_tol, rep_bucket=args.rep_bucket)
-    exec_cfg = ExecutorConfig(
-        prefetch=not args.serial,
-        prefetch_depth=args.prefetch_depth,
-        async_persist=not args.serial,
-    )
+    session = PDFSession(spec)
+    print(f"[spec] hash={spec.content_hash()} method={spec.method.name} "
+          f"mode={spec.compute.mode} fit={spec.compute.fit_backend} "
+          f"select={spec.compute.select_backend}")
+    from repro.runtime.scheduler import assign_slices
 
-    sched = SliceScheduler(num_shards=args.shards)
-    for a in sched.assignments(args.slices):
+    slices = session.resolve_slices(None)
+    for a in assign_slices(slices, spec.execution.shards):
         print(f"[assign] shard {a.shard}: slices {list(a.slices)}")
 
-    def make_executor(shard: int) -> StagedExecutor:
-        # On a cluster each node builds its executor over its NFS view;
-        # here every shard sees the same simulation source.
-        return StagedExecutor(cfg, sim, tree=tree, out_dir=args.out,
-                              exec_config=exec_cfg)
+    window_durations: list[float] = []
+
+    def on_window(ws):
+        window_durations.append(ws.load_seconds + ws.compute_seconds)
 
     t0 = time.perf_counter()
-    results = sched.run(make_executor, args.slices,
-                        window_lines=args.window_lines,
-                        shard=args.shard, resume=args.resume)
+    for r in session.run(on_window=on_window):
+        print(f"[slice {r.slice_i}] E={r.avg_error:.4f} windows={len(r.stats)} "
+              f"fitted={sum(w.num_fitted for w in r.stats)}"
+              f"/{session.geometry.points_per_slice}")
     wall = time.perf_counter() - t0
 
-    for s in sorted(results):
-        r = results[s]
-        print(f"[slice {s}] E={r.avg_error:.4f} windows={len(r.stats)} "
-              f"fitted={sum(w.num_fitted for w in r.stats)}"
-              f"/{sim.geometry.points_per_slice}")
-    for shard, rep in sorted(sched.last_reports.items()):
-        if rep is None:
-            continue
-        print(f"[shard {shard}] wall={rep.wall_seconds:.3f}s "
-              f"load={rep.load_seconds:.3f}s wait={rep.wait_seconds:.3f}s "
-              f"compute={rep.compute_seconds:.3f}s persist={rep.persist_seconds:.3f}s "
-              f"load_hidden={rep.load_hidden_fraction:.0%}")
-    med = sched.window_monitor.median()
-    print(f"[total] wall={wall:.3f}s windows={sched.window_monitor.completed} "
-          f"median_window={med * 1e3:.1f}ms" if med is not None else
-          f"[total] wall={wall:.3f}s windows={sched.window_monitor.completed}")
-    if sched.shard_monitor.flagged:
-        print(f"[stragglers] {sched.shard_monitor.flagged}")
+    rep = session.report()
+    for shard, reports in sorted(rep.shard_reports.items()):
+        load = sum(r.load_seconds for r in reports)
+        wait = sum(r.wait_seconds for r in reports)
+        comp = sum(r.compute_seconds for r in reports)
+        pers = sum(r.persist_seconds for r in reports)
+        swall = sum(r.wall_seconds for r in reports)
+        hidden = max(0.0, load - wait) / load if load > 0 else 0.0
+        print(f"[shard {shard}] wall={swall:.3f}s load={load:.3f}s "
+              f"wait={wait:.3f}s compute={comp:.3f}s persist={pers:.3f}s "
+              f"load_hidden={hidden:.0%}")
+    if window_durations:
+        med = sorted(window_durations)[len(window_durations) // 2]
+        print(f"[total] wall={wall:.3f}s windows={rep.windows} "
+              f"median_window={med * 1e3:.1f}ms spec={rep.spec_hash}")
+    else:
+        print(f"[total] wall={wall:.3f}s windows={rep.windows} "
+              f"spec={rep.spec_hash}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,491 @@
+"""The public API (repro/api): spec round-trip + hashing + validation, CLI
+generation, PDFComputer-shim bitwise equivalence, the sampling method, and
+resume provenance checking."""
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    SourceSpec,
+    TreeSpec,
+    add_spec_args,
+    build_source,
+    source_spec_for,
+    spec_from_args,
+)
+from repro.core import distributions as d
+from repro.core import sampling as smp
+from repro.core.executor import METHODS, SAMPLERS, PDFConfig
+from repro.core.pipeline import PDFComputer
+
+RESULT_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
+
+SMALL_SOURCE = SourceSpec(num_slices=8, lines_per_slice=9, points_per_line=12,
+                          observations=250)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return build_source(SMALL_SOURCE)
+
+
+# -- randomized valid specs (deterministic twin of the hypothesis test) --------
+
+
+def random_spec(rng: np.random.Generator) -> PipelineSpec:
+    num_slices = int(rng.integers(1, 20))
+    if rng.random() < 0.5:
+        slices = None
+    else:
+        k = int(rng.integers(1, num_slices + 1))
+        slices = tuple(int(s) for s in rng.choice(num_slices, size=k, replace=False))
+    shards = int(rng.integers(1, 5))
+    return PipelineSpec(
+        source=SourceSpec(
+            kind="simulation",
+            num_slices=num_slices,
+            lines_per_slice=int(rng.integers(1, 40)),
+            points_per_line=int(rng.integers(1, 40)),
+            observations=int(rng.integers(1, 1000)),
+            num_layers=int(rng.integers(1, 32)),
+            base_vp=float(rng.uniform(1.0, 1e4)),
+            quantize_decimals=int(rng.integers(0, 6)),
+            group_block=int(rng.integers(1, 8)),
+            line_block=int(rng.integers(1, 8)),
+            seed=int(rng.integers(0, 2**31)),
+            throttle_mb_s=None if rng.random() < 0.5 else float(rng.uniform(0.1, 1e3)),
+        ),
+        method=MethodSpec(
+            name=str(rng.choice(METHODS)),
+            group_tol=float(10.0 ** rng.uniform(-9, 2)),
+            rep_bucket=int(rng.integers(1, 512)),
+            error_bound=None if rng.random() < 0.5 else float(rng.uniform(0.01, 10)),
+            sample_frac=float(rng.uniform(0.001, 1.0)),
+            sampler=str(rng.choice(SAMPLERS)),
+            kmeans_iters=int(rng.integers(1, 20)),
+            sample_seed=int(rng.integers(0, 2**31)),
+            tree=TreeSpec(
+                depth=int(rng.integers(1, 8)),
+                max_bins=int(rng.integers(2, 64)),
+                train_slices=None if rng.random() < 0.5
+                else tuple(int(s) for s in rng.choice(64, size=4, replace=False)),
+                train_window_lines=int(rng.integers(1, 8)),
+            ),
+        ),
+        compute=ComputeSpec(
+            types=[d.TYPES_4, d.TYPES_10, ("normal", "uniform")][int(rng.integers(3))],
+            num_bins=int(rng.integers(2, 128)),
+            window_lines=int(rng.integers(1, 50)),
+            mode=str(rng.choice(["faithful", "fused"])),
+            fit_backend=str(rng.choice(["reference", "kernels", "fused"])),
+            select_backend=str(rng.choice(["host", "device"])),
+        ),
+        execution=ExecSpec(
+            slices=slices,
+            shards=shards,
+            shard=None if rng.random() < 0.5 else int(rng.integers(0, shards)),
+            prefetch=bool(rng.random() < 0.5),
+            prefetch_depth=int(rng.integers(1, 8)),
+            async_persist=bool(rng.random() < 0.5),
+            out_dir=None,
+            resume=False,
+        ),
+    )
+
+
+def test_json_roundtrip_randomized_specs():
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        spec = random_spec(rng)
+        back = PipelineSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.content_hash() == spec.content_hash()
+
+
+def test_json_roundtrip_hypothesis():
+    pytest.importorskip("hypothesis",
+                        reason="property tests need the optional 'test' extra")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def specs(draw):
+        num_slices = draw(st.integers(1, 20))
+        slices = draw(st.one_of(
+            st.none(),
+            st.lists(st.integers(0, num_slices - 1), min_size=1, max_size=4,
+                     unique=True).map(tuple),
+        ))
+        shards = draw(st.integers(1, 4))
+        return PipelineSpec(
+            source=SourceSpec(
+                num_slices=num_slices,
+                lines_per_slice=draw(st.integers(1, 40)),
+                points_per_line=draw(st.integers(1, 40)),
+                observations=draw(st.integers(1, 1000)),
+                seed=draw(st.integers(0, 2**31 - 1)),
+                throttle_mb_s=draw(st.one_of(
+                    st.none(),
+                    st.floats(0.1, 1e3, allow_nan=False, allow_infinity=False))),
+            ),
+            method=MethodSpec(
+                name=draw(st.sampled_from(METHODS)),
+                group_tol=draw(st.floats(1e-9, 1e2, allow_nan=False,
+                                         allow_infinity=False, exclude_min=False)),
+                rep_bucket=draw(st.integers(1, 512)),
+                error_bound=draw(st.one_of(
+                    st.none(),
+                    st.floats(0.01, 10, allow_nan=False, allow_infinity=False))),
+                sample_frac=draw(st.floats(0.001, 1.0, allow_nan=False)),
+                sampler=draw(st.sampled_from(SAMPLERS)),
+                kmeans_iters=draw(st.integers(1, 20)),
+                tree=TreeSpec(depth=draw(st.integers(1, 8)),
+                              max_bins=draw(st.integers(2, 64))),
+            ),
+            compute=ComputeSpec(
+                types=draw(st.sampled_from([d.TYPES_4, d.TYPES_10])),
+                num_bins=draw(st.integers(2, 128)),
+                window_lines=draw(st.integers(1, 50)),
+                mode=draw(st.sampled_from(["faithful", "fused"])),
+                fit_backend=draw(st.sampled_from(["reference", "kernels", "fused"])),
+                select_backend=draw(st.sampled_from(["host", "device"])),
+            ),
+            execution=ExecSpec(
+                slices=slices,
+                shards=shards,
+                prefetch=draw(st.booleans()),
+                prefetch_depth=draw(st.integers(1, 8)),
+                async_persist=draw(st.booleans()),
+            ),
+        )
+
+    @settings(max_examples=200, deadline=None)
+    @given(specs())
+    def inner(spec):
+        back = PipelineSpec.from_json(spec.to_json())
+        assert back == spec
+        assert back.content_hash() == spec.content_hash()
+
+    inner()
+
+
+# -- hash semantics ------------------------------------------------------------
+
+
+def test_hash_ignores_execution_but_not_method_or_compute():
+    base = PipelineSpec()
+    staged = dataclasses.replace(
+        base, execution=ExecSpec(prefetch=False, shards=4, prefetch_depth=5))
+    assert staged.content_hash() == base.content_hash()
+
+    tol = dataclasses.replace(base, method=MethodSpec(group_tol=1e-3))
+    bins = dataclasses.replace(base, compute=ComputeSpec(num_bins=20))
+    seed = dataclasses.replace(base, source=SourceSpec(seed=1))
+    assert len({base.content_hash(), tol.content_hash(), bins.content_hash(),
+                seed.content_hash()}) == 4
+
+
+def test_hash_ignores_nfs_throttle_model():
+    # ThrottledSource only sleeps — a throttled benchmark run and its
+    # unthrottled resume are the same computation
+    base = PipelineSpec()
+    throttled = dataclasses.replace(base, source=SourceSpec(throttle_mb_s=50.0))
+    assert throttled.content_hash() == base.content_hash()
+
+
+def test_shim_and_session_stamp_the_same_hash(sim):
+    spec = PipelineSpec(source=SMALL_SOURCE,
+                        method=MethodSpec(name="grouping"),
+                        compute=ComputeSpec(window_lines=3))
+    shim = PDFComputer(spec.pdf_config(), sim)
+    assert shim.spec.content_hash() == spec.content_hash()
+    assert PDFSession(spec, data_source=sim).spec_hash == spec.content_hash()
+
+
+# -- validation ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build", [
+    lambda: ComputeSpec(num_bins=1),
+    lambda: ComputeSpec(window_lines=0),
+    lambda: ComputeSpec(types=()),
+    lambda: ComputeSpec(types=("nope",)),
+    lambda: ComputeSpec(mode="turbo"),
+    lambda: MethodSpec(name="magic"),
+    lambda: MethodSpec(error_bound=0.0),
+    lambda: MethodSpec(error_bound=-1.0),
+    lambda: MethodSpec(group_tol=0.0),
+    lambda: MethodSpec(rep_bucket=0),
+    lambda: MethodSpec(sample_frac=0.0),
+    lambda: MethodSpec(sample_frac=1.5),
+    lambda: MethodSpec(sampler="sobol"),
+    lambda: MethodSpec(kmeans_iters=0),
+    lambda: TreeSpec(depth=0),
+    lambda: TreeSpec(max_bins=1),
+    lambda: TreeSpec(train_slices=()),
+    lambda: SourceSpec(kind="parquet"),
+    lambda: SourceSpec(num_slices=0),
+    lambda: SourceSpec(observations=0),
+    lambda: SourceSpec(throttle_mb_s=0.0),
+    lambda: ExecSpec(shards=0),
+    lambda: ExecSpec(shard=2, shards=2),
+    lambda: ExecSpec(prefetch_depth=0),
+    lambda: ExecSpec(resume=True),  # resume without out_dir
+    lambda: PipelineSpec(version=99),
+    lambda: PipelineSpec(source=SourceSpec(num_slices=2),
+                         execution=ExecSpec(slices=(5,))),
+])
+def test_invalid_specs_rejected_at_construction(build):
+    with pytest.raises(ValueError):
+        build()
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(num_bins=1),
+    dict(window_lines=0),
+    dict(error_bound=0.0),
+    dict(error_bound=-2.0),
+    dict(sample_frac=0.0),
+    dict(sampler="sobol"),
+    dict(kmeans_iters=0),
+])
+def test_pdf_config_validation(kwargs):
+    with pytest.raises(ValueError):
+        PDFConfig(**kwargs)
+
+
+def test_from_json_rejects_unknown_keys_and_versions():
+    spec = PipelineSpec()
+    payload = spec.to_dict()
+    payload["method"]["group_tolerance"] = 1e-3  # typo'd knob must not pass
+    with pytest.raises(ValueError, match="unknown spec.method keys"):
+        PipelineSpec.from_dict(payload)
+    payload = spec.to_dict()
+    payload["extra"] = {}
+    with pytest.raises(ValueError, match="unknown spec keys"):
+        PipelineSpec.from_dict(payload)
+    payload = spec.to_dict()
+    payload["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        PipelineSpec.from_dict(payload)
+
+
+# -- CLI generation ------------------------------------------------------------
+
+
+def _parse(argv, base=None):
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)
+    return spec_from_args(ap.parse_args(argv), base=base)
+
+
+def test_cli_flags_override_defaults():
+    spec = _parse(["--method", "grouping_ml", "--types", "10",
+                   "--group-tol", "1e-4", "--window-lines", "9",
+                   "--tree-depth", "6", "--slices", "0", "2", "--serial"])
+    assert spec.method.name == "grouping_ml"
+    assert spec.compute.types == d.TYPES_10
+    assert spec.method.group_tol == 1e-4
+    assert spec.compute.window_lines == 9
+    assert spec.method.tree.depth == 6
+    assert spec.execution.slices == (0, 2)
+    assert spec.execution.prefetch is False and spec.execution.async_persist is False
+
+
+def test_cli_base_defaults_survive_unless_overridden():
+    base = PipelineSpec(compute=ComputeSpec(num_bins=20))
+    assert _parse([], base=base).compute.num_bins == 20
+    assert _parse(["--num-bins", "32"], base=base).compute.num_bins == 32
+
+
+def test_cli_spec_file_roundtrip(tmp_path):
+    spec = PipelineSpec(source=SMALL_SOURCE, method=MethodSpec(name="reuse"),
+                        compute=ComputeSpec(num_bins=24))
+    f = tmp_path / "spec.json"
+    f.write_text(spec.to_json())
+    loaded = _parse(["--spec", str(f)])
+    assert loaded == spec
+    # explicit flags override the file
+    assert _parse(["--spec", str(f), "--method", "baseline"]).method.name == "baseline"
+
+
+def test_no_pipeline_flags_declared_outside_api_cli():
+    """The acceptance grep, as a test: consumers must not hand-declare
+    pipeline knobs — the spec is the single declaration site."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    pipeline_flags = (
+        "--method", "--group-tol", "--rep-bucket", "--window-lines",
+        "--num-bins", "--types", "--fit-backend", "--select-backend",
+        "--mode", "--slices", "--shards", "--shard", "--prefetch",
+        "--obs", "--ppl", "--lines", "--num-slices", "--error-bound",
+        "--sample-frac", "--sampler", "--resume", "--serial",
+    )
+    consumers = [
+        *(root / "src" / "repro" / "launch").glob("*pdf*.py"),
+        *(root / "benchmarks").glob("*.py"),
+        *(root / "examples").glob("pdf*.py"),
+        root / "examples" / "quickstart.py",
+    ]
+    offenders = []
+    for path in consumers:
+        text = path.read_text()
+        for flag in pipeline_flags:
+            if f'add_argument("{flag}"' in text or f"add_argument('{flag}'" in text:
+                offenders.append(f"{path.name}: {flag}")
+    assert not offenders, offenders
+
+
+# -- source spec <-> live source ----------------------------------------------
+
+
+def test_source_spec_describes_and_rebuilds_the_simulation(sim):
+    spec = source_spec_for(sim)
+    assert spec == SMALL_SOURCE
+    rebuilt = build_source(spec)
+    assert rebuilt.geometry == sim.geometry
+    from repro.core.regions import Window
+
+    w = Window(2, 0, 3)
+    np.testing.assert_array_equal(rebuilt.load_window(w), sim.load_window(w))
+
+
+def test_external_source_requires_object():
+    with pytest.raises(ValueError, match="external"):
+        build_source(SourceSpec(kind="external"))
+
+
+def test_paper_workload_configs_lift_to_specs():
+    from repro.configs.pdf_seismic import SET1, SET3, to_spec
+
+    s1 = to_spec(SET1)
+    assert s1.source.num_slices == 501 and s1.compute.window_lines == 25
+    assert s1.execution.slices == (201,)
+    assert PipelineSpec.from_json(s1.to_json()) == s1
+    assert to_spec(SET3).content_hash() != s1.content_hash()
+
+
+# -- session vs shim: bitwise equivalence --------------------------------------
+
+
+@pytest.mark.parametrize("method", ["baseline", "grouping", "reuse"])
+def test_session_matches_shim_bitwise(sim, method):
+    spec = PipelineSpec(source=SMALL_SOURCE, method=MethodSpec(name=method),
+                        compute=ComputeSpec(window_lines=3))
+    shim_res = PDFComputer(spec.pdf_config(), sim).run_slice(2)
+    sess_res = PDFSession(spec, data_source=sim).run_all([2])[2]
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(getattr(shim_res, f), getattr(sess_res, f),
+                                      err_msg=f)
+    assert shim_res.avg_error == sess_res.avg_error
+    assert shim_res.spec_hash == sess_res.spec_hash == spec.content_hash()
+
+
+def test_session_streams_slices_in_order(sim):
+    spec = PipelineSpec(source=SMALL_SOURCE, compute=ComputeSpec(window_lines=3),
+                        execution=ExecSpec(slices=(3, 1, 2)))
+    session = PDFSession(spec, data_source=sim)
+    seen = [r.slice_i for r in session.run()]
+    assert seen == [3, 1, 2]
+    rep = session.report()
+    assert rep.slices_done == 3
+    assert rep.windows == 9  # 9 lines / 3-line windows x 3 slices
+    assert rep.spec_hash == spec.content_hash()
+
+
+# -- sampling as a first-class method ------------------------------------------
+
+
+def test_sampling_full_fraction_matches_feature_helper(sim):
+    spec = PipelineSpec(
+        source=SMALL_SOURCE,
+        method=MethodSpec(name="sampling", sample_frac=1.0),
+        compute=ComputeSpec(window_lines=9),  # one window: same scope as helper
+    )
+    session = PDFSession(spec, data_source=sim)
+    res = session.run_all([2])[2]
+    assert (res.type_idx >= 0).all()  # frac=1.0 classifies every point
+    assert sum(s.num_fitted for s in res.stats) == len(res.type_idx)
+    got = res.features(spec.compute.types)
+
+    ref = smp.slice_features_from_moments(
+        res.mean, res.std, session.tree, spec.compute.types,
+        group_tol=spec.method.group_tol, skew=res.skew, kurt=res.kurt,
+    )
+    np.testing.assert_array_equal(got.type_percentage, ref.type_percentage)
+    assert got.num_sampled == ref.num_sampled
+    assert got.avg_mean == pytest.approx(ref.avg_mean)
+    assert got.avg_std == pytest.approx(ref.avg_std)
+
+
+def test_sampling_partial_fraction_marks_unsampled(sim):
+    spec = PipelineSpec(
+        source=SMALL_SOURCE,
+        method=MethodSpec(name="sampling", sample_frac=0.25, sample_seed=3),
+        compute=ComputeSpec(window_lines=3),
+    )
+    res = PDFSession(spec, data_source=sim).run_all([2])[2]
+    mask = res.type_idx >= 0
+    frac = mask.mean()
+    assert 0.2 <= frac <= 0.3
+    assert res.avg_error == 0.0  # no Eq.-5 fitting at all
+    # the random sampler subsets the window BEFORE the moments pass (§5.4's
+    # cost falls with the rate): unsampled rows never got moments
+    assert (res.mean[~mask] == 0).all()
+    assert (np.abs(res.mean[mask]) > 0).all()
+    # draw is seeded per (sample_seed, slice, line): a re-run reproduces it
+    res2 = PDFSession(spec, data_source=sim).run_all([2])[2]
+    np.testing.assert_array_equal(res.type_idx, res2.type_idx)
+    np.testing.assert_array_equal(res.mean, res2.mean)
+
+
+def test_sampling_kmeans_runs(sim):
+    spec = PipelineSpec(
+        source=SMALL_SOURCE,
+        method=MethodSpec(name="sampling", sample_frac=0.2, sampler="kmeans",
+                          kmeans_iters=3),
+        compute=ComputeSpec(window_lines=9),
+    )
+    res = PDFSession(spec, data_source=sim).run_all([2])[2]
+    mask = res.type_idx >= 0
+    assert 0 < mask.sum() <= len(res.type_idx)
+
+
+# -- resume provenance ---------------------------------------------------------
+
+
+def test_resume_refuses_mismatched_spec(sim, tmp_path):
+    out = str(tmp_path / "ckpt")
+    spec = PipelineSpec(source=SMALL_SOURCE, method=MethodSpec(name="grouping"),
+                        compute=ComputeSpec(window_lines=3),
+                        execution=ExecSpec(out_dir=out))
+    PDFSession(spec, data_source=sim).run_all([2])
+
+    changed = dataclasses.replace(spec, method=MethodSpec(name="grouping",
+                                                          group_tol=1e-3))
+    with pytest.raises(ValueError, match="resume mismatch"):
+        PDFSession(changed, data_source=sim).run_all([2], resume=True)
+
+    # the matching spec resumes cleanly (and re-runs nothing)
+    res = PDFSession(spec, data_source=sim).run_all([2], resume=True)[2]
+    assert len(res.stats) == 0
+
+
+def test_watermark_and_npz_carry_spec_hash(sim, tmp_path):
+    out = tmp_path / "ckpt"
+    spec = PipelineSpec(source=SMALL_SOURCE, compute=ComputeSpec(window_lines=3),
+                        execution=ExecSpec(out_dir=str(out)))
+    PDFSession(spec, data_source=sim).run_all([2])
+    mark = json.loads((out / "slice2_watermark.json").read_text())
+    assert mark["spec_hash"] == spec.content_hash()
+    z = np.load(next(out.glob("slice2_window_*.npz")))
+    assert str(z["spec_hash"]) == spec.content_hash()
