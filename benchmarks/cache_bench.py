@@ -1,0 +1,71 @@
+"""Result-cache speedup: one slice computed cold vs served from the
+spec-hash-keyed ``ResultCache`` (api/cache.py).
+
+The pair of rows records what repeated benchmark sweeps gain from
+``--cache-dir``: ``cache/grouping_cold`` is a normal grouped slice run that
+misses and stores; ``cache/grouping_hit`` reruns the *identical spec* in a
+fresh session and is served bitwise-identical results from disk — no
+loading, no Select, no device work. The derived column carries the speedup
+and asserts the hit really was a hit (and bitwise-equal, so the row can
+never quietly measure a silent recompute).
+
+Rows are tracked, not gated (the hit path is a file read — its absolute
+time is all filesystem noise at this workload size).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common  # noqa: E402 — run via benchmarks/run.py
+from repro.api import PDFSession
+from repro.core import distributions as d
+from repro.core.executor import RESULT_FIELDS
+
+
+def run(quick: bool = True, cache_dir: str | None = None):
+    sim = common.small_sim(num_simulations=200 if quick else 1000)
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        cdir = cache_dir or tmp
+        spec = common.method_spec(sim, "grouping", d.TYPES_4, window_lines=6,
+                                  cache_dir=cdir)
+
+        # jit warmup on another slice (also stored — irrelevant to slice 2)
+        PDFSession(spec, data_source=sim).run_all([3])
+
+        cold_session = PDFSession(spec, data_source=sim)
+        t0 = time.perf_counter()
+        cold = cold_session.run_all([2])[2]
+        t_cold = time.perf_counter() - t0
+        # With a persistent --cache-dir a rerun's "cold" pass is itself
+        # served from cache (that being the feature); the derived column
+        # records which measurement this row actually is.
+        cold_kind = "hit (persistent cache)" if cold.cached else "miss+store"
+
+        hit_session = PDFSession(spec, data_source=sim)
+        t0 = time.perf_counter()
+        hit = hit_session.run_all([2])[2]
+        t_hit = time.perf_counter() - t0
+        rep = hit_session.report()
+        assert rep.cache_hits == 1 and rep.cache_misses == 0 and hit.cached
+        for f in RESULT_FIELDS:
+            np.testing.assert_array_equal(getattr(cold, f), getattr(hit, f))
+        assert cold.avg_error == hit.avg_error
+
+        rows.append(common.Row(
+            "cache/grouping_cold", t_cold * 1e6,
+            derived=cold_kind, spec_hash=cold.spec_hash or ""))
+        rows.append(common.Row(
+            "cache/grouping_hit", t_hit * 1e6,
+            derived=f"speedup={t_cold / max(t_hit, 1e-9):.1f}x bitwise-equal",
+            spec_hash=hit.spec_hash or ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

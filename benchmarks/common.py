@@ -68,31 +68,46 @@ def train_type_tree(sim, types=d.TYPES_4, slices=(0, 1, 2, 3),
 
 def method_spec(sim, method: str, types, window_lines: int,
                 mode: str = "faithful",
-                exec_config: ExecSpec | None = None, **method_kw) -> PipelineSpec:
+                exec_config: ExecSpec | None = None,
+                cache_dir: str | None = None, **method_kw) -> PipelineSpec:
     """The one place benchmarks turn knobs into a spec. ``rep_bucket=32``
     is sized for the reduced workloads (the default 64+ would pad grouped
-    batches past the baseline's size on these small windows)."""
+    batches past the baseline's size on these small windows).
+    ``cache_dir`` threads the spec-hash-keyed ``ResultCache`` into the run's
+    ``ExecSpec`` — repeated sweeps of an identical spec skip recomputation."""
+    import dataclasses
+
+    execution = exec_config if exec_config is not None else ExecSpec()
+    if cache_dir is not None:
+        execution = dataclasses.replace(execution, cache_dir=cache_dir)
     return PipelineSpec(
         source=source_spec_for(sim),
         method=MethodSpec(name=method, rep_bucket=32, **method_kw),
         compute=ComputeSpec(types=tuple(types), window_lines=window_lines,
                             mode=mode),
-        execution=exec_config if exec_config is not None else ExecSpec(),
+        execution=execution,
     )
 
 
 def run_method(sim, method: str, types, window_lines: int, slice_i: int,
                tree=None, mode: str = "faithful", warmup: bool = True,
-               exec_config: ExecSpec | None = None, reps: int = 1):
+               exec_config: ExecSpec | None = None, reps: int = 1,
+               cache_dir: str | None = None):
     """Runs one slice through a ``PDFSession`` (default overlapped config;
     pass ``exec_config=SERIAL`` for the reference serial path). Returns
     (SliceResult, wall_seconds); per-stage totals are on ``res`` stats /
     the session's ``report()``, and ``res.spec_hash`` identifies the spec.
     ``reps > 1`` repeats the measured slice and keeps the best-compute run —
     container noise is strictly additive, so the min is the estimator stable
-    enough for the ``run.py --check`` gate to diff across runs."""
+    enough for the ``run.py --check`` gate to diff across runs. With
+    ``cache_dir`` the run goes through a ``ResultCache``: the first rep of a
+    fresh cache is the cold measurement and any repeat is a hit, so the
+    best-of selection below considers only non-cached reps when any exist —
+    a cached rep's compute time is 0 and would otherwise always win,
+    silently turning a method measurement into a file-read measurement
+    (cache_bench measures the cold/hit pair explicitly)."""
     spec = method_spec(sim, method, types, window_lines, mode=mode,
-                       exec_config=exec_config)
+                       exec_config=exec_config, cache_dir=cache_dir)
     if warmup:
         # trigger jit compilation for this method's shapes on another slice
         PDFSession(spec, data_source=sim, tree=tree).run_all(
@@ -106,5 +121,6 @@ def run_method(sim, method: str, types, window_lines: int, slice_i: int,
         runs.append((time.perf_counter() - t0, res))
     # Keep the best-compute run's own wall so (res, wall) stay consistent
     # (overlap stats derive from their difference).
-    wall, res = min(runs, key=lambda r: r[1].total_compute_seconds)
+    computed = [r for r in runs if not r[1].cached] or runs
+    wall, res = min(computed, key=lambda r: r[1].total_compute_seconds)
     return res, wall

@@ -5,6 +5,7 @@
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -84,6 +85,9 @@ def main() -> None:
                     help="comma-separated substring filter on module names")
     ap.add_argument("--json-out", default="BENCH_pipeline.json",
                     help="where to write the name -> us_per_call map ('' disables)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent ResultCache dir for cache-aware modules "
+                         "(default: each run uses a throwaway temp dir)")
     ap.add_argument("--check", action="store_true",
                     help="regression gate: compare fresh timings against the "
                          "committed --json-out file instead of rewriting it; "
@@ -93,6 +97,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cache_bench,
         fig06_methods_small,
         fig07_errors,
         fig08_window_size,
@@ -106,6 +111,7 @@ def main() -> None:
     modules = [
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
+        cache_bench,
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}
@@ -114,7 +120,10 @@ def main() -> None:
 
     def measure(mod, quiet: bool = False) -> None:
         t0 = time.perf_counter()
-        rows = mod.run(quick=not args.full)
+        kwargs = {}
+        if args.cache_dir and "cache_dir" in inspect.signature(mod.run).parameters:
+            kwargs["cache_dir"] = args.cache_dir
+        rows = mod.run(quick=not args.full, **kwargs)
         for r in rows:
             if not quiet:  # retry passes must not duplicate CSV rows
                 print(r.csv())

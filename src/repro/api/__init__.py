@@ -12,6 +12,7 @@ rows, and generate the CLI surface of every launcher (``api.cli``). See
 DESIGN.md §API.
 """
 
+from repro.api.cache import ResultCache
 from repro.api.cli import add_spec_args, explicit_fields, spec_from_args
 from repro.api.session import PDFSession, SessionReport
 from repro.api.spec import (
@@ -34,6 +35,7 @@ __all__ = [
     "MethodSpec",
     "PDFSession",
     "PipelineSpec",
+    "ResultCache",
     "SessionReport",
     "SourceSpec",
     "TreeSpec",

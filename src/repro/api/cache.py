@@ -1,0 +1,97 @@
+"""``ResultCache``: content-addressed per-slice results, keyed by spec hash.
+
+The hash rule (DESIGN.md §11/§12) makes this cache sound: equal
+``content_hash`` ⇒ bitwise-identical per-point results, so a ``SliceResult``
+persisted under a hash can be served verbatim to ANY later run of an equal
+spec — across processes, benchmark sweeps, and ``ExecSpec``-only variations
+(staging knobs are excluded from the hash by the staged-executor
+equivalence contract). A ``kind='file'`` source hashes by its manifest's
+content sha256, so the cache also misses when the underlying bytes change,
+not just when a knob does.
+
+Layout: one ``.npz`` per (spec hash, slice) —
+
+    cache_dir/<spec_hash>/slice<N>.npz    # _FIELDS arrays + avg_error
+
+Writes are tmp + atomic rename, so two concurrent runs of the same spec
+race benignly (last writer wins with identical bytes) and a crashed write
+never leaves a half-entry a later run could load. ``PDFSession`` consults
+the cache per slice when ``ExecSpec.cache_dir`` is set and counts
+hits/misses into its ``report()``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import warnings
+import zipfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.executor import _FIELDS, SliceResult
+
+
+class ResultCache:
+    """Filesystem-backed map ``(spec_hash, slice) -> SliceResult``."""
+
+    def __init__(self, cache_dir: str | Path):
+        self.dir = Path(cache_dir)
+
+    def path(self, spec_hash: str, slice_i: int) -> Path:
+        return self.dir / spec_hash / f"slice{slice_i}.npz"
+
+    def lookup(self, spec_hash: str, slice_i: int) -> SliceResult | None:
+        """The cached ``SliceResult``, or ``None`` on miss. Served results
+        carry ``cached=True`` and empty window ``stats`` (no work ran — the
+        same shape a fully resumed slice has)."""
+        f = self.path(spec_hash, slice_i)
+        if not f.exists():
+            return None
+        try:
+            with np.load(f) as z:  # close the zip handle: no fd per hit
+                if str(z["spec_hash"]) != spec_hash:  # misfiled: miss
+                    return None
+                return SliceResult(
+                    *(z[name] for name in _FIELDS),
+                    avg_error=float(z["avg_error"]),
+                    stats=[],
+                    slice_i=slice_i,
+                    spec_hash=spec_hash,
+                    cached=True,
+                )
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile) as e:
+            # A truncated / foreign / partially-synced entry (e.g. an
+            # interrupted copy into a shared cache_dir — the writer's
+            # tmp+rename cannot protect against that) is a miss, not a
+            # crash: the slice recomputes and the store overwrites it.
+            warnings.warn(f"ignoring unreadable cache entry {f}: {e}",
+                          stacklevel=2)
+            return None
+
+    def store(self, result: SliceResult) -> None:
+        """Persist one computed slice under its own ``spec_hash``."""
+        if result.spec_hash is None or result.slice_i is None:
+            raise ValueError(
+                "cannot cache a SliceResult without spec_hash and slice_i")
+        f = self.path(result.spec_hash, result.slice_i)
+        f.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=f.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                np.savez(
+                    fh,
+                    spec_hash=result.spec_hash,
+                    slice_i=result.slice_i,
+                    avg_error=result.avg_error,
+                    **{name: getattr(result, name) for name in _FIELDS},
+                )
+            os.replace(tmp, f)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise

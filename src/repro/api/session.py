@@ -7,7 +7,10 @@ when the method wants one, one ``StagedExecutor`` per shard) and exposes a
 aggregate incrementally at paper scale instead of holding every slice's
 arrays until the end. ``run_all`` drains it into the familiar
 ``{slice: result}`` map; ``report()`` aggregates the per-stage executor
-reports plus the spec's provenance hash.
+reports plus the spec's provenance hash (and, when ``ExecSpec.cache_dir``
+routes the session through a ``ResultCache``, the per-slice hit/miss
+counts — cache hits stream stored results bitwise-identical without
+building an executor at all).
 
 Slices are dealt round-robin over ``spec.execution.shards`` (the paper's
 per-node whole-slice assignment, runtime/scheduler.assign_slices); each
@@ -23,6 +26,7 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterator
 
+from repro.api.cache import ResultCache
 from repro.api.spec import PipelineSpec, build_source
 from repro.core import ml_predict as mlp
 from repro.core import regions
@@ -44,6 +48,10 @@ class SessionReport:
     wait_seconds: float
     compute_seconds: float
     persist_seconds: float
+    # ResultCache traffic (ExecSpec.cache_dir): slices served without any
+    # compute vs slices computed (and stored). Both stay 0 with no cache.
+    cache_hits: int = 0
+    cache_misses: int = 0
     shard_reports: dict[int, list[ExecutorReport]] = field(default_factory=dict)
 
     @property
@@ -76,6 +84,25 @@ class PDFSession:
         self._executors: dict[int, StagedExecutor] = {}
         self._reports: dict[int, list[ExecutorReport]] = {}
         self._slices_done = 0
+        # Hashed once: the spec is frozen, and for kind='file' hashing reads
+        # + digests the on-disk manifest — per-slice cache lookups must not
+        # repeat that (and a manifest swapped mid-run must not split the
+        # session across two hashes).
+        self._spec_hash = spec.content_hash()
+        self.cache = (ResultCache(spec.execution.cache_dir)
+                      if spec.execution.cache_dir else None)
+        self.cache_hits = 0
+        self.cache_misses = 0
+        if self.cache is not None and spec.source.kind == "external":
+            # Same honesty gap as resume: the hash covers the pipeline
+            # knobs but cannot capture an external source's data identity,
+            # so a cache entry could be served to a run over different data.
+            warnings.warn(
+                "result cache with an external data source: the spec hash "
+                "keys the pipeline knobs only, not the dataset's identity — "
+                "make sure cache_dir belongs to this source (or export the "
+                "data with file_source.export_cube and use kind='file')",
+                stacklevel=2)
 
     # -- components ------------------------------------------------------------
 
@@ -85,7 +112,7 @@ class PDFSession:
 
     @property
     def spec_hash(self) -> str:
-        return self.spec.content_hash()
+        return self._spec_hash
 
     def _needs_tree(self) -> bool:
         m = self.spec.method.name
@@ -145,7 +172,14 @@ class PDFSession:
         spec hash). ``slices`` defaults to ``spec.execution.slices`` (then
         to the whole cube); ``resume`` defaults to ``spec.execution.resume``.
         Shards run in assignment order; within a shard, slices stream in the
-        order given."""
+        order given.
+
+        With ``ExecSpec.cache_dir`` set, each slice first consults the
+        ``ResultCache`` under the spec's content hash: a hit streams the
+        stored result bitwise-identical (``cached=True``, no executor work,
+        no ``on_window`` callbacks), a miss computes the slice and stores
+        it. Executors are built lazily, so a fully cache-served run never
+        builds one (nor trains the decision tree)."""
         if resume is None:
             resume = self.spec.execution.resume
         if resume and self.spec.source.kind == "external":
@@ -159,13 +193,27 @@ class PDFSession:
                 "identity — make sure out_dir belongs to this source",
                 stacklevel=2)
         exe = self.spec.execution
+        bound = self.spec.method.error_bound
         for a in assign_slices(self.resolve_slices(slices), exe.shards):
             if exe.shard is not None and a.shard != exe.shard:
                 continue
             if not a.slices:
                 continue
-            ex = self.executor(a.shard)
+            ex = None
             for s in a.slices:
+                if self.cache is not None:
+                    hit = self.cache.lookup(self.spec_hash, s)
+                    if hit is not None:
+                        if bound is not None:
+                            hit.error_bound_satisfied = hit.avg_error <= bound
+                        self.cache_hits += 1
+                        self._slices_done += 1
+                        self._persist_cached(hit, resume=resume)
+                        yield hit
+                        continue
+                    self.cache_misses += 1
+                if ex is None:
+                    ex = self.executor(a.shard)
                 plan = regions.build_plan(
                     self.geometry, [s], self.spec.compute.window_lines
                 )
@@ -173,7 +221,43 @@ class PDFSession:
                 if ex.last_report is not None:
                     self._reports.setdefault(a.shard, []).append(ex.last_report)
                 self._slices_done += 1
+                if self.cache is not None:
+                    self.cache.store(result)
                 yield result
+
+    def _persist_cached(self, result: SliceResult, resume: bool = False) -> None:
+        """Honor ``ExecSpec.out_dir`` for cache-served slices: a hit skips
+        the executor, so its window ``.npz`` files + watermark are written
+        here from the cached arrays instead (same ``PersistStage`` format,
+        identical bytes per the cache's bitwise contract) — a run with both
+        ``--cache-dir`` and ``--out-dir`` never leaves out_dir empty. A
+        resuming run applies the same watermark spec-hash mismatch check
+        the executor does: a cache hit must not quietly overwrite another
+        computation's watermark where the computed path would refuse."""
+        out_dir = self.spec.execution.out_dir
+        if out_dir is None:
+            return
+        from repro.core.executor import _FIELDS, PersistStage
+
+        geom, s = self.geometry, result.slice_i
+        persist = PersistStage(out_dir, async_writes=False,
+                               spec_hash=self.spec_hash)
+        mark = 0
+        if resume:
+            info = persist.watermark_info(s)
+            persist.check_resume_hash(s, info)
+            # like the executor, skip windows the watermark already covers —
+            # a resumed cache-hit run over a fully persisted out_dir must
+            # not rewrite identical bytes for the whole slice
+            mark = int(info["next_line"])
+        for w in regions.iter_windows(geom, s, self.spec.compute.window_lines,
+                                      start_line=mark):
+            lo, hi = w.line_start * geom.points_per_line, w.line_end * geom.points_per_line
+            persist.submit(
+                s, w, {name: getattr(result, name)[lo:hi] for name in _FIELDS}
+            )
+        persist.close()
+        persist.raise_if_failed()
 
     def run_all(
         self,
@@ -203,6 +287,8 @@ class PDFSession:
             spec_hash=self.spec_hash,
             slices_done=self._slices_done,
             windows=windows,
+            cache_hits=self.cache_hits,
+            cache_misses=self.cache_misses,
             wall_seconds=totals["wall"],
             load_seconds=totals["load"],
             wait_seconds=totals["wait"],

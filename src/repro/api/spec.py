@@ -14,9 +14,12 @@ fix: a frozen, versioned dataclass tree that
     BENCH rows for provenance and resume-mismatch detection.
 
 Hash rule: ``version + source + method + compute`` are hashed; ``execution``
-is NOT — staging knobs (prefetch, shards, persist dir) are bitwise-invariant
-by the staged-executor equivalence contract (DESIGN.md §9), so two runs with
-the same hash must produce identical per-point results.
+is NOT — staging knobs (prefetch, shards, persist dir, result cache) are
+bitwise-invariant by the staged-executor equivalence contract (DESIGN.md §9),
+so two runs with the same hash must produce identical per-point results —
+the invariant the spec-hash-keyed ``ResultCache`` is built on.
+``kind='file'`` sources hash by their on-disk manifest's content sha256
+(DESIGN.md §12), so the hash pins the bytes read, not just the knobs.
 
 Every field carries its own CLI metadata (``help``/``choices``/parsers), so
 ``api.cli`` can generate argparse flags from this single declaration —
@@ -42,10 +45,14 @@ from repro.core.executor import (
     PDFConfig,
 )
 
-SPEC_VERSION = 1
+# Version 2: SourceSpec grew kind='file' (+ path/layout) and file sources
+# hash by their manifest's content sha256 — a semantic change to the hash
+# payload, so version-1 specs must be re-emitted.
+SPEC_VERSION = 2
 
 MODES = ("faithful", "fused")
-SOURCE_KINDS = ("simulation", "external")
+SOURCE_KINDS = ("simulation", "external", "file")
+FILE_LAYOUTS = ("chunked",)  # mirrors data.file_source.LAYOUTS (tested)
 
 
 def _meta(help_: str, *, type_: Any = None, choices=None, nargs=None,
@@ -73,12 +80,22 @@ def _types_convert(vals):
 class SourceSpec:
     """Where observations come from. ``kind='simulation'`` is the lazy
     Monte-Carlo seismic cube (data/simulation.py) and is fully described by
-    these fields; ``kind='external'`` marks a caller-supplied window source
-    (``PDFSession(spec, data_source=...)`` or the ``PDFComputer`` shim) whose
-    identity the spec cannot capture — geometry fields are advisory then."""
+    these fields; ``kind='file'`` is an exported cube directory on disk/NFS
+    (data/file_source.py) identified by ``path`` — geometry comes from its
+    manifest and the spec hashes by the manifest's content sha256, so
+    provenance tracks the actual bytes read; ``kind='external'`` marks a
+    caller-supplied window source (``PDFSession(spec, data_source=...)`` or
+    the ``PDFComputer`` shim) whose identity the spec cannot capture —
+    geometry fields are advisory for both non-simulation kinds."""
 
     kind: str = field(default="simulation", metadata=_meta(
         "observation source", type_=str, choices=list(SOURCE_KINDS)))
+    path: str | None = field(default=None, metadata=_meta(
+        "exported cube directory (kind='file'; see data.file_source)",
+        type_=str, flag="--source-path"))
+    layout: str = field(default="chunked", metadata=_meta(
+        "on-disk cube layout (kind='file')", type_=str,
+        choices=list(FILE_LAYOUTS)))
     num_slices: int = field(default=8, metadata=_meta(
         "cube depth (slices)", type_=int))
     lines_per_slice: int = field(default=24, metadata=_meta(
@@ -107,6 +124,18 @@ class SourceSpec:
         if self.kind not in SOURCE_KINDS:
             raise ValueError(f"source kind must be one of {SOURCE_KINDS}, "
                              f"got {self.kind!r}")
+        if self.kind == "file" and not self.path:
+            raise ValueError(
+                "source.kind='file' requires source.path (an exported cube "
+                "directory — data.file_source.export_cube writes one)")
+        if self.kind != "file" and self.path is not None:
+            raise ValueError(
+                f"source.path is only meaningful for kind='file', "
+                f"got path={self.path!r} with kind={self.kind!r}")
+        if self.layout not in FILE_LAYOUTS:
+            raise ValueError(
+                f"source.layout must be one of {FILE_LAYOUTS}, "
+                f"got {self.layout!r}")
         for name in ("num_slices", "lines_per_slice", "points_per_line",
                      "observations", "num_layers", "group_block", "line_block"):
             v = getattr(self, name)
@@ -118,6 +147,27 @@ class SourceSpec:
         if self.throttle_mb_s is not None and not self.throttle_mb_s > 0:
             raise ValueError(
                 f"source.throttle_mb_s must be > 0, got {self.throttle_mb_s}")
+
+    def hash_payload(self) -> dict:
+        """The source's contribution to ``content_hash``.
+
+        ``throttle_mb_s`` is always excluded (the NFS model only sleeps);
+        ``path``/``layout`` are excluded too — *where* a cube sits and how
+        its chunks are laid out do not change the observations read, so a
+        cube moved to another mount keeps its hash. For ``kind='file'`` the
+        geometry knobs are advisory (the manifest is authoritative) and the
+        payload is the manifest's content sha256 instead: the hash tracks
+        the actual bytes, so re-exporting different data to the same path
+        is a different computation. Reads the manifest — a file spec whose
+        cube does not exist (yet) cannot be hashed, by design."""
+        if self.kind == "file":
+            from repro.data.file_source import manifest_sha
+
+            return {"kind": "file", "manifest_sha256": manifest_sha(self.path)}
+        d = dataclasses.asdict(self)
+        for name in ("throttle_mb_s", "path", "layout"):
+            d.pop(name)
+        return d
 
 
 @dataclass(frozen=True)
@@ -274,6 +324,9 @@ class ExecSpec:
         "persist per-window .npz + watermarks here", type_=str, flag="--out-dir"))
     resume: bool = field(default=False, metadata=_meta(
         "skip windows completed under a matching spec hash", type_=bool))
+    cache_dir: str | None = field(default=None, metadata=_meta(
+        "spec-hash-keyed result cache: serve identical reruns per slice "
+        "and store misses (api.ResultCache)", type_=str, flag="--cache-dir"))
 
     def __post_init__(self):
         if self.shards < 1:
@@ -365,13 +418,13 @@ class PipelineSpec:
         identical per-point results; ``execution`` is staging-only and
         excluded, and so is ``source.throttle_mb_s`` — the NFS-bandwidth
         model only *sleeps* (data is unchanged), so a throttled benchmark
-        run and its unthrottled resume are the same computation
-        (DESIGN.md §API)."""
-        source = dataclasses.asdict(self.source)
-        source.pop("throttle_mb_s")
+        run and its unthrottled resume are the same computation.
+        ``kind='file'`` sources hash by their manifest's content sha256
+        (``SourceSpec.hash_payload``), so the hash pins the exact bytes the
+        run reads — the key the ``ResultCache`` relies on (DESIGN.md §12)."""
         payload = {
             "version": self.version,
-            "source": source,
+            "source": self.source.hash_payload(),
             "method": dataclasses.asdict(self.method),
             "compute": dataclasses.asdict(self.compute),
         }
@@ -467,8 +520,10 @@ def spec_from_config(
 
 def source_spec_for(data_source) -> SourceSpec:
     """Describe a live window source as a ``SourceSpec``: the synthetic
-    simulation (optionally behind a ``ThrottledSource``) round-trips exactly;
-    anything else is marked ``kind='external'``."""
+    simulation and the file cube reader (optionally behind a
+    ``ThrottledSource``) round-trip exactly; anything else is marked
+    ``kind='external'``."""
+    from repro.data.file_source import FileCubeSource
     from repro.data.loader import ThrottledSource
     from repro.data.simulation import SeismicSimulation
 
@@ -476,6 +531,17 @@ def source_spec_for(data_source) -> SourceSpec:
     if isinstance(data_source, ThrottledSource):
         throttle = data_source.bandwidth / 1e6
         data_source = data_source.inner
+    if isinstance(data_source, FileCubeSource):
+        g = data_source.geometry
+        # advisory geometry from the manifest, like export_cube's returned
+        # spec — the hash is manifest-based either way, but the serialized
+        # spec should read true
+        return SourceSpec(kind="file", path=str(data_source.path),
+                          throttle_mb_s=throttle,
+                          num_slices=g.num_slices,
+                          lines_per_slice=g.lines_per_slice,
+                          points_per_line=g.points_per_line,
+                          observations=data_source.num_observations)
     if isinstance(data_source, SeismicSimulation):
         cfg = data_source.config
         g = cfg.geometry
@@ -499,13 +565,21 @@ def source_spec_for(data_source) -> SourceSpec:
 def build_source(spec: SourceSpec):
     """Materialize the window source a ``SourceSpec`` describes."""
     from repro.core.regions import CubeGeometry
+    from repro.data.file_source import FileCubeSource
     from repro.data.loader import ThrottledSource
     from repro.data.simulation import SeismicSimulation, SimulationConfig
 
+    if spec.kind == "file":
+        src = FileCubeSource(spec.path)
+        if spec.throttle_mb_s is not None:
+            return ThrottledSource(src, spec.throttle_mb_s * 1e6)
+        return src
     if spec.kind != "simulation":
         raise ValueError(
             "source.kind='external' cannot be materialized from the spec — "
-            "pass the source object: PDFSession(spec, data_source=...)")
+            "pass the live object (PDFSession(spec, data_source=...)), or "
+            "snapshot it to disk once with data.file_source.export_cube(...) "
+            "and run it as a materializable kind='file' source")
     sim = SeismicSimulation(SimulationConfig(
         geometry=CubeGeometry(spec.num_slices, spec.lines_per_slice,
                               spec.points_per_line),

@@ -217,6 +217,10 @@ class SliceResult:
     # Provenance: content hash of the PipelineSpec that produced this result
     # (api/spec.py); also stamped into persisted .npz files and watermarks.
     spec_hash: str | None = None
+    # True when this result was served from a spec-hash-keyed ResultCache
+    # (api/cache.py) instead of being computed; cached results are bitwise
+    # identical to computed ones but carry no window stats.
+    cached: bool = False
 
     def features(self, types) -> "object":
         """§5.4 slice features (SliceFeatures) from this result: average
@@ -405,7 +409,12 @@ class _StagedWindow(NamedTuple):
     load_seconds: float
 
 
-_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
+# The per-point result arrays of a SliceResult, in persisted/cached order —
+# the one canonical list (persist stage, ResultCache, benchmarks and the
+# bitwise-equality tests all import it; a new field added here is
+# automatically persisted, cached, and covered).
+RESULT_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
+_FIELDS = RESULT_FIELDS
 
 
 class PersistStage:

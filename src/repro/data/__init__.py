@@ -1,4 +1,5 @@
 from repro.data.simulation import SeismicSimulation, SimulationConfig
+from repro.data.file_source import FileCubeSource, export_cube, manifest_sha
 from repro.data.loader import (
     ArrayDataSource,
     PrefetchError,
@@ -10,6 +11,7 @@ from repro.data.tokens import TokenPipeline
 
 __all__ = [
     "SeismicSimulation", "SimulationConfig", "ArrayDataSource",
+    "FileCubeSource", "export_cube", "manifest_sha",
     "ShardedStager", "ThrottledSource", "WindowPrefetcher", "PrefetchError",
     "TokenPipeline",
 ]

@@ -1,0 +1,284 @@
+"""Chunked cube-on-disk format: the pipeline's real file/NFS source (§3, §6).
+
+The paper's input is not synthetic — it is a cube "produced by observation
+… or numerical simulation programs" persisted on disk/NFS, which Spark's
+workers then read window by window. This module is that persistence layer
+for the reproduction:
+
+  * ``export_cube`` snapshots ANY window-addressable source (the lazy
+    ``SeismicSimulation``, an ``ArrayDataSource``, another file cube) into a
+    directory of chunked ``.npy`` files plus a ``manifest.json``, so a
+    simulation *spec* becomes real bytes on disk once and every later run
+    reads those bytes instead of regenerating them;
+  * ``FileCubeSource`` is the window reader: ``load_window`` memmaps only
+    the chunks a window overlaps (a window read touches O(window) bytes, not
+    the cube), so it plugs straight into ``WindowPrefetcher`` prefetching and
+    the ``ThrottledSource`` NFS-bandwidth model like every other source;
+  * the manifest carries a per-chunk sha256 and a ``content_sha256`` over
+    the whole description — the cube's *data identity*. ``SourceSpec``
+    (``kind='file'``) hashes by that digest, so a spec's ``content_hash``
+    finally captures what ``kind='external'`` could only warn about: which
+    bytes the run actually consumed (DESIGN.md §12).
+
+On-disk layout (``layout='chunked'``, the only layout so far)::
+
+    cube_dir/
+      manifest.json                # geometry, dtype, chunk index, hashes
+      s00000_l00000.npy            # (lines_per_chunk, ppl, n_obs) float32
+      s00000_l00016.npy
+      ...
+
+Chunks split each slice along lines (``lines_per_chunk``), independent of
+the pipeline's ``window_lines`` — the reader stitches windows from whatever
+chunks they overlap, so one exported cube serves every window size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from collections import OrderedDict
+from pathlib import Path
+from typing import Callable
+
+import numpy as np
+
+from repro.core.regions import CubeGeometry, Window, iter_windows
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_NAME = "repro-cube"
+FORMAT_VERSION = 1
+LAYOUTS = ("chunked",)
+DEFAULT_LINES_PER_CHUNK = 16
+
+# How many chunk memmaps a reader keeps open at once. Sequential window
+# reads touch a sliding band of chunks, so a small LRU is enough; the cap
+# keeps a paper-scale cube (thousands of chunks) from exhausting file
+# descriptors.
+_MMAP_CACHE_SIZE = 64
+
+
+def _chunk_name(slice_i: int, line_start: int) -> str:
+    return f"s{slice_i:05d}_l{line_start:05d}.npy"
+
+
+def _array_sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _manifest_content_sha(manifest: dict) -> str:
+    """The cube's data identity: sha256 over the canonical JSON of the
+    manifest *without* its own ``content_sha256`` field. The per-chunk
+    hashes are inside, so any byte of observation data changing changes
+    this digest — and with it every dependent spec ``content_hash``."""
+    payload = {k: v for k, v in manifest.items() if k != "content_sha256"}
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def read_manifest(path: str | Path) -> dict:
+    """Load + sanity-check a cube directory's manifest."""
+    f = Path(path) / MANIFEST_NAME
+    if not f.exists():
+        raise ValueError(
+            f"no cube manifest at {f} — export one first with "
+            "data.file_source.export_cube(source, out_dir)")
+    manifest = json.loads(f.read_text())
+    if manifest.get("format") != FORMAT_NAME:
+        raise ValueError(
+            f"{f} is not a {FORMAT_NAME} manifest (format="
+            f"{manifest.get('format')!r})")
+    if manifest.get("format_version") != FORMAT_VERSION:
+        raise ValueError(
+            f"cube format version {manifest.get('format_version')} "
+            f"unsupported (this build reads version {FORMAT_VERSION})")
+    return manifest
+
+
+def manifest_sha(path: str | Path) -> str:
+    """The cube's ``content_sha256`` — what ``SourceSpec(kind='file')``
+    hashes by. Recomputed from the manifest body (not trusted from the
+    stored field), so a hand-edited manifest cannot alias another cube's
+    provenance."""
+    return _manifest_content_sha(read_manifest(path))
+
+
+def export_cube(
+    source,
+    out_dir: str | Path,
+    lines_per_chunk: int = DEFAULT_LINES_PER_CHUNK,
+    progress: Callable[[int, int], None] | None = None,
+):
+    """Snapshot a window-addressable source to a chunked cube directory.
+
+    ``source`` is either a live source object (``geometry`` +
+    ``load_window``) or a ``SourceSpec`` — a simulation spec is materialized
+    here (with its NFS-throttle model stripped: the throttle describes the
+    *read* path, and export is the write path). Returns a ready-to-run
+    ``SourceSpec(kind='file', path=out_dir)`` carrying the original spec's
+    throttle, so ``export_cube(spec.source, d)`` drops straight back into a
+    ``PipelineSpec``.
+
+    The manifest is written last (tmp + atomic rename): a crashed export
+    leaves a directory without a manifest, which every reader refuses —
+    never a readable-but-truncated cube.
+    """
+    from repro.api.spec import SourceSpec, build_source
+
+    throttle = None
+    if isinstance(source, SourceSpec):
+        throttle = source.throttle_mb_s
+        source = build_source(dataclasses.replace(
+            source, throttle_mb_s=None))
+    if lines_per_chunk < 1:
+        raise ValueError(f"lines_per_chunk must be >= 1, got {lines_per_chunk}")
+
+    geom: CubeGeometry = source.geometry
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    chunks = []
+    num_obs = None
+    total = sum(1 for s in range(geom.num_slices)
+                for _ in iter_windows(geom, s, lines_per_chunk))
+    done = 0
+    for s in range(geom.num_slices):
+        for w in iter_windows(geom, s, lines_per_chunk):
+            block = np.asarray(source.load_window(w), dtype=np.float32)
+            if num_obs is None:
+                num_obs = block.shape[1]
+            arr = block.reshape(w.num_lines, geom.points_per_line, num_obs)
+            name = _chunk_name(s, w.line_start)
+            np.save(out / name, arr)
+            chunks.append({
+                "file": name,
+                "slice": s,
+                "line_start": w.line_start,
+                "line_end": w.line_end,
+                "sha256": _array_sha256(arr),
+            })
+            done += 1
+            if progress is not None:
+                progress(done, total)
+
+    manifest = {
+        "format": FORMAT_NAME,
+        "format_version": FORMAT_VERSION,
+        "layout": "chunked",
+        "num_slices": geom.num_slices,
+        "lines_per_slice": geom.lines_per_slice,
+        "points_per_line": geom.points_per_line,
+        "num_observations": int(num_obs),
+        "dtype": "float32",
+        "lines_per_chunk": lines_per_chunk,
+        "chunks": chunks,
+    }
+    manifest["content_sha256"] = _manifest_content_sha(manifest)
+    tmp = out / (MANIFEST_NAME + ".tmp")
+    tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    os.replace(tmp, out / MANIFEST_NAME)
+
+    # Geometry fields on a file spec are advisory (the manifest is
+    # authoritative, and they are excluded from the hash) — fill them in
+    # anyway so the returned spec reads true.
+    return SourceSpec(
+        kind="file", path=str(out), throttle_mb_s=throttle,
+        num_slices=geom.num_slices, lines_per_slice=geom.lines_per_slice,
+        points_per_line=geom.points_per_line, observations=int(num_obs))
+
+
+class FileCubeSource:
+    """Window reader over an exported cube directory.
+
+    ``load_window(w) -> (num_points, n_obs) float32``, bit-identical to what
+    the exported source produced (tests/test_file_source.py asserts the
+    round-trip against the simulation, and through the full pipeline).
+    Reads memmap only the chunks the window overlaps and copy them into a
+    fresh array — the copy forces the actual page-in, so a wrapping
+    ``ThrottledSource`` times real bytes moved, and the buffer handed to the
+    prefetcher is safe to donate.
+    """
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self.manifest = read_manifest(self.path)
+        m = self.manifest
+        self.geometry = CubeGeometry(
+            m["num_slices"], m["lines_per_slice"], m["points_per_line"])
+        self.num_observations = m["num_observations"]
+        self.content_sha256 = _manifest_content_sha(m)
+        # Per-slice chunk index, ordered by line_start — and validated to
+        # tile every slice exactly: a manifest with a gap (hand-edited,
+        # partially synced) would otherwise make load_window silently
+        # return uninitialized buffer rows for the uncovered lines.
+        self._chunks: dict[int, list[dict]] = {}
+        for c in m["chunks"]:
+            self._chunks.setdefault(c["slice"], []).append(c)
+        for lst in self._chunks.values():
+            lst.sort(key=lambda c: c["line_start"])
+        for s in range(self.geometry.num_slices):
+            line = 0
+            for c in self._chunks.get(s, ()):
+                if c["line_start"] != line or c["line_end"] <= c["line_start"]:
+                    break
+                line = c["line_end"]
+            if line != self.geometry.lines_per_slice:
+                raise ValueError(
+                    f"cube manifest at {self.path} does not cover slice {s}: "
+                    f"chunks tile lines [0, {line}) of "
+                    f"[0, {self.geometry.lines_per_slice})")
+        self._mmaps: OrderedDict[str, np.ndarray] = OrderedDict()
+
+    def _mmap(self, entry: dict) -> np.ndarray:
+        name = entry["file"]
+        if name in self._mmaps:
+            self._mmaps.move_to_end(name)
+            return self._mmaps[name]
+        arr = np.load(self.path / name, mmap_mode="r")
+        expect = (entry["line_end"] - entry["line_start"],
+                  self.geometry.points_per_line, self.num_observations)
+        if arr.shape != expect or arr.dtype != np.float32:
+            raise ValueError(
+                f"cube chunk {name}: shape {arr.shape} dtype {arr.dtype} "
+                f"does not match manifest ({expect}, float32)")
+        self._mmaps[name] = arr
+        if len(self._mmaps) > _MMAP_CACHE_SIZE:
+            self._mmaps.popitem(last=False)
+        return arr
+
+    def load_window(self, w: Window) -> np.ndarray:
+        geom = self.geometry
+        if not (0 <= w.slice_i < geom.num_slices
+                and 0 <= w.line_start < w.line_end <= geom.lines_per_slice):
+            raise ValueError(f"window {w} outside cube {geom}")
+        out = np.empty(
+            (w.num_lines, geom.points_per_line, self.num_observations),
+            dtype=np.float32)
+        for entry in self._chunks.get(w.slice_i, ()):
+            if entry["line_end"] <= w.line_start:
+                continue
+            if entry["line_start"] >= w.line_end:
+                break
+            lo = max(w.line_start, entry["line_start"])
+            hi = min(w.line_end, entry["line_end"])
+            src = self._mmap(entry)
+            out[lo - w.line_start : hi - w.line_start] = src[
+                lo - entry["line_start"] : hi - entry["line_start"]]
+        return out.reshape(w.num_lines * geom.points_per_line,
+                           self.num_observations)
+
+    def verify(self) -> None:
+        """Re-hash every chunk against the manifest; raises on the first
+        mismatch (bit rot, partial copy, or tampering)."""
+        for c in self.manifest["chunks"]:
+            arr = np.load(self.path / c["file"])
+            got = _array_sha256(arr)
+            if got != c["sha256"]:
+                raise ValueError(
+                    f"cube chunk {c['file']} corrupt: sha256 {got} != "
+                    f"manifest {c['sha256']}")
+
+    def nominal_bytes(self) -> int:
+        return (self.geometry.total_points * self.num_observations * 4)

@@ -200,7 +200,7 @@ def main():
     add_spec_args(ap)
     args = ap.parse_args()
     spec = spec_from_args(args, base=_base_spec())
-    print(f"[spec] hash={spec.content_hash()} "
+    print(f"[spec] hash={spec.content_hash()} source={spec.source.kind} "
           f"types={len(spec.compute.types)} bins={spec.compute.num_bins} "
           f"group_tol={spec.method.group_tol}")
 

@@ -46,7 +46,10 @@ def main():
     spec = spec_from_args(args, base=BASE_SPEC)
 
     session = PDFSession(spec)
-    print(f"[spec] hash={spec.content_hash()} method={spec.method.name} "
+    # the session's memoized hash: one manifest read for kind='file', and
+    # the banner can never disagree with the hash keying the run/cache
+    print(f"[spec] hash={session.spec_hash} source={spec.source.kind} "
+          f"method={spec.method.name} "
           f"mode={spec.compute.mode} fit={spec.compute.fit_backend} "
           f"select={spec.compute.select_backend}")
     from repro.runtime.scheduler import assign_slices
@@ -62,6 +65,10 @@ def main():
 
     t0 = time.perf_counter()
     for r in session.run(on_window=on_window):
+        if r.cached:
+            print(f"[slice {r.slice_i}] E={r.avg_error:.4f} served from "
+                  f"result cache (spec {r.spec_hash})")
+            continue
         print(f"[slice {r.slice_i}] E={r.avg_error:.4f} windows={len(r.stats)} "
               f"fitted={sum(w.num_fitted for w in r.stats)}"
               f"/{session.geometry.points_per_slice}")
@@ -78,6 +85,9 @@ def main():
         print(f"[shard {shard}] wall={swall:.3f}s load={load:.3f}s "
               f"wait={wait:.3f}s compute={comp:.3f}s persist={pers:.3f}s "
               f"load_hidden={hidden:.0%}")
+    if spec.execution.cache_dir:
+        print(f"[cache] hits={rep.cache_hits} misses={rep.cache_misses} "
+              f"dir={spec.execution.cache_dir}")
     if window_durations:
         med = sorted(window_durations)[len(window_durations) // 2]
         print(f"[total] wall={wall:.3f}s windows={rep.windows} "

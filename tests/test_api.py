@@ -24,10 +24,8 @@ from repro.api import (
 )
 from repro.core import distributions as d
 from repro.core import sampling as smp
-from repro.core.executor import METHODS, SAMPLERS, PDFConfig
+from repro.core.executor import METHODS, RESULT_FIELDS, SAMPLERS, PDFConfig
 from repro.core.pipeline import PDFComputer
-
-RESULT_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
 
 SMALL_SOURCE = SourceSpec(num_slices=8, lines_per_slice=9, points_per_line=12,
                           observations=250)
@@ -304,6 +302,29 @@ def test_cli_base_defaults_survive_unless_overridden():
     base = PipelineSpec(compute=ComputeSpec(num_bins=20))
     assert _parse([], base=base).compute.num_bins == 20
     assert _parse(["--num-bins", "32"], base=base).compute.num_bins == 32
+
+
+def test_cli_cache_dir_and_source_path_flags():
+    spec = _parse(["--cache-dir", "/tmp/rc"])
+    assert spec.execution.cache_dir == "/tmp/rc"
+    spec = _parse(["--kind", "file", "--source-path", "/data/cube"])
+    assert spec.source.kind == "file" and spec.source.path == "/data/cube"
+
+
+def test_spec_reference_doc_is_in_sync():
+    """docs/spec_reference.md is generated from the spec metadata
+    (`python -m repro.api.cli --doc`); a spec-field change must ship its
+    regenerated doc (CI's docs-sync job enforces the same invariant)."""
+    from pathlib import Path
+
+    from repro.api.cli import render_spec_reference
+
+    doc = Path(__file__).resolve().parent.parent / "docs" / "spec_reference.md"
+    assert doc.exists(), "docs/spec_reference.md missing — run " \
+                         "python -m repro.api.cli --doc --out docs/spec_reference.md"
+    assert doc.read_text() == render_spec_reference(), \
+        "docs/spec_reference.md is stale — regenerate with " \
+        "python -m repro.api.cli --doc --out docs/spec_reference.md"
 
 
 def test_cli_spec_file_roundtrip(tmp_path):

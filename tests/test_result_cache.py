@@ -1,0 +1,238 @@
+"""ResultCache correctness (api/cache.py + PDFSession integration): hits are
+bitwise-identical and skip compute, result-defining spec changes (and
+changed file manifests) miss, ExecSpec-only changes still hit."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    ResultCache,
+    SourceSpec,
+    build_source,
+)
+from repro.core.executor import RESULT_FIELDS
+from repro.data.file_source import export_cube
+
+SMALL_SOURCE = SourceSpec(num_slices=6, lines_per_slice=9, points_per_line=12,
+                          observations=200)
+
+
+def spec_with_cache(cache_dir, source=SMALL_SOURCE, **method_kw):
+    method_kw.setdefault("name", "grouping")
+    return PipelineSpec(
+        source=source,
+        method=MethodSpec(**method_kw),
+        compute=ComputeSpec(window_lines=3, num_bins=20),
+        execution=ExecSpec(slices=(1, 2), cache_dir=str(cache_dir)),
+    )
+
+
+def assert_bitwise_equal(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    assert a.avg_error == b.avg_error
+    assert a.spec_hash == b.spec_hash
+
+
+def test_second_run_is_served_bitwise_identical(tmp_path):
+    spec = spec_with_cache(tmp_path / "cache")
+    s1 = PDFSession(spec)
+    first = s1.run_all()
+    rep1 = s1.report()
+    assert rep1.cache_hits == 0 and rep1.cache_misses == 2
+    assert not any(r.cached for r in first.values())
+
+    s2 = PDFSession(spec)
+    second = s2.run_all()
+    rep2 = s2.report()
+    assert rep2.cache_hits == 2 and rep2.cache_misses == 0
+    for s in (1, 2):
+        assert second[s].cached
+        assert second[s].stats == []  # no window ran
+        assert_bitwise_equal(first[s], second[s])
+    # no executor was ever built: the cache-served session did zero compute
+    assert not s2._executors
+    assert rep2.windows == 0
+
+
+def test_result_defining_change_misses(tmp_path):
+    cache = tmp_path / "cache"
+    PDFSession(spec_with_cache(cache)).run_all()
+    changed = spec_with_cache(cache, group_tol=1e-3)
+    s = PDFSession(changed)
+    s.run_all()
+    rep = s.report()
+    assert rep.cache_hits == 0 and rep.cache_misses == 2
+
+
+def test_exec_only_change_still_hits(tmp_path):
+    cache = tmp_path / "cache"
+    PDFSession(spec_with_cache(cache)).run_all()
+    base = spec_with_cache(cache)
+    staged = dataclasses.replace(
+        base, execution=dataclasses.replace(
+            base.execution, prefetch=False, async_persist=False, shards=2))
+    s = PDFSession(staged)
+    results = s.run_all()
+    assert s.report().cache_hits == 2
+    assert all(r.cached for r in results.values())
+
+
+def test_changed_file_manifest_misses(tmp_path):
+    cache = tmp_path / "cache"
+    file_a = export_cube(SMALL_SOURCE, tmp_path / "cube_a", lines_per_chunk=4)
+    file_b = export_cube(dataclasses.replace(SMALL_SOURCE, seed=5),
+                         tmp_path / "cube_b", lines_per_chunk=4)
+    PDFSession(spec_with_cache(cache, source=file_a)).run_all()
+
+    hit = PDFSession(spec_with_cache(cache, source=file_a))
+    hit.run_all()
+    assert hit.report().cache_hits == 2
+
+    # same knobs, different bytes on disk: the manifest sha keys the cache
+    miss = PDFSession(spec_with_cache(cache, source=file_b))
+    miss.run_all()
+    assert miss.report().cache_hits == 0
+    assert miss.report().cache_misses == 2
+
+
+def test_error_bound_recomputed_on_hits(tmp_path):
+    cache = tmp_path / "cache"
+    spec = spec_with_cache(cache, error_bound=10.0)
+    first = PDFSession(spec).run_all()
+    second = PDFSession(spec).run_all()
+    for s in (1, 2):
+        assert first[s].error_bound_satisfied is True
+        assert second[s].cached
+        assert second[s].error_bound_satisfied is True
+
+
+def test_cache_with_external_source_warns(tmp_path):
+    sim = build_source(SMALL_SOURCE)
+    spec = PipelineSpec(
+        source=SourceSpec(kind="external"),
+        compute=ComputeSpec(window_lines=3),
+        execution=ExecSpec(cache_dir=str(tmp_path / "cache")),
+    )
+    with pytest.warns(UserWarning, match="external data source"):
+        PDFSession(spec, data_source=sim)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a described source must not warn
+        PDFSession(spec_with_cache(tmp_path / "c2"))
+
+
+def test_misfiled_entry_is_a_miss(tmp_path):
+    spec = spec_with_cache(tmp_path / "cache")
+    s1 = PDFSession(spec)
+    s1.run_all()
+    cache = ResultCache(tmp_path / "cache")
+    good = cache.lookup(spec.content_hash(), 1)
+    assert good is not None and good.cached
+    # an entry moved under the wrong hash directory must not be served
+    wrong = tmp_path / "cache" / ("0" * 16)
+    wrong.mkdir()
+    cache.path(spec.content_hash(), 1).rename(wrong / "slice1.npz")
+    assert cache.lookup("0" * 16, 1) is None
+
+
+def test_cache_hit_still_persists_out_dir(tmp_path):
+    """--cache-dir + --out-dir: a hit skips the executor but must still
+    honor the out_dir contract (window .npz files + watermark), bitwise
+    identical to what a computed run would have persisted."""
+    import numpy as np
+
+    cache = tmp_path / "cache"
+    spec = spec_with_cache(cache)
+    computed_out = tmp_path / "computed"
+    with_out = dataclasses.replace(
+        spec, execution=dataclasses.replace(spec.execution,
+                                            out_dir=str(computed_out)))
+    PDFSession(with_out).run_all()  # misses: executor persists normally
+
+    cached_out = tmp_path / "cached"
+    hit_spec = dataclasses.replace(
+        spec, execution=dataclasses.replace(spec.execution,
+                                            out_dir=str(cached_out)))
+    s = PDFSession(hit_spec)
+    s.run_all()
+    assert s.report().cache_hits == 2
+
+    computed_files = sorted(p.name for p in computed_out.iterdir())
+    cached_files = sorted(p.name for p in cached_out.iterdir())
+    assert cached_files == computed_files and cached_files
+    for name in computed_files:
+        if name.endswith(".npz"):
+            a = np.load(computed_out / name)
+            b = np.load(cached_out / name)
+            assert sorted(a.files) == sorted(b.files)
+            for k in a.files:
+                np.testing.assert_array_equal(a[k], b[k], err_msg=f"{name}:{k}")
+
+    # the persisted dir is a valid resume target for the same spec
+    resumed = dataclasses.replace(
+        hit_spec, execution=dataclasses.replace(hit_spec.execution,
+                                                cache_dir=None))
+    res = PDFSession(resumed).run_all(resume=True)
+    assert all(len(r.stats) == 0 for r in res.values())  # nothing re-ran
+
+
+def test_cache_hit_respects_resume_mismatch_check(tmp_path):
+    """resume + cache hit + an out_dir watermarked by a DIFFERENT spec must
+    raise the same resume-mismatch error the computed path raises — a hit
+    must not quietly overwrite another computation's watermark."""
+    cache = tmp_path / "cache"
+    out = tmp_path / "out"
+    other = spec_with_cache(tmp_path / "other_cache", group_tol=1e-3)
+    other = dataclasses.replace(
+        other, execution=dataclasses.replace(other.execution,
+                                             out_dir=str(out)))
+    PDFSession(other).run_all()  # out_dir now belongs to the other spec
+
+    spec = spec_with_cache(cache)
+    PDFSession(spec).run_all()  # populate the cache
+    resuming = dataclasses.replace(
+        spec, execution=dataclasses.replace(spec.execution,
+                                            out_dir=str(out), resume=True))
+    with pytest.raises(ValueError, match="resume mismatch"):
+        PDFSession(resuming).run_all()
+
+
+def test_corrupt_cache_entry_is_a_miss_and_recomputed(tmp_path):
+    spec = spec_with_cache(tmp_path / "cache")
+    first = PDFSession(spec).run_all()
+    cache = ResultCache(tmp_path / "cache")
+    entry = cache.path(spec.content_hash(), 1)
+    entry.write_bytes(b"not a zip at all")  # truncated/partial sync
+
+    s = PDFSession(spec)
+    with pytest.warns(UserWarning, match="unreadable cache entry"):
+        results = s.run_all()
+    rep = s.report()
+    assert rep.cache_hits == 1 and rep.cache_misses == 1  # slice 2 still hit
+    assert not results[1].cached
+    assert_bitwise_equal(first[1], results[1])
+    # the recompute overwrote the bad entry: next run hits cleanly
+    s2 = PDFSession(spec)
+    s2.run_all()
+    assert s2.report().cache_hits == 2
+
+
+def test_sampling_results_cache_cleanly(tmp_path):
+    spec = spec_with_cache(tmp_path / "cache", name="sampling",
+                           sample_frac=0.5, sample_seed=3)
+    first = PDFSession(spec).run_all()
+    s2 = PDFSession(spec)
+    second = s2.run_all()
+    assert s2.report().cache_hits == 2
+    for s in (1, 2):
+        assert_bitwise_equal(first[s], second[s])
+        # the -1 unsampled markers survive the round-trip
+        assert (second[s].type_idx == -1).any()
