@@ -1,0 +1,256 @@
+"""Serving-layer benchmark: the coalescing win and the hot-path latency.
+
+Four tracked ``serve/*`` rows drive a closed-loop load generator (client
+threads that wait for each answer before asking again) against a
+``PDFServer``:
+
+  serve/coalesced_8c   per-query wall with 8 concurrent clients asking
+                       distinct-window point queries, coalescing ON — the
+                       pending queue drains into shared
+                       ``run_window_batch`` launches each tick.
+  serve/naive_8c       the identical workload with ``serve.coalesce=false``
+                       (one ``run_window`` launch per query window) — the
+                       baseline the tentpole is measured against; derived
+                       on the coalesced row records the speedup.
+  serve/cold_p50       serial per-query p50 when every query computes its
+                       window (first touch).
+  serve/warm_p50       serial per-query p50 re-asking the same points — all
+                       memory-LRU hits, no executor. Microseconds by
+                       construction — below even the serve-family gate
+                       floor (run.py GATE_MIN_US_BY_PREFIX), so
+                       tracked-not-gated.
+
+The throughput pair runs the paper's headline ``grouping`` method with the
+hot-window LRU disabled: every query then costs real device work, and the
+only difference between the rows is launch sharing — per query, the naive
+path pays a synced moments dispatch plus a padded gather-and-fit dispatch
+for ONE 80-row window, while the coalesced path dispatches the pending
+windows' moments asynchronously behind one H2D/barrier and packs all their
+representatives into a single shared fit launch of the same 256-slot shape
+class the serial path compiles (grouping's per-window host dedup is
+unchanged, and shape-identical launches keep answers bitwise-equal). Each
+mode's wall is the best of ``reps`` passes — container noise is strictly
+additive, same estimator as ``common.run_method``. Shapes are jit-warmed
+for every power-of-two chunk the coalescer can form, so neither row pays
+compiles.
+
+``--smoke`` (CI): a seconds-scale pass asserting the serving contract
+end-to-end — answers bitwise-equal to the batch pipeline, memory hits on
+repeat, and a second server process-alike (fresh ``PDFServer``, same
+``cache_dir``) served from disk with zero computed windows.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:  # support `python benchmarks/serve_bench.py`
+    sys.path.insert(0, str(_ROOT))
+
+import numpy as np
+
+from benchmarks import common  # noqa: E402 — run via benchmarks/run.py
+from repro.api import ComputeSpec, ExecSpec, MethodSpec, PipelineSpec, source_spec_for
+from repro.api.spec import ServeSpec
+from repro.runtime.monitor import percentiles
+from repro.serve import PDFServer, PointQuery, RegionQuery
+
+CLIENTS = 8
+QUERIES_PER_CLIENT = 12
+# Serving's natural unit is small: a point query touches one 2-line window
+# (80 rows here), where the fixed per-launch cost dominates per-row compute
+# — the regime request coalescing exists for. (Batch-pipeline benchmarks
+# keep their larger windows; this knob is serve_bench's workload, not a
+# pipeline default.) max_batch_windows=8 keeps every launch in the
+# measured-efficient batch range for these shapes.
+WINDOW_LINES = 2
+OBSERVATIONS = 100
+MAX_BATCH = 16
+# The executor-default representative bucket (ExecutorConfig.rep_bucket,
+# also the pdf_seismic config's choice): every window's serial fit pads to
+# the same 256-slot shape class, so the coalescer packs a whole chunk's
+# representatives (~10 groups/window here) into ONE shared fit launch.
+REP_BUCKET = 256
+
+
+def _spec(sim, coalesce: bool, lru: int) -> PipelineSpec:
+    return PipelineSpec(
+        source=source_spec_for(sim),
+        method=MethodSpec(name="grouping", rep_bucket=REP_BUCKET),
+        compute=ComputeSpec(window_lines=WINDOW_LINES),
+        serve=ServeSpec(coalesce=coalesce, window_cache_entries=lru,
+                        max_batch_windows=MAX_BATCH),
+    )
+
+
+def _point_queries(geom, n: int) -> list[PointQuery]:
+    """``n`` point queries, each in a DISTINCT window (round-robin over
+    slices, then window rows) — no two queries share any work, so every
+    answered query is one window of real compute."""
+    wins_per_slice = -(-geom.lines_per_slice // WINDOW_LINES)
+    total = geom.num_slices * wins_per_slice
+    if n > total:
+        raise ValueError(f"workload wants {n} distinct windows, cube has {total}")
+    out = []
+    for i in range(n):
+        s, w = i % geom.num_slices, (i // geom.num_slices) % wins_per_slice
+        out.append(PointQuery(s, w * WINDOW_LINES, (3 * i) % geom.points_per_line))
+    return out
+
+
+def _warm_shapes(sim, spec: PipelineSpec, max_batch: int) -> None:
+    """Compile every fused shape the coalescer can form: chunk sizes pad to
+    power-of-two row buckets, so batches of 1, 2, 4, ... max_batch windows
+    cover them all (run_window == a batch of 1)."""
+    from repro.api import PDFSession
+    from repro.core import regions
+
+    ex = PDFSession(spec, data_source=sim).executor(0)
+    geom = sim.geometry
+    wins = [w for s in range(geom.num_slices)
+            for w in regions.iter_windows(geom, s, WINDOW_LINES)]
+    k = 1
+    while k <= max_batch:
+        ex.run_window_batch(wins[:k])
+        k *= 2
+
+
+def _closed_loop(server: PDFServer, queries: list[PointQuery],
+                 clients: int) -> float:
+    """Fire the queries from ``clients`` closed-loop threads (client ``c``
+    takes every ``c``-th query); returns total wall seconds."""
+    errors: list[BaseException] = []
+
+    def client(c: int) -> None:
+        try:
+            for q in queries[c::clients]:
+                server.query(q)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return wall
+
+
+def run(quick: bool = True):
+    # --full adds measurement passes, not observations: more rows per window
+    # would shift the workload out of the launch-bound serving regime this
+    # module measures (figures 6-18 cover the compute-bound regimes).
+    reps = 2 if quick else 4
+    sim = common.small_sim(num_simulations=OBSERVATIONS, lines=24)
+    geom = sim.geometry
+    queries = _point_queries(geom, CLIENTS * QUERIES_PER_CLIENT)
+    _warm_shapes(sim, _spec(sim, coalesce=True, lru=0), max_batch=MAX_BATCH)
+    rows = []
+
+    # -- throughput under concurrency: coalesced vs naive ----------------------
+    walls = {}
+    for mode, coalesce in (("coalesced", True), ("naive", False)):
+        per_pass = []
+        for _ in range(reps):
+            with PDFServer(_spec(sim, coalesce, lru=0), data_source=sim) as srv:
+                per_pass.append(_closed_loop(srv, queries, CLIENTS))
+                st = srv.stats()
+        walls[mode] = min(per_pass)
+        assert st.windows_computed == len(queries), (
+            f"{mode}: every query must compute its own window "
+            f"({st.windows_computed} != {len(queries)})")
+        if mode == "coalesced":
+            derived = (f"qps={len(queries) / walls[mode]:.1f} "
+                       f"launches={st.launches}/{len(queries)} "
+                       f"occupancy={st.batch_occupancy:.1f}")
+            coalesced_hash = st.spec_hash
+        else:
+            speed = walls["naive"] / walls["coalesced"]
+            rows[-1].derived += f" speedup={speed:.1f}x vs naive"
+            derived = f"qps={len(queries) / walls[mode]:.1f} launches={st.launches}"
+        rows.append(common.Row(
+            f"serve/{mode}_{CLIENTS}c",
+            walls[mode] / len(queries) * 1e6,
+            derived=derived, spec_hash=st.spec_hash))
+
+    # -- cold vs warm serial latency -------------------------------------------
+    with PDFServer(_spec(sim, coalesce=True, lru=256), data_source=sim) as srv:
+        cold = [srv.query(q).latency_seconds for q in queries[:16]]
+        warm = [srv.query(q).latency_seconds for q in queries[:16]]
+        st = srv.stats()
+    assert st.windows_from_memory == 16, "warm pass must be all memory hits"
+    p_cold = percentiles(cold)["p50"]
+    p_warm = percentiles(warm)["p50"]
+    rows.append(common.Row("serve/cold_p50", p_cold * 1e6,
+                           derived="first-touch compute",
+                           spec_hash=coalesced_hash))
+    rows.append(common.Row("serve/warm_p50", p_warm * 1e6,
+                           derived=f"memory-hit, cold/warm="
+                                   f"{p_cold / max(p_warm, 1e-9):.0f}x",
+                           spec_hash=coalesced_hash))
+    return rows
+
+
+def smoke() -> None:
+    """Seconds-scale CI gate: serve, verify bitwise vs the batch pipeline,
+    then assert repeat queries hit memory and a fresh server over the same
+    ``cache_dir`` is served entirely from disk."""
+    from repro.api import PDFSession
+    from repro.core.executor import RESULT_FIELDS
+
+    sim = common.small_sim(num_simulations=120, lines=12, slices=4)
+    with tempfile.TemporaryDirectory() as tmp:
+        spec = PipelineSpec(
+            source=source_spec_for(sim),
+            method=MethodSpec(name="grouping", rep_bucket=32),
+            compute=ComputeSpec(window_lines=WINDOW_LINES),
+            execution=ExecSpec(cache_dir=tmp),
+        )
+        # reference via the batch pipeline, cache-less (same content hash —
+        # execution is staging-only — but it must not pre-populate tmp, or
+        # the server under test would never compute/store anything)
+        import dataclasses
+
+        ref_spec = dataclasses.replace(spec, execution=ExecSpec())
+        ref = PDFSession(ref_spec, data_source=sim).run_all([0, 1])
+
+        with PDFServer(spec, data_source=sim) as srv:
+            a = srv.query(RegionQuery(0))
+            for f in RESULT_FIELDS:
+                np.testing.assert_array_equal(getattr(a, f), getattr(ref[0], f))
+            b = srv.query(RegionQuery(0))  # repeat: memory LRU
+            assert b.windows_from_memory > 0 and b.windows_computed == 0, (
+                "repeat query did not hit the hot-window LRU")
+            srv.query(RegionQuery(1))
+            st = srv.stats()
+        assert st.slices_stored == 2, f"slices_stored={st.slices_stored}"
+
+        # a fresh server over the same cache dir: all disk, zero compute
+        with PDFServer(spec, data_source=sim) as srv2:
+            c = srv2.query(RegionQuery(0))
+            for f in RESULT_FIELDS:
+                np.testing.assert_array_equal(getattr(c, f), getattr(ref[0], f))
+            st2 = srv2.stats()
+        assert st2.windows_from_disk > 0 and st2.windows_computed == 0, (
+            f"fresh server should serve from ResultCache, got "
+            f"disk={st2.windows_from_disk} computed={st2.windows_computed}")
+        print(f"[smoke] ok: memory_hits={st.windows_from_memory} "
+              f"disk_hits={st2.windows_from_disk} computed_repeat=0 "
+              f"stored_slices={st.slices_stored}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        for r in run(quick="--full" not in sys.argv):
+            print(r.csv())

@@ -18,12 +18,28 @@ race benignly (last writer wins with identical bytes) and a crashed write
 never leaves a half-entry a later run could load. ``PDFSession`` consults
 the cache per slice when ``ExecSpec.cache_dir`` is set and counts
 hits/misses into its ``report()``.
+
+Long-lived shared ``cache_dir``s (the serve layer, cross-run benchmark
+sweeps) add two requirements this module owns:
+
+* **LRU size cap** — ``max_bytes`` bounds the directory: after every store
+  the oldest-*used* entries are evicted until the total fits. Recency is
+  the entry's mtime, touched atomically on every hit (``os.utime``), so
+  eviction is LRU rather than FIFO. Eviction is plain ``unlink``: a reader
+  that already opened the file keeps its data (POSIX), a reader that opens
+  later sees a clean miss — eviction can never corrupt a concurrent read.
+* **crash hygiene** — ``*.tmp`` files left by writers that died before
+  their rename are reaped at open time once they are old enough to be
+  provably dead (``tmp_reap_seconds``; a live writer's tmp is always
+  younger). Every cross-process race on unlink/utime tolerates the file
+  vanishing first.
 """
 
 from __future__ import annotations
 
 import os
 import tempfile
+import time
 import warnings
 import zipfile
 from pathlib import Path
@@ -32,12 +48,28 @@ import numpy as np
 
 from repro.core.executor import _FIELDS, SliceResult
 
+# A writer holds its .tmp only for one np.savez + rename; a tmp this old
+# belongs to a crashed process, not a slow one.
+TMP_REAP_SECONDS = 3600.0
+
 
 class ResultCache:
-    """Filesystem-backed map ``(spec_hash, slice) -> SliceResult``."""
+    """Filesystem-backed map ``(spec_hash, slice) -> SliceResult``.
 
-    def __init__(self, cache_dir: str | Path):
+    ``max_bytes=None`` (default) leaves the directory unbounded — the
+    pre-existing behaviour. With a cap, ``store`` evicts least-recently-used
+    entries (see module docstring); the cap is advisory during a store burst
+    (entries land, then eviction trims), exact between stores.
+    """
+
+    def __init__(self, cache_dir: str | Path, max_bytes: int | None = None,
+                 tmp_reap_seconds: float = TMP_REAP_SECONDS):
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError(f"max_bytes must be > 0 (or None), got {max_bytes}")
         self.dir = Path(cache_dir)
+        self.max_bytes = max_bytes
+        self.evictions = 0  # entries unlinked by the size cap, this process
+        self._reap_stale_tmps(tmp_reap_seconds)
 
     def path(self, spec_hash: str, slice_i: int) -> Path:
         return self.dir / spec_hash / f"slice{slice_i}.npz"
@@ -45,7 +77,8 @@ class ResultCache:
     def lookup(self, spec_hash: str, slice_i: int) -> SliceResult | None:
         """The cached ``SliceResult``, or ``None`` on miss. Served results
         carry ``cached=True`` and empty window ``stats`` (no work ran — the
-        same shape a fully resumed slice has)."""
+        same shape a fully resumed slice has). A hit touches the entry's
+        mtime so the LRU cap evicts cold entries first."""
         f = self.path(spec_hash, slice_i)
         if not f.exists():
             return None
@@ -53,7 +86,7 @@ class ResultCache:
             with np.load(f) as z:  # close the zip handle: no fd per hit
                 if str(z["spec_hash"]) != spec_hash:  # misfiled: miss
                     return None
-                return SliceResult(
+                result = SliceResult(
                     *(z[name] for name in _FIELDS),
                     avg_error=float(z["avg_error"]),
                     stats=[],
@@ -66,13 +99,20 @@ class ResultCache:
             # A truncated / foreign / partially-synced entry (e.g. an
             # interrupted copy into a shared cache_dir — the writer's
             # tmp+rename cannot protect against that) is a miss, not a
-            # crash: the slice recomputes and the store overwrites it.
+            # crash: the slice recomputes and the store *atomically
+            # replaces* it (never a partial overwrite another reader could
+            # trip on — it keeps serving the corrupt bytes until the rename
+            # and gets its own warned miss).
             warnings.warn(f"ignoring unreadable cache entry {f}: {e}",
                           stacklevel=2)
             return None
+        self._touch(f)
+        return result
 
     def store(self, result: SliceResult) -> None:
-        """Persist one computed slice under its own ``spec_hash``."""
+        """Persist one computed slice under its own ``spec_hash``; then, with
+        a ``max_bytes`` cap, evict least-recently-used entries until the
+        directory fits again (never the entry just written)."""
         if result.spec_hash is None or result.slice_i is None:
             raise ValueError(
                 "cannot cache a SliceResult without spec_hash and slice_i")
@@ -95,3 +135,67 @@ class ResultCache:
             except OSError:
                 pass
             raise
+        if self.max_bytes is not None:
+            self._evict(keep=f)
+
+    # -- size accounting / eviction -------------------------------------------
+
+    def entries(self) -> list[tuple[Path, float, int]]:
+        """Every ``(path, mtime, size)`` entry currently in the cache,
+        oldest-used first. Entries vanishing mid-scan (a concurrent evictor
+        or store race) are skipped, not errors."""
+        out = []
+        if not self.dir.is_dir():
+            return out
+        for f in self.dir.glob("*/slice*.npz"):
+            try:
+                st = f.stat()
+            except OSError:
+                continue  # lost a race with a concurrent unlink
+            out.append((f, st.st_mtime, st.st_size))
+        out.sort(key=lambda e: (e[1], str(e[0])))
+        return out
+
+    def size_bytes(self) -> int:
+        return sum(size for _, _, size in self.entries())
+
+    def _evict(self, keep: Path | None = None) -> None:
+        """Unlink oldest-used entries until the cap holds. ``keep`` (the
+        entry a store just wrote) is never evicted, even when it alone
+        exceeds the cap — a store must not erase its own result."""
+        entries = self.entries()
+        total = sum(size for _, _, size in entries)
+        for f, _mtime, size in entries:
+            if total <= self.max_bytes:
+                break
+            if keep is not None and f == keep:
+                continue
+            try:
+                os.unlink(f)
+            except OSError:
+                continue  # another process evicted it first: size unknown,
+                # stay conservative and keep trimming from our own snapshot
+            total -= size
+            self.evictions += 1
+
+    def _touch(self, f: Path) -> None:
+        """Refresh an entry's recency; racing with eviction is benign (a
+        touched-then-evicted entry is simply a future miss)."""
+        try:
+            os.utime(f)
+        except OSError:
+            pass
+
+    def _reap_stale_tmps(self, reap_seconds: float) -> None:
+        """Remove ``*.tmp`` files old enough that their writer must have
+        crashed before its atomic rename. Younger tmps may belong to a live
+        concurrent writer and are left alone; unlink races are benign."""
+        if not self.dir.is_dir():
+            return
+        cutoff = time.time() - reap_seconds
+        for tmp in self.dir.glob("*/*.tmp"):
+            try:
+                if tmp.stat().st_mtime <= cutoff:
+                    os.unlink(tmp)
+            except OSError:
+                continue

@@ -53,6 +53,11 @@ class SessionReport:
     cache_hits: int = 0
     cache_misses: int = 0
     shard_reports: dict[int, list[ExecutorReport]] = field(default_factory=dict)
+    # Per-stage latency percentiles over every completed unit (seconds):
+    # {"load"|"compute"|"persist": {"p50": ..., "p99": ...}} — from the
+    # executors' StepMonitors, merged across shards. The serve layer's stats
+    # endpoint reuses the same monitors/estimator verbatim.
+    stage_percentiles: dict[str, dict[str, float]] = field(default_factory=dict)
 
     @property
     def load_hidden_seconds(self) -> float:
@@ -89,7 +94,8 @@ class PDFSession:
         # repeat that (and a manifest swapped mid-run must not split the
         # session across two hashes).
         self._spec_hash = spec.content_hash()
-        self.cache = (ResultCache(spec.execution.cache_dir)
+        self.cache = (ResultCache(spec.execution.cache_dir,
+                                  max_bytes=spec.execution.cache_max_bytes)
                       if spec.execution.cache_dir else None)
         self.cache_hits = 0
         self.cache_misses = 0
@@ -271,6 +277,19 @@ class PDFSession:
             for r in self.run(slices, resume=resume, on_window=on_window)
         }
 
+    def stage_percentiles(self) -> dict[str, dict[str, float]]:
+        """p50/p99 unit latency per executor stage (seconds), merged over
+        every shard's monitors — not just totals, so a serving/streaming
+        consumer can see tail behaviour. Stages with no completed units are
+        omitted."""
+        from repro.runtime.monitor import percentiles
+
+        merged: dict[str, list[float]] = {}
+        for ex in self._executors.values():
+            for stage, mon in ex.monitors.items():
+                merged.setdefault(stage, []).extend(mon.history)
+        return {stage: percentiles(h) for stage, h in merged.items() if h}
+
     def report(self) -> SessionReport:
         """Aggregate per-stage totals over everything run so far."""
         totals = dict(wall=0.0, load=0.0, wait=0.0, compute=0.0, persist=0.0)
@@ -295,4 +314,5 @@ class PDFSession:
             compute_seconds=totals["compute"],
             persist_seconds=totals["persist"],
             shard_reports={k: list(v) for k, v in self._reports.items()},
+            stage_percentiles=self.stage_percentiles(),
         )

@@ -327,8 +327,18 @@ class ExecSpec:
     cache_dir: str | None = field(default=None, metadata=_meta(
         "spec-hash-keyed result cache: serve identical reruns per slice "
         "and store misses (api.ResultCache)", type_=str, flag="--cache-dir"))
+    cache_max_bytes: int | None = field(default=None, metadata=_meta(
+        "LRU size cap for cache_dir in bytes (oldest-used entries evicted; "
+        "default: unbounded)", type_=int, flag="--cache-max-bytes"))
 
     def __post_init__(self):
+        if self.cache_max_bytes is not None and self.cache_max_bytes <= 0:
+            raise ValueError(
+                f"execution.cache_max_bytes must be > 0 (or null), "
+                f"got {self.cache_max_bytes}")
+        if self.cache_max_bytes is not None and self.cache_dir is None:
+            raise ValueError(
+                "execution.cache_max_bytes requires execution.cache_dir")
         if self.shards < 1:
             raise ValueError(f"execution.shards must be >= 1, got {self.shards}")
         if self.shard is not None and not 0 <= self.shard < self.shards:
@@ -347,6 +357,43 @@ class ExecSpec:
             raise ValueError("execution.resume requires execution.out_dir")
 
 
+@dataclass(frozen=True)
+class ServeSpec:
+    """The serving layer's knobs (``repro.serve.PDFServer``): request
+    coalescing, launch batching, and the in-memory hot-window cache.
+    Staging-only — excluded from ``content_hash`` like ``ExecSpec``: served
+    answers are bitwise-identical with any of these settings (the
+    coalescing-equivalence contract, tests/test_serve.py)."""
+
+    tick_seconds: float = field(default=0.001, metadata=_meta(
+        "how long the batcher keeps draining the queue after the first "
+        "pending request before launching (the coalescing window)",
+        type_=float, flag="--serve-tick-seconds"))
+    max_batch_windows: int = field(default=32, metadata=_meta(
+        "max deduplicated windows per fused launch (larger batches are "
+        "chunked)", type_=int, flag="--serve-max-batch-windows"))
+    coalesce: bool = field(default=True, metadata=_meta(
+        "batch concurrent requests into shared launches; off = the naive "
+        "one-launch-per-query baseline (benchmarks/serve_bench.py)",
+        type_=bool, flag="--serve-coalesce"))
+    window_cache_entries: int = field(default=256, metadata=_meta(
+        "in-memory hot-window LRU entries held by the server (0 disables)",
+        type_=int, flag="--serve-window-cache-entries"))
+
+    def __post_init__(self):
+        if not self.tick_seconds >= 0:
+            raise ValueError(
+                f"serve.tick_seconds must be >= 0, got {self.tick_seconds}")
+        if self.max_batch_windows < 1:
+            raise ValueError(
+                f"serve.max_batch_windows must be >= 1, "
+                f"got {self.max_batch_windows}")
+        if self.window_cache_entries < 0:
+            raise ValueError(
+                f"serve.window_cache_entries must be >= 0, "
+                f"got {self.window_cache_entries}")
+
+
 _GROUPS: tuple[tuple[str, type, str], ...] = (
     # (dotted path into PipelineSpec, dataclass, auto flag prefix)
     ("source", SourceSpec, ""),
@@ -354,6 +401,7 @@ _GROUPS: tuple[tuple[str, type, str], ...] = (
     ("method.tree", TreeSpec, "tree-"),
     ("compute", ComputeSpec, ""),
     ("execution", ExecSpec, ""),
+    ("serve", ServeSpec, ""),
 )
 
 
@@ -370,6 +418,7 @@ class PipelineSpec:
     method: MethodSpec = MethodSpec()
     compute: ComputeSpec = ComputeSpec()
     execution: ExecSpec = ExecSpec()
+    serve: ServeSpec = ServeSpec()
 
     def __post_init__(self):
         if self.version != SPEC_VERSION:
@@ -398,7 +447,8 @@ class PipelineSpec:
         d = dict(d)
         parts = {}
         for name, sub_cls in (("source", SourceSpec), ("method", MethodSpec),
-                              ("compute", ComputeSpec), ("execution", ExecSpec)):
+                              ("compute", ComputeSpec), ("execution", ExecSpec),
+                              ("serve", ServeSpec)):
             if name in d:
                 parts[name] = _sub_from_dict(sub_cls, d.pop(name), name)
         version = d.pop("version", SPEC_VERSION)
@@ -415,8 +465,8 @@ class PipelineSpec:
     def content_hash(self) -> str:
         """Stable hash of the result-defining subtree (version + source +
         method + compute). Two specs with equal hashes must produce bitwise
-        identical per-point results; ``execution`` is staging-only and
-        excluded, and so is ``source.throttle_mb_s`` — the NFS-bandwidth
+        identical per-point results; ``execution`` and ``serve`` are
+        staging-only and excluded, and so is ``source.throttle_mb_s`` — the NFS-bandwidth
         model only *sleeps* (data is unchanged), so a throttled benchmark
         run and its unthrottled resume are the same computation.
         ``kind='file'`` sources hash by their manifest's content sha256

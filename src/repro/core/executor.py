@@ -417,6 +417,24 @@ RESULT_FIELDS = ("type_idx", "params", "error", "mean", "std", "skew", "kurt")
 _FIELDS = RESULT_FIELDS
 
 
+class WindowResult(NamedTuple):
+    """Per-point results of ONE window — the unit the serving layer
+    caches, scatters into answers, and assembles into ``SliceResult``s.
+    Field order after ``window`` matches ``RESULT_FIELDS``."""
+
+    window: regions.Window
+    type_idx: np.ndarray  # (P,) int32
+    params: np.ndarray  # (P, 3) float32
+    error: np.ndarray  # (P,)
+    mean: np.ndarray  # (P,)
+    std: np.ndarray  # (P,)
+    skew: np.ndarray  # (P,)
+    kurt: np.ndarray  # (P,)
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        return {name: getattr(self, name) for name in _FIELDS}
+
+
 class PersistStage:
     """Writes per-window ``.npz`` + watermark, optionally off-thread.
 
@@ -1011,6 +1029,195 @@ class StagedExecutor:
             self.data.geometry, [slice_i], self.config.window_lines
         )
         return self.run(plan, resume=resume, on_window=on_window)[slice_i]
+
+    # -- externally-batched work units (the serving layer's entry points) ------
+
+    def run_window_batch(
+        self, windows: list[regions.Window]
+    ) -> list[WindowResult]:
+        """Compute many windows with shared device launches — the warm
+        executor's entry point for externally-batched work (the serving
+        layer's coalesced tick; ``windows`` must be distinct, in any order,
+        possibly spanning slices).
+
+        Per-point results are **bitwise-identical** to running each window
+        through ``run_window``, by construction: every launch the batch
+        issues has the exact shape the serial path would compile for, so
+        both paths execute the same XLA executables — and within one
+        executable per-row results are position- and content-independent
+        (moments and fits are row-pure; padding rows and neighbours cannot
+        perturb a row's bits). Concretely:
+
+        * moments run per window at the window's own shape — only their
+          *dispatch* is shared (all launched asynchronously, one barrier),
+          which removes the serial path's per-window sync.
+        * the grouped methods' representative fits are packed: each
+          window's Select (quantize → group → representative choice) is
+          made per window exactly as serially, then whole windows whose
+          serial fit shape class (``grp.padded_size(groups, rep_bucket)``)
+          matches are packed into one gather + fit launch of that shape —
+          many windows' representatives per dispatch, same executable as
+          each window's solo fit.
+
+        Naively concatenating windows into one big launch is ~2x fewer
+        dispatches still, but a different-shaped executable vectorizes
+        reductions differently and drifts results by ~1 ulp — the serving
+        layer's equivalence contract (DESIGN.md §13) forbids exactly that.
+
+        Three methods fall back to per-window ``run_window`` dispatch, by
+        design: ``sampling`` (its cost is host-side classification; there
+        is no device fit to share), the ``reuse`` variants (cache-hit
+        values depend on insertion order, so batching lookups would serve
+        different — not just differently-counted — fits), and any method
+        under ``select_backend='device'`` (its gather→fit→scatter is fused
+        into one per-window executable there)."""
+        if not windows:
+            return []
+        if len({(w.slice_i, w.line_start) for w in windows}) != len(windows):
+            raise ValueError("run_window_batch windows must be distinct")
+        method = self.config.method
+        if (method == "sampling" or method.startswith("reuse")
+                or self._sel_fns is not None):
+            return [self.run_window(w) for w in windows]
+
+        lmon = self.monitors["load"]
+        raws = []
+        for w in windows:
+            uid = f"batch:s{w.slice_i}/l{w.line_start:05d}"
+            lmon.start(uid, now=time.perf_counter())
+            raws.append(self.data.load_window(w))
+            lmon.finish(uid, now=time.perf_counter())
+        if self.sharding is None and len(raws) > 1:
+            # one H2D for the whole batch, sliced back into window-shaped
+            # device arrays (same f32 bits; slicing is pure data movement)
+            bounds = np.cumsum([0] + [r.shape[0] for r in raws])
+            cat = self._stage(np.concatenate(raws, axis=0))
+            staged = [cat[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+        else:
+            staged = [self._stage(r) for r in raws]
+        pending = [self._moments(v) for v in staged]  # async; barrier below
+        moments = [dists.Moments(*jax.block_until_ready(m)) for m in pending]
+
+        cmon = self.monitors["compute"]
+        uid = (f"batch:s{windows[0].slice_i}/l{windows[0].line_start:05d}"
+               f"x{len(windows)}")
+        cmon.start(uid, now=time.perf_counter())
+        if method in ("baseline", "ml"):
+            # per-window fit launches (the serial shape), dispatched without
+            # intermediate syncs; host conversion after the last dispatch
+            if self._tree_arrays is not None and "ml" in method:
+                fits = [self._fit_pred(v, m, self._tree_arrays)
+                        for v, m in zip(staged, moments)]
+            else:
+                fits = [self._fit_all(v, m) for v, m in zip(staged, moments)]
+            per = [tuple(np.asarray(x) for x in f) for f in fits]
+        else:
+            per = self._select_and_fit_packed(staged, moments)
+        cmon.finish(uid, now=time.perf_counter())
+
+        out = []
+        for w, m, (t, p, e) in zip(windows, moments, per):
+            out.append(WindowResult(
+                w, t, p, e,
+                np.asarray(m.mean),
+                np.sqrt(np.maximum(np.asarray(m.var), 0)),
+                np.asarray(m.skew), np.asarray(m.kurt)))
+        return out
+
+    def _select_and_fit_packed(self, staged: list, moments: list):
+        """Grouped Select over a window batch: quantize + dedup per window
+        on host (grouping scope = the window, as Algorithm 3 defines it),
+        then pack whole windows of the same serial fit-shape class into
+        shared gather + fit launches of exactly that shape. Returns
+        per-window per-point ``(t, p, e)`` in window order."""
+        bucket = self.config.rep_bucket
+        infos = [grp.group_host(self._quantized_keys(m)) for m in moments]
+
+        # pack: greedy fill within each shape class, preserving window order
+        classes: dict[int, list[int]] = {}
+        for i, g in enumerate(infos):
+            classes.setdefault(grp.padded_size(g.num_groups, bucket),
+                               []).append(i)
+        launches: list[tuple[int, list[int]]] = []
+        for size, idxs in sorted(classes.items()):
+            cur: list[int] = []
+            cur_n = 0
+            for i in idxs:
+                n = infos[i].num_groups
+                if cur and cur_n + n > size:
+                    launches.append((size, cur))
+                    cur, cur_n = [], 0
+                cur.append(i)
+                cur_n += n
+            if cur:
+                launches.append((size, cur))
+
+        offsets = np.cumsum([0] + [v.shape[0] for v in staged])
+        cat_vals = jnp.concatenate(staged, axis=0)
+        cat_mom = dists.Moments(
+            *(jnp.concatenate(f, axis=0) for f in zip(*moments)))
+
+        results: list = [None] * len(staged)
+        for size, idxs in launches:
+            # padding slots repeat the first representative — discarded by
+            # the inverse maps, and row-pure kernels make their content moot
+            idx = np.full(
+                (size,),
+                int(infos[idxs[0]].rep_indices[0]) + int(offsets[idxs[0]]),
+                dtype=np.int64)
+            pos = 0
+            for i in idxs:
+                n = infos[i].num_groups
+                idx[pos:pos + n] = infos[i].rep_indices + offsets[i]
+                pos += n
+            sub_vals, sub_mom = self._gather(cat_vals, cat_mom,
+                                             jnp.asarray(idx))
+            t, p, e = self._fit(sub_vals, sub_mom)
+            pos = 0
+            for i in idxs:
+                g = infos[i]
+                n = g.num_groups
+                inv = g.inverse
+                results[i] = (t[pos:pos + n][inv], p[pos:pos + n][inv],
+                              e[pos:pos + n][inv])
+                pos += n
+        return results
+
+    def run_window(self, w: regions.Window) -> WindowResult:
+        """ONE window through exactly the serial run-loop computation (load
+        → moments → Select & fit), without persist: the per-window fallback
+        of ``run_window_batch`` (method='sampling') and the serving layer's
+        naive one-launch-per-query baseline."""
+        item = self._load_unit(regions.WorkUnit(w, 0))
+        values = item.values
+        total_points = values.shape[0]
+        sample_idx = None
+        if (self.config.method == "sampling"
+                and self.config.sampler == "random"):
+            sample_idx = self._draw_sample(total_points, w)
+            values = values[jnp.asarray(sample_idx)]
+        moments = jax.block_until_ready(self._moments(values))
+        cmon = self.monitors["compute"]
+        uid = f"one:s{w.slice_i}/l{w.line_start:05d}"
+        cmon.start(uid, now=time.perf_counter())
+        t, p, e, _fitted, _hits = self._select_and_fit(
+            values, dists.Moments(*moments), w,
+            sample_idx=sample_idx, total_points=total_points,
+        )
+        cmon.finish(uid, now=time.perf_counter())
+        mom_np = (np.asarray(moments[0]),
+                  np.sqrt(np.maximum(np.asarray(moments[1]), 0)),
+                  np.asarray(moments[2]), np.asarray(moments[3]))
+        if sample_idx is None:
+            mean, std, skew, kurt = mom_np
+        else:
+            # like the serial loop: unsampled rows stay zero (type_idx -1)
+            mean, std, skew, kurt = (
+                np.zeros((total_points,), dtype=np.float32) for _ in range(4))
+            for dst, col in zip((mean, std, skew, kurt), mom_np):
+                dst[sample_idx] = col
+        return WindowResult(w, np.asarray(t), np.asarray(p), np.asarray(e),
+                            mean, std, skew, kurt)
 
     # -- resume helpers (also used by the PDFComputer facade) ------------------
 

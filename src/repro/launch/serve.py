@@ -1,84 +1,26 @@
-"""Serving driver: batched prefill + decode loop.
+"""Deprecated alias: ``repro.launch.serve`` is now ``serve_decode``.
 
-``python -m repro.launch.serve --arch mamba2-780m --reduced --tokens 32``
-
-Runs real generation on the reduced configs (CPU container); the full-size
-decode/prefill paths are exercised per-shape by the dry-run. Demonstrates
-the production serve loop: one jitted prefill, one jitted decode step
-reused across positions with donated caches (no per-step re-layout).
+"serve" here used to mean the batched LM prefill+decode demo; that module
+lives at ``repro.launch.serve_decode`` now that the pipeline has a real
+serving surface (``repro.launch.serve_pdf`` driving
+``repro.serve.PDFServer``). This shim keeps old imports and
+``python -m repro.launch.serve`` invocations working.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.serve_decode import *  # noqa: F401,F403
+from repro.launch.serve_decode import generate, main  # noqa: F401
 
-from repro.configs import registry
-from repro.models import encdec as ED
-from repro.models import transformer as T
-
-
-def generate(cfg, params, prompt: jax.Array, num_tokens: int, extras=None, max_len=None):
-    b, s = prompt.shape
-    max_len = max_len or (s + num_tokens)
-    if cfg.family == "encdec":
-        frames = extras["frames"]
-        logits, caches = ED.prefill(params, frames, prompt, cfg, max_len=max_len)
-        step = jax.jit(
-            lambda p, t, c, pos: ED.decode_step(p, t, c, pos, cfg),
-            donate_argnums=(2,), static_argnums=(),
-        )
-    else:
-        logits, caches = T.prefill(params, prompt, cfg, extras, max_len=max_len)
-        step = jax.jit(
-            lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg, extras),
-            donate_argnums=(2,),
-        )
-    out = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    for i in range(num_tokens):
-        out.append(tok)
-        logits, caches = step(params, tok, caches, s + i)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    return jnp.stack(out, axis=1)
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=registry.names())
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
-    args = ap.parse_args(argv)
-
-    cfg = registry.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(0)
-    init = ED.init_params if cfg.family == "encdec" else T.init_params
-    params = init(cfg, key)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
-
-    extras = None
-    if cfg.family == "vlm":
-        extras = {"memory": jax.random.normal(key, (args.batch, cfg.num_patches, cfg.d_model))}
-    if cfg.family == "encdec":
-        extras = {"frames": jax.random.normal(key, (args.batch, args.prompt_len, cfg.d_model))}
-
-    t0 = time.perf_counter()
-    out = generate(cfg, params, prompt, args.tokens, extras)
-    out = np.asarray(out)
-    dt = time.perf_counter() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s) sample: {out[0, :12]}")
-    assert np.isfinite(out).all()
-    return out
-
+warnings.warn(
+    "repro.launch.serve has been renamed to repro.launch.serve_decode "
+    "(the LM decode demo); 'serve' now refers to the PDF query server — "
+    "see repro.launch.serve_pdf and repro.serve.PDFServer",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 if __name__ == "__main__":
     main()

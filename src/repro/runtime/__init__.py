@@ -1,4 +1,4 @@
-from repro.runtime.monitor import StepMonitor, StragglerPolicy
+from repro.runtime.monitor import StepMonitor, StragglerPolicy, percentiles
 from repro.runtime.elastic import ElasticPlan, plan_remesh
 from repro.runtime.scheduler import (
     ShardAssignment,
@@ -8,6 +8,7 @@ from repro.runtime.scheduler import (
 )
 
 __all__ = [
-    "StepMonitor", "StragglerPolicy", "ElasticPlan", "plan_remesh",
-    "ShardAssignment", "SliceScheduler", "assign_slices", "mesh_num_shards",
+    "StepMonitor", "StragglerPolicy", "percentiles", "ElasticPlan",
+    "plan_remesh", "ShardAssignment", "SliceScheduler", "assign_slices",
+    "mesh_num_shards",
 ]

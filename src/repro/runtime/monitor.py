@@ -18,6 +18,25 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+# Trailing-latency reservoir per monitor: enough samples for stable p99 at
+# serving rates while bounding memory on long-lived daemons (a PDFServer's
+# request monitor outlives any single run).
+HISTORY_LIMIT = 8192
+
+
+def percentiles(durations, qs=(0.5, 0.99)) -> dict[str, float]:
+    """``{"p50": ..., "p99": ...}`` over a duration sample (nearest-rank on
+    the sorted sample; empty input -> zeros). Shared by ``SessionReport``
+    and the serve layer's stats so every latency surface quotes the same
+    estimator."""
+    s = sorted(durations)
+    if not s:
+        return {f"p{int(q * 100)}": 0.0 for q in qs}
+    return {
+        f"p{int(q * 100)}": s[min(len(s) - 1, int(q * (len(s) - 1) + 0.5))]
+        for q in qs
+    }
+
 
 @dataclass(frozen=True)
 class StragglerPolicy:
@@ -33,6 +52,10 @@ class StepMonitor:
 
     def __post_init__(self):
         self._durations: deque[float] = deque(maxlen=self.policy.window)
+        # Separate, larger reservoir for percentile reporting: the straggler
+        # median deliberately tracks only the trailing `policy.window` units,
+        # but p50/p99 need the run's full distribution (bounded).
+        self._history: deque[float] = deque(maxlen=HISTORY_LIMIT)
         self._inflight: dict[str, float] = {}
         self.flagged: list[str] = []
         self.completed: int = 0
@@ -46,8 +69,21 @@ class StepMonitor:
         now = now if now is not None else time.monotonic()
         dur = now - self._inflight.pop(unit_id)
         self._durations.append(dur)
+        self._history.append(dur)
         self.completed += 1
         return dur
+
+    @property
+    def history(self) -> tuple[float, ...]:
+        """Completed-unit durations (trailing ``HISTORY_LIMIT``), oldest
+        first — the percentile reservoir."""
+        return tuple(self._history)
+
+    def percentiles(self, qs=(0.5, 0.99)) -> dict[str, float]:
+        """p50/p99 (by default) over every completed unit this monitor has
+        seen — the per-stage latency surface of ``SessionReport`` and the
+        serve-layer stats."""
+        return percentiles(self._history, qs)
 
     def median(self) -> float | None:
         if len(self._durations) < self.policy.min_samples:

@@ -236,3 +236,174 @@ def test_sampling_results_cache_cleanly(tmp_path):
         assert_bitwise_equal(first[s], second[s])
         # the -1 unsampled markers survive the round-trip
         assert (second[s].type_idx == -1).any()
+
+
+# -- LRU size cap / shared-dir hygiene (serve-layer requirements) --------------
+
+import os
+import threading
+import time as _time
+
+from repro.core.executor import SliceResult
+
+
+def fabricated(slice_i, spec_hash="lruhash", p=256):
+    """A deterministic SliceResult per slice index — content is a pure
+    function of ``slice_i`` so concurrent readers can verify bitwise."""
+    rng = np.random.default_rng(1000 + slice_i)
+    return SliceResult(
+        type_idx=rng.integers(0, 4, p).astype(np.int32),
+        params=rng.random((p, 3), dtype=np.float32),
+        error=rng.random(p, dtype=np.float32),
+        mean=rng.random(p, dtype=np.float32),
+        std=rng.random(p, dtype=np.float32),
+        skew=rng.random(p, dtype=np.float32),
+        kurt=rng.random(p, dtype=np.float32),
+        avg_error=float(slice_i),
+        stats=[],
+        slice_i=slice_i,
+        spec_hash=spec_hash,
+    )
+
+
+def entry_size(tmp_path):
+    probe = ResultCache(tmp_path / "probe")
+    probe.store(fabricated(0))
+    return probe.size_bytes()
+
+
+def set_mtime(cache, slice_i, when, spec_hash="lruhash"):
+    os.utime(cache.path(spec_hash, slice_i), (when, when))
+
+
+def test_lru_cap_evicts_oldest_used(tmp_path):
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=2 * one + one // 2)
+    now = _time.time()
+    for i in (0, 1):
+        cache.store(fabricated(i))
+        set_mtime(cache, i, now - 100 + i)  # 0 is oldest-used
+    cache.store(fabricated(2))  # over cap: oldest (0) must go
+    assert cache.lookup("lruhash", 0) is None
+    assert cache.lookup("lruhash", 1) is not None
+    assert cache.lookup("lruhash", 2) is not None
+    assert cache.evictions == 1
+    assert cache.size_bytes() <= cache.max_bytes
+
+
+def test_lookup_touch_refreshes_recency(tmp_path):
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=2 * one + one // 2)
+    now = _time.time()
+    for i in (0, 1):
+        cache.store(fabricated(i))
+        set_mtime(cache, i, now - 100 + i)
+    # a hit on the *older* entry makes it the most recently used ...
+    assert cache.lookup("lruhash", 0) is not None
+    cache.store(fabricated(2))
+    # ... so the cap evicts slice 1, not slice 0
+    assert cache.lookup("lruhash", 1) is None
+    assert cache.lookup("lruhash", 0) is not None
+
+
+def test_store_never_evicts_its_own_entry(tmp_path):
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=max(1, one // 2))
+    cache.store(fabricated(7))  # alone exceeds the cap
+    assert cache.lookup("lruhash", 7) is not None
+    cache.store(fabricated(8))  # evicts 7, keeps itself
+    assert cache.lookup("lruhash", 7) is None
+    assert cache.lookup("lruhash", 8) is not None
+
+
+def test_session_wires_cache_max_bytes(tmp_path):
+    spec = spec_with_cache(tmp_path / "cache")
+    staged = dataclasses.replace(
+        spec, execution=dataclasses.replace(spec.execution,
+                                            cache_max_bytes=12345))
+    assert PDFSession(staged).cache.max_bytes == 12345
+    assert PDFSession(spec).cache.max_bytes is None
+    # staging-only knob: both specs map to the same cache entries
+    assert staged.content_hash() == spec.content_hash()
+
+
+def test_stale_tmps_reaped_at_open_fresh_kept(tmp_path):
+    d = tmp_path / "cache" / "somehash"
+    d.mkdir(parents=True)
+    stale = d / "dead-writer.tmp"
+    fresh = d / "live-writer.tmp"
+    stale.write_bytes(b"x")
+    fresh.write_bytes(b"y")
+    old = _time.time() - 7200
+    os.utime(stale, (old, old))
+    ResultCache(tmp_path / "cache")  # open reaps
+    assert not stale.exists()
+    assert fresh.exists()  # young tmp may belong to a live writer
+
+
+def test_corrupt_entry_is_warned_miss_for_concurrent_readers(tmp_path):
+    cache = ResultCache(tmp_path / "cache")
+    cache.store(fabricated(3))
+    cache.path("lruhash", 3).write_bytes(b"garbage, not a zip")
+    results, errors = [], []
+
+    def reader():
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")  # not thread-safe to assert
+                results.append(cache.lookup("lruhash", 3))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert results == [None] * 4  # every reader: clean miss, no crash
+    with pytest.warns(UserWarning, match="unreadable cache entry"):
+        assert cache.lookup("lruhash", 3) is None
+
+
+def test_concurrent_store_lookup_under_eviction_pressure(tmp_path):
+    """Two writer threads + two readers over one capped dir: no crashes,
+    and every successful hit is bitwise-equal to that slice's content."""
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=3 * one + one // 2)
+    expected = {i: fabricated(i) for i in range(8)}
+    errors = []
+    hits = [0]
+
+    def writer(offset):
+        try:
+            for round_ in range(6):
+                for i in range(offset, 8, 2):
+                    cache.store(expected[i])
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def reader():
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                for round_ in range(40):
+                    got = cache.lookup("lruhash", round_ % 8)
+                    if got is not None:
+                        hits[0] += 1
+                        assert_bitwise_equal(expected[got.slice_i], got)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(0,)),
+               threading.Thread(target=writer, args=(1,)),
+               threading.Thread(target=reader),
+               threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    assert hits[0] > 0  # the readers did exercise the hit path
+    assert cache.size_bytes() <= cache.max_bytes
+    assert cache.evictions > 0

@@ -1,0 +1,325 @@
+"""PDFServer (repro/serve): the coalescing-equivalence contract and the
+serving lifecycle.
+
+The load-bearing guarantee is bitwise equality: every answer a server
+produces — coalesced or naive, computed or served from the hot-window LRU
+or the ResultCache, under concurrent clients — must match the batch
+pipeline's arrays exactly. The rest covers the queue lifecycle: graceful
+drain on close, loud failure propagation, submit validation."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    SourceSpec,
+    build_source,
+)
+from repro.api.spec import ServeSpec
+from repro.core import regions
+from repro.core.executor import RESULT_FIELDS
+from repro.serve import PDFServer, PointQuery, RegionQuery, WindowQuery
+
+# lines_per_slice=10 with window_lines=3 leaves a 1-line tail window
+# ([9, 10)) so span math is exercised off the aligned grid.
+SOURCE = SourceSpec(num_slices=3, lines_per_slice=10, points_per_line=8,
+                    observations=150)
+PPL = SOURCE.points_per_line
+WINDOW_LINES = 3
+
+
+def make_spec(method="grouping", serve=ServeSpec(), **kw):
+    return PipelineSpec(
+        source=SOURCE,
+        method=MethodSpec(name=method),
+        compute=ComputeSpec(window_lines=WINDOW_LINES, num_bins=20),
+        serve=serve,
+        **kw,
+    )
+
+
+def reference(spec, slices):
+    return PDFSession(spec).run_all(slices)
+
+
+def assert_answer_matches(answer, ref_slice, lo, hi):
+    for name in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(answer, name), getattr(ref_slice, name)[lo:hi],
+            err_msg=name)
+
+
+# -- bitwise equivalence vs the batch pipeline ---------------------------------
+
+
+@pytest.mark.parametrize("method", ["baseline", "grouping", "reuse", "sampling"])
+def test_answers_bitwise_equal_to_pipeline(method):
+    """Point / unaligned-window / region answers are bitwise-identical to
+    the serial batch pipeline, for every method family the executor has
+    (sampling exercises the per-window dispatch fallback and the
+    window-seeded sample draws)."""
+    spec = make_spec(method)
+    ref = reference(spec, [1, 2])
+    with PDFServer(spec) as srv:
+        a = srv.query(PointQuery(1, 4, 5))
+        assert_answer_matches(a, ref[1], 4 * PPL + 5, 4 * PPL + 6)
+        assert a.spec_hash == spec.content_hash()
+
+        # span [2, 7) crosses windows [0,3) [3,6) [6,9) and is unaligned
+        # on both edges
+        a = srv.query(WindowQuery(1, 2, 7))
+        assert_answer_matches(a, ref[1], 2 * PPL, 7 * PPL)
+
+        # span reaching into the 1-line tail window [9, 10)
+        a = srv.query(WindowQuery(2, 8, 10))
+        assert_answer_matches(a, ref[2], 8 * PPL, 10 * PPL)
+
+        a = srv.query(RegionQuery(2))
+        assert_answer_matches(a, ref[2], 0, SOURCE.lines_per_slice * PPL)
+
+
+@pytest.mark.parametrize("method", ["baseline", "grouping", "reuse"])
+def test_run_window_batch_matches_serial_windows(method):
+    """One batched dispatch over windows spanning slices (tail window
+    included) returns bitwise what per-window serial dispatch returns —
+    the executor-level contract the coalescing tick rests on."""
+    windows = [
+        regions.Window(0, 0, 3),
+        regions.Window(0, 9, 10),  # tail
+        regions.Window(1, 3, 6),
+        regions.Window(2, 6, 9),
+    ]
+    spec = make_spec(method)
+    # separate sessions: the reuse method's cache must not leak hits
+    # between the two dispatch orders being compared
+    batched = PDFSession(spec).executor(0).run_window_batch(windows)
+    serial_ex = PDFSession(spec).executor(0)
+    for w, br in zip(windows, batched):
+        sr = serial_ex.run_window(w)
+        assert br.window == w == sr.window
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(br, name), getattr(sr, name), err_msg=f"{w}/{name}")
+
+
+def test_coalesced_equals_naive_server():
+    """The same query set answered by a coalescing server and by the
+    one-launch-per-query baseline is bitwise-identical — coalescing changes
+    launch count, never results."""
+    queries = [PointQuery(0, 1, 2), WindowQuery(0, 0, 5), RegionQuery(1),
+               PointQuery(1, 9, 7), WindowQuery(2, 4, 10), PointQuery(0, 1, 2)]
+    answers = {}
+    for mode, serve in (
+        ("coalesced", ServeSpec(coalesce=True)),
+        ("naive", ServeSpec(coalesce=False, window_cache_entries=0,
+                            tick_seconds=0.0)),
+    ):
+        with PDFServer(make_spec("grouping", serve=serve)) as srv:
+            futures = [srv.submit(q) for q in queries]
+            answers[mode] = [f.result(timeout=60) for f in futures]
+    for qc, qn in zip(answers["coalesced"], answers["naive"]):
+        assert qc.query == qn.query
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(qc, name), getattr(qn, name), err_msg=name)
+
+
+def test_concurrent_clients_bitwise():
+    """8 closed-loop clients hammering overlapping point/window queries all
+    get bitwise-correct spans; the server coalesces the overlap (fewer
+    windows computed than requested)."""
+    spec = make_spec("grouping")
+    ref = reference(spec, [0, 1, 2])
+    errors: list[BaseException] = []
+
+    def client(c: int) -> None:
+        try:
+            s = c % SOURCE.num_slices
+            for i in range(6):
+                line = (c + 2 * i) % SOURCE.lines_per_slice
+                point = (3 * c + i) % PPL
+                a = server.query(PointQuery(s, line, point))
+                lo = line * PPL + point
+                assert_answer_matches(a, ref[s], lo, lo + 1)
+            a = server.query(WindowQuery(s, 1, 8))
+            assert_answer_matches(a, ref[s], PPL, 8 * PPL)
+        except BaseException as e:  # noqa: BLE001 — re-raised on main thread
+            errors.append(e)
+
+    with PDFServer(spec) as server:
+        threads = [threading.Thread(target=client, args=(c,)) for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = server.stats()
+    if errors:
+        raise errors[0]
+    assert stats.queries == 8 * 7
+    assert stats.windows_computed <= 4 * SOURCE.num_slices  # each window once
+    assert stats.windows_requested > stats.windows_computed
+    assert stats.coalesce_ratio > 1.0
+
+
+# -- cache layers --------------------------------------------------------------
+
+
+def test_repeat_query_hits_memory_lru():
+    spec = make_spec("grouping")
+    with PDFServer(spec) as srv:
+        first = srv.query(WindowQuery(0, 0, 6))
+        again = srv.query(WindowQuery(0, 0, 6))
+        stats = srv.stats()
+    assert first.windows_computed == 2 and first.windows_from_memory == 0
+    assert again.windows_from_memory == 2 and again.windows_computed == 0
+    for name in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(first, name), getattr(again, name), err_msg=name)
+    assert stats.windows_from_memory == 2
+
+
+def test_lru_disabled_recomputes():
+    serve = ServeSpec(window_cache_entries=0, tick_seconds=0.0)
+    with PDFServer(make_spec("grouping", serve=serve)) as srv:
+        srv.query(PointQuery(0, 0, 0))
+        srv.query(PointQuery(0, 0, 0))
+        stats = srv.stats()
+    assert stats.windows_computed == 2 and stats.windows_from_memory == 0
+
+
+def test_hot_path_from_result_cache_builds_nothing(tmp_path):
+    """A server in front of a fully-populated ResultCache answers without
+    ever building an executor or training a tree, and stores nothing new;
+    a server that computes a full slice stores it back for the next one."""
+    spec = make_spec(
+        "grouping", execution=ExecSpec(cache_dir=str(tmp_path / "cache")))
+    ref = reference(spec, [0])  # populates the cache for slice 0
+
+    with PDFServer(spec) as srv:
+        a = srv.query(RegionQuery(0))
+        assert_answer_matches(a, ref[0], 0, SOURCE.lines_per_slice * PPL)
+        assert a.windows_from_disk == 4 and a.windows_computed == 0
+        # slice 1 is NOT cached: the server computes it window by window
+        # and stores the completed slice back
+        srv.query(RegionQuery(1))
+        stats = srv.stats()
+        assert not srv.session._executors or stats.windows_computed > 0
+        assert stats.slices_stored == 1
+    # fresh server, same cache dir: slice 1 now serves from disk too
+    with PDFServer(spec) as srv2:
+        b = srv2.query(RegionQuery(1))
+        assert b.windows_from_disk == 4 and b.windows_computed == 0
+        assert not srv2.session._executors  # pure cache read: no executor
+        assert srv2.session._tree is None
+
+
+# -- lifecycle -----------------------------------------------------------------
+
+
+def test_graceful_drain_on_close():
+    """Everything queued before close() is served to completion; submitting
+    after close raises instead of silently dropping."""
+    spec = make_spec("grouping")
+    srv = PDFServer(spec).start()
+    futures = [srv.submit(PointQuery(s, line, 0))
+               for s in range(2) for line in range(0, 10, 3)]
+    srv.close(timeout=120)
+    for f in futures:
+        assert f.done()
+        answer = f.result(timeout=0)  # already resolved, never dropped
+        assert answer.type_idx.shape == (1,)
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(PointQuery(0, 0, 0))
+
+
+def test_submit_before_start_raises():
+    srv = PDFServer(make_spec("grouping"))
+    with pytest.raises(RuntimeError, match="not started"):
+        srv.submit(PointQuery(0, 0, 0))
+
+
+class _FailingSource:
+    """Delegates everything to a real source but refuses to load."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def load_window(self, w):
+        raise RuntimeError("injected load failure")
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_serving_thread_failure_is_loud():
+    """A crash in the serving thread fails the in-flight future with the
+    original error, poisons the server, and surfaces again on close()."""
+    spec = make_spec("grouping")
+    srv = PDFServer(spec, data_source=_FailingSource(build_source(SOURCE)))
+    srv.start()
+    fut = srv.submit(PointQuery(0, 0, 0))
+    with pytest.raises(RuntimeError, match="injected load failure"):
+        fut.result(timeout=60)
+    srv._thread.join(timeout=60)
+    with pytest.raises(RuntimeError, match="server thread failed"):
+        srv.submit(PointQuery(0, 0, 0))
+    with pytest.raises(RuntimeError, match="server thread failed"):
+        srv.close()
+
+
+def test_submit_validation():
+    with PDFServer(make_spec("grouping")) as srv:
+        with pytest.raises(ValueError, match="slice"):
+            srv.submit(RegionQuery(99))
+        with pytest.raises(ValueError, match="point"):
+            srv.submit(PointQuery(0, 0, PPL))
+        with pytest.raises(ValueError, match="line"):
+            srv.submit(PointQuery(0, SOURCE.lines_per_slice, 0))
+        with pytest.raises(ValueError, match="lines"):
+            srv.submit(WindowQuery(0, 5, 5))  # empty span
+        with pytest.raises(TypeError, match="unknown query"):
+            srv.submit(("not", "a", "query"))
+
+
+# -- observability -------------------------------------------------------------
+
+
+def test_stats_and_stage_percentiles():
+    spec = make_spec("grouping")
+    with PDFServer(spec) as srv:
+        srv.query(WindowQuery(0, 0, 6))
+        srv.query(PointQuery(0, 1, 1))
+        stats = srv.stats()
+    assert stats.queries == 2
+    assert stats.queries_by_kind == {"WindowQuery": 1, "PointQuery": 1}
+    assert stats.launches >= 1 and stats.windows_computed == 2
+    assert stats.batch_occupancy > 0
+    assert set(stats.latency) == {"p50", "p99"}
+    assert stats.latency["p99"] >= stats.latency["p50"] > 0
+    assert set(stats.launch_latency) == {"p50", "p99"}
+    # per-stage tails come from the session's executor monitors — the same
+    # numbers PDFSession.report() now carries
+    assert "compute" in stats.stage_percentiles
+    assert stats.stage_percentiles["compute"]["p50"] > 0
+    report = srv.session.report()
+    assert report.stage_percentiles.keys() == stats.stage_percentiles.keys()
+
+
+def test_serve_spec_excluded_from_content_hash():
+    """ServeSpec is delivery policy, not result definition: any serve
+    config maps to the same ResultCache entries."""
+    base = make_spec("grouping")
+    tweaked = make_spec("grouping", serve=ServeSpec(
+        coalesce=False, tick_seconds=0.5, max_batch_windows=1,
+        window_cache_entries=0))
+    assert base.content_hash() == tweaked.content_hash()
