@@ -1,0 +1,111 @@
+"""Fault-tolerance costs (DESIGN.md §14): what the retry/speculation
+machinery costs when nothing fails, and what recovery costs when faults hit.
+
+``fault/clean_retry_path`` is the headline: a normal grouped run with the
+full guarded load path (retry wrapper + speculation arm + degraded-mode
+bookkeeping) against the same run with all of it disabled — the derived
+column records the overhead, which must stay in the noise (the guard code
+is a try/except and two counters per unit; speculation only spawns work
+when a straggler trips the threshold).
+
+``fault/transient_recovery`` injects a transient read error on every
+window's first load and measures the recovered run — asserting in-bench
+that the result is bitwise-identical to the fault-free pass (the layer's
+invariant; a bench that quietly measured different answers would be
+meaningless). ``fault/degraded_manifest`` measures a run that quarantines
+one unrecoverable unit and completes degraded, manifest and all.
+
+Rows are tracked, not gated: injected sleeps/backoffs are configured
+constants, not code-speed signals.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common  # noqa: E402 — run via benchmarks/run.py
+from repro.api import ExecSpec, PDFSession
+from repro.core import distributions as d
+from repro.core.executor import RESULT_FIELDS
+from repro.runtime.faults import FaultInjector, FaultPlan, FaultRule
+
+FAST = dict(retry_backoff_s=0.001, speculate=False)
+
+
+def _timed(spec, sim, slices, injector=None):
+    sess = PDFSession(spec, data_source=sim, fault_injector=injector)
+    t0 = time.perf_counter()
+    results = sess.run_all(slices)
+    return sess, results, time.perf_counter() - t0
+
+
+def run(quick: bool = True):
+    sim = common.small_sim(num_simulations=200 if quick else 1000)
+    slices = [2, 3]
+    rows = []
+
+    guarded = common.method_spec(
+        sim, "grouping", d.TYPES_4, window_lines=6,
+        exec_config=ExecSpec(max_retries=2, speculate=True))
+    bare = common.method_spec(
+        sim, "grouping", d.TYPES_4, window_lines=6,
+        exec_config=ExecSpec(max_retries=0, speculate=False,
+                             degraded_mode=False))
+
+    # jit warmup (both specs share executables shapes; one pass suffices)
+    PDFSession(guarded, data_source=sim).run_all([0])
+
+    _, ref, t_guarded = _timed(guarded, sim, slices)
+    _, ref_bare, t_bare = _timed(bare, sim, slices)
+    for s in slices:  # the guard path must not change a single bit
+        for f in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(ref[s], f), getattr(ref_bare[s], f))
+    overhead = (t_guarded - t_bare) / t_bare if t_bare > 0 else 0.0
+    rows.append(common.Row(
+        "fault/clean_retry_path", t_guarded * 1e6,
+        f"overhead vs bare {overhead * 100:+.1f}%",
+        spec_hash=guarded.content_hash()))
+
+    # -- transient recovery: every window's first read fails ------------------
+    spec = common.method_spec(
+        sim, "grouping", d.TYPES_4, window_lines=6,
+        exec_config=ExecSpec(max_retries=2, **FAST))
+    inj = FaultInjector(FaultPlan(rules=(FaultRule("read_error", times=1),)))
+    sess, faulty, t_recover = _timed(spec, sim, slices, injector=inj)
+    rep = sess.report()
+    assert rep.retries > 0 and rep.quarantined_units == 0
+    for s in slices:
+        for f in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(faulty[s], f), getattr(ref[s], f))
+    rows.append(common.Row(
+        "fault/transient_recovery", t_recover * 1e6,
+        f"retries={rep.retries} bitwise=ok",
+        spec_hash=spec.content_hash()))
+
+    # -- degraded completion: one unit never loads ----------------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        spec = common.method_spec(
+            sim, "grouping", d.TYPES_4, window_lines=6,
+            exec_config=ExecSpec(max_retries=1, out_dir=tmp, **FAST))
+        inj = FaultInjector(FaultPlan(rules=(
+            FaultRule("read_error", slice_i=2, line_start=0, times=10_000),
+        )))
+        sess, results, t_degraded = _timed(spec, sim, slices, injector=inj)
+        rep = sess.report()
+        assert results[2].degraded and not results[3].degraded
+        manifest = Path(tmp) / "slice2_failed_units.json"
+        failed = json.loads(manifest.read_text())["failed"]
+        assert [e["line_start"] for e in failed] == [0]
+        rows.append(common.Row(
+            "fault/degraded_manifest", t_degraded * 1e6,
+            f"quarantined={rep.quarantined_units} manifest=ok",
+            spec_hash=spec.content_hash()))
+
+    return rows

@@ -105,6 +105,7 @@ def main() -> None:
 
     from benchmarks import (
         cache_bench,
+        fault_bench,
         fig06_methods_small,
         fig07_errors,
         fig08_window_size,
@@ -119,7 +120,7 @@ def main() -> None:
     modules = [
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
-        cache_bench, serve_bench,
+        cache_bench, serve_bench, fault_bench,
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}

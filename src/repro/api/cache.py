@@ -52,6 +52,60 @@ from repro.core.executor import _FIELDS, SliceResult
 # belongs to a crashed process, not a slow one.
 TMP_REAP_SECONDS = 3600.0
 
+# A .lock is held only for one entry write or unlink; one this old belongs
+# to a process that died holding it, and may be broken.
+LOCK_STALE_SECONDS = 30.0
+
+
+class _DirLock:
+    """Best-effort cross-process mutex for one cache entry directory: an
+    ``O_CREAT | O_EXCL`` ``.lock`` file (atomic on POSIX and NFSv3+ —
+    exactly the shared-filesystem case two processes sharing a cache_dir
+    are in). Store-vs-evict races coordinate through this; contention
+    *degrades* (the caller warns and skips) — it never hangs, because
+    acquisition is a bounded poll and locks older than ``stale_s`` are
+    presumed orphaned by a dead holder and broken."""
+
+    def __init__(self, dirpath: Path, timeout_s: float,
+                 stale_s: float = LOCK_STALE_SECONDS):
+        self.path = dirpath / ".lock"
+        self.timeout_s = timeout_s
+        self.stale_s = stale_s
+        self.acquired = False
+
+    def acquire(self) -> bool:
+        deadline = time.monotonic() + self.timeout_s
+        while True:
+            try:
+                fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    if time.time() - self.path.stat().st_mtime > self.stale_s:
+                        os.unlink(self.path)  # break a dead holder's lock
+                        continue
+                except OSError:
+                    continue  # holder released between open and stat: retry
+                if time.monotonic() >= deadline:
+                    return False
+                time.sleep(0.005)
+                continue
+            except OSError:
+                return False  # unwritable/vanished dir: degrade, never hang
+            try:
+                os.write(fd, str(os.getpid()).encode())
+            finally:
+                os.close(fd)
+            self.acquired = True
+            return True
+
+    def release(self) -> None:
+        if self.acquired:
+            self.acquired = False
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
 
 class ResultCache:
     """Filesystem-backed map ``(spec_hash, slice) -> SliceResult``.
@@ -63,12 +117,19 @@ class ResultCache:
     """
 
     def __init__(self, cache_dir: str | Path, max_bytes: int | None = None,
-                 tmp_reap_seconds: float = TMP_REAP_SECONDS):
+                 tmp_reap_seconds: float = TMP_REAP_SECONDS,
+                 lock_timeout_s: float = 5.0, injector=None):
         if max_bytes is not None and max_bytes <= 0:
             raise ValueError(f"max_bytes must be > 0 (or None), got {max_bytes}")
+        if lock_timeout_s < 0:
+            raise ValueError(
+                f"lock_timeout_s must be >= 0, got {lock_timeout_s}")
         self.dir = Path(cache_dir)
         self.max_bytes = max_bytes
+        self.lock_timeout_s = lock_timeout_s
+        self.injector = injector  # faults.FaultInjector (on_cache hook)
         self.evictions = 0  # entries unlinked by the size cap, this process
+        self.lock_misses = 0  # stores/evictions skipped on lock contention
         self._reap_stale_tmps(tmp_reap_seconds)
 
     def path(self, spec_hash: str, slice_i: int) -> Path:
@@ -83,6 +144,10 @@ class ResultCache:
         if not f.exists():
             return None
         try:
+            if self.injector is not None:
+                # InjectedFault is an OSError: a chaos plan's cache_error
+                # exercises exactly this warned-miss path.
+                self.injector.on_cache("lookup", slice_i)
             with np.load(f) as z:  # close the zip handle: no fd per hit
                 if str(z["spec_hash"]) != spec_hash:  # misfiled: miss
                     return None
@@ -112,29 +177,53 @@ class ResultCache:
     def store(self, result: SliceResult) -> None:
         """Persist one computed slice under its own ``spec_hash``; then, with
         a ``max_bytes`` cap, evict least-recently-used entries until the
-        directory fits again (never the entry just written)."""
+        directory fits again (never the entry just written).
+
+        The write happens under the entry dir's ``.lock`` (``_DirLock``) so
+        it cannot race another process's eviction pass over the same dir.
+        Lock contention — and any IO failure — degrades to a *warned skip*:
+        the cache is an optimization, a failed store must cost a future
+        recompute, never the run."""
         if result.spec_hash is None or result.slice_i is None:
             raise ValueError(
                 "cannot cache a SliceResult without spec_hash and slice_i")
         f = self.path(result.spec_hash, result.slice_i)
-        f.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=f.parent, suffix=".tmp")
         try:
-            with os.fdopen(fd, "wb") as fh:
-                np.savez(
-                    fh,
-                    spec_hash=result.spec_hash,
-                    slice_i=result.slice_i,
-                    avg_error=result.avg_error,
-                    **{name: getattr(result, name) for name in _FIELDS},
-                )
-            os.replace(tmp, f)
-        except BaseException:
+            if self.injector is not None:
+                self.injector.on_cache("store", result.slice_i)
+            f.parent.mkdir(parents=True, exist_ok=True)
+            lock = _DirLock(f.parent, self.lock_timeout_s)
+            if not lock.acquire():
+                self.lock_misses += 1
+                warnings.warn(
+                    f"cache entry dir {f.parent} locked by another process — "
+                    f"skipping store for slice {result.slice_i}", stacklevel=2)
+                return
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                fd, tmp = tempfile.mkstemp(dir=f.parent, suffix=".tmp")
+                try:
+                    with os.fdopen(fd, "wb") as fh:
+                        np.savez(
+                            fh,
+                            spec_hash=result.spec_hash,
+                            slice_i=result.slice_i,
+                            avg_error=result.avg_error,
+                            **{name: getattr(result, name) for name in _FIELDS},
+                        )
+                    os.replace(tmp, f)
+                except BaseException:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+                    raise
+            finally:
+                lock.release()
+        except OSError as e:
+            warnings.warn(
+                f"cache store failed for {f}: {e} — continuing without "
+                "caching this slice", stacklevel=2)
+            return
         if self.max_bytes is not None:
             self._evict(keep=f)
 
@@ -162,7 +251,12 @@ class ResultCache:
     def _evict(self, keep: Path | None = None) -> None:
         """Unlink oldest-used entries until the cap holds. ``keep`` (the
         entry a store just wrote) is never evicted, even when it alone
-        exceeds the cap — a store must not erase its own result."""
+        exceeds the cap — a store must not erase its own result.
+
+        Each unlink takes its entry dir's ``.lock`` with a short timeout so
+        it cannot race another process's in-flight store into the same dir;
+        a contended dir is simply skipped this pass (the next store's
+        eviction will see it again)."""
         entries = self.entries()
         total = sum(size for _, _, size in entries)
         for f, _mtime, size in entries:
@@ -170,11 +264,17 @@ class ResultCache:
                 break
             if keep is not None and f == keep:
                 continue
+            lock = _DirLock(f.parent, min(0.1, self.lock_timeout_s))
+            if not lock.acquire():
+                self.lock_misses += 1
+                continue
             try:
                 os.unlink(f)
             except OSError:
                 continue  # another process evicted it first: size unknown,
                 # stay conservative and keep trimming from our own snapshot
+            finally:
+                lock.release()
             total -= size
             self.evictions += 1
 

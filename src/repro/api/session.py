@@ -31,6 +31,8 @@ from repro.api.spec import PipelineSpec, build_source
 from repro.core import ml_predict as mlp
 from repro.core import regions
 from repro.core.executor import ExecutorReport, SliceResult, StagedExecutor
+from repro.runtime import elastic
+from repro.runtime.faults import FaultInjector, FaultPlan, ShardLostError
 from repro.runtime.scheduler import assign_slices
 
 
@@ -52,6 +54,13 @@ class SessionReport:
     # compute vs slices computed (and stored). Both stay 0 with no cache.
     cache_hits: int = 0
     cache_misses: int = 0
+    # Fault-tolerance totals (DESIGN.md §14): transient re-attempts,
+    # speculative load re-dispatches, quarantined (degraded-mode) units,
+    # and shards that died mid-run whose slices were re-dealt.
+    retries: int = 0
+    speculations: int = 0
+    quarantined_units: int = 0
+    shards_lost: tuple[int, ...] = ()
     shard_reports: dict[int, list[ExecutorReport]] = field(default_factory=dict)
     # Per-stage latency percentiles over every completed unit (seconds):
     # {"load"|"compute"|"persist": {"p50": ..., "p99": ...}} — from the
@@ -80,7 +89,8 @@ class PDFSession:
     """
 
     def __init__(self, spec: PipelineSpec, data_source=None,
-                 tree: mlp.DecisionTree | None = None):
+                 tree: mlp.DecisionTree | None = None,
+                 fault_injector: FaultInjector | None = None):
         if not isinstance(spec, PipelineSpec):
             raise TypeError(f"spec must be a PipelineSpec, got {type(spec).__name__}")
         self.spec = spec
@@ -89,13 +99,23 @@ class PDFSession:
         self._executors: dict[int, StagedExecutor] = {}
         self._reports: dict[int, list[ExecutorReport]] = {}
         self._slices_done = 0
+        # Chaos layer (DESIGN.md §14): an explicit injector wins; otherwise
+        # ExecSpec.fault_plan (the --fault-plan JSON file) builds one. Each
+        # shard's executor reads through its own injector-wrapped source,
+        # so shard-targeted rules (shard_death) see the right identity.
+        self.injector = fault_injector
+        if self.injector is None and spec.execution.fault_plan:
+            self.injector = FaultInjector(
+                FaultPlan.load(spec.execution.fault_plan))
+        self.shards_lost: tuple[int, ...] = ()
         # Hashed once: the spec is frozen, and for kind='file' hashing reads
         # + digests the on-disk manifest — per-slice cache lookups must not
         # repeat that (and a manifest swapped mid-run must not split the
         # session across two hashes).
         self._spec_hash = spec.content_hash()
         self.cache = (ResultCache(spec.execution.cache_dir,
-                                  max_bytes=spec.execution.cache_max_bytes)
+                                  max_bytes=spec.execution.cache_max_bytes,
+                                  injector=self.injector)
                       if spec.execution.cache_dir else None)
         self.cache_hits = 0
         self.cache_misses = 0
@@ -147,15 +167,22 @@ class PDFSession:
 
     def executor(self, shard: int = 0) -> StagedExecutor:
         """The shard's ``StagedExecutor`` (built on first use; its reuse
-        cache persists across every slice the shard runs)."""
+        cache persists across every slice the shard runs). With a fault
+        injector active, the shard reads through an injector-wrapped source
+        (read faults, shard death) and its persist stage gets the injector's
+        write hook."""
         if shard not in self._executors:
+            source = self.source
+            if self.injector is not None:
+                source = self.injector.wrap_source(source, shard=shard)
             self._executors[shard] = StagedExecutor(
                 self.spec.pdf_config(),
-                self.source,
+                source,
                 tree=self.tree,
                 out_dir=self.spec.execution.out_dir,
                 exec_config=self.spec.exec_config(),
                 spec_hash=self.spec_hash,
+                injector=self.injector,
             )
         return self._executors[shard]
 
@@ -200,13 +227,15 @@ class PDFSession:
                 stacklevel=2)
         exe = self.spec.execution
         bound = self.spec.method.error_bound
+        lost: list[int] = []
+        pending: list[int] = []  # slices stranded on dead shards, in order
+        healthy: list[int] = []
         for a in assign_slices(self.resolve_slices(slices), exe.shards):
             if exe.shard is not None and a.shard != exe.shard:
                 continue
-            if not a.slices:
-                continue
+            dead = False
             ex = None
-            for s in a.slices:
+            for i, s in enumerate(a.slices):
                 if self.cache is not None:
                     hit = self.cache.lookup(self.spec_hash, s)
                     if hit is not None:
@@ -220,16 +249,54 @@ class PDFSession:
                     self.cache_misses += 1
                 if ex is None:
                     ex = self.executor(a.shard)
-                plan = regions.build_plan(
-                    self.geometry, [s], self.spec.compute.window_lines
-                )
-                result = ex.run(plan, resume=resume, on_window=on_window)[s]
-                if ex.last_report is not None:
-                    self._reports.setdefault(a.shard, []).append(ex.last_report)
-                self._slices_done += 1
-                if self.cache is not None:
-                    self.cache.store(result)
+                try:
+                    result = self._run_one(ex, a.shard, s, resume, on_window)
+                except ShardLostError:
+                    # The batch form of a transient failure: the shard is
+                    # gone, its unfinished slices get re-dealt below over
+                    # whoever survives (runtime/elastic.plan_redeal).
+                    lost.append(a.shard)
+                    pending.extend(a.slices[i:])
+                    dead = True
+                    break
                 yield result
+            if not dead:
+                healthy.append(a.shard)
+        if pending:
+            self.shards_lost = tuple(lost)
+            plan = elastic.plan_redeal(pending, healthy, lost)
+            # resume=True when persisting: windows the dead shard already
+            # made durable are restored, only its remaining units re-run
+            # (the watermark + failed-unit manifest are the recovery line).
+            redeal_resume = bool(resume or exe.out_dir is not None)
+            for h in plan.healthy_shards:
+                for s in plan.slices_for(h):
+                    yield self._run_one(
+                        self.executor(h), h, s, redeal_resume, on_window)
+
+    def _run_one(self, ex: StagedExecutor, shard: int, s: int,
+                 resume: bool, on_window: Callable | None) -> SliceResult:
+        """Run one slice on one shard's executor, recording its report and
+        result-cache traffic. Degraded results are NOT stored: a cache entry
+        answers for the whole slice, and a quarantined window's zeros are a
+        hole, not an answer — the cache must only ever serve complete
+        slices."""
+        plan = regions.build_plan(
+            self.geometry, [s], self.spec.compute.window_lines
+        )
+        result = ex.run(plan, resume=resume, on_window=on_window)[s]
+        if ex.last_report is not None:
+            self._reports.setdefault(shard, []).append(ex.last_report)
+        self._slices_done += 1
+        if self.cache is not None:
+            if result.degraded:
+                warnings.warn(
+                    f"slice {s} completed degraded "
+                    f"({len(result.quarantined)} quarantined unit(s)) — "
+                    "not stored in the result cache", stacklevel=2)
+            else:
+                self.cache.store(result)
+        return result
 
     def _persist_cached(self, result: SliceResult, resume: bool = False) -> None:
         """Honor ``ExecSpec.out_dir`` for cache-served slices: a hit skips
@@ -293,7 +360,7 @@ class PDFSession:
     def report(self) -> SessionReport:
         """Aggregate per-stage totals over everything run so far."""
         totals = dict(wall=0.0, load=0.0, wait=0.0, compute=0.0, persist=0.0)
-        windows = 0
+        windows = retries = speculations = quarantined = 0
         for reps in self._reports.values():
             for r in reps:
                 totals["wall"] += r.wall_seconds
@@ -302,12 +369,19 @@ class PDFSession:
                 totals["compute"] += r.compute_seconds
                 totals["persist"] += r.persist_seconds
                 windows += r.units
+                retries += r.retries
+                speculations += r.speculations
+                quarantined += r.quarantined
         return SessionReport(
             spec_hash=self.spec_hash,
             slices_done=self._slices_done,
             windows=windows,
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
+            retries=retries,
+            speculations=speculations,
+            quarantined_units=quarantined,
+            shards_lost=self.shards_lost,
             wall_seconds=totals["wall"],
             load_seconds=totals["load"],
             wait_seconds=totals["wait"],

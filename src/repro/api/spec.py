@@ -330,6 +330,28 @@ class ExecSpec:
     cache_max_bytes: int | None = field(default=None, metadata=_meta(
         "LRU size cap for cache_dir in bytes (oldest-used entries evicted; "
         "default: unbounded)", type_=int, flag="--cache-max-bytes"))
+    # Fault tolerance (DESIGN.md §14). Like every other ExecSpec knob,
+    # none of these change per-point results: retried/speculated/re-dealt
+    # units recompute identical bytes, so they stay hash-excluded.
+    max_retries: int = field(default=2, metadata=_meta(
+        "transient-failure re-attempts per work unit before quarantine "
+        "(exponential backoff + deterministic jitter)", type_=int))
+    retry_backoff_s: float = field(default=0.05, metadata=_meta(
+        "base backoff between work-unit retries (doubles per attempt)",
+        type_=float))
+    speculate: bool = field(default=True, metadata=_meta(
+        "re-dispatch straggling window loads (first result wins; safe — "
+        "launches are bitwise-identical by construction)", type_=bool))
+    straggler_grace_s: float = field(default=1.0, metadata=_meta(
+        "absolute floor below which a load is never flagged as straggling",
+        type_=float))
+    degraded_mode: bool = field(default=True, metadata=_meta(
+        "complete runs despite unrecoverable units: quarantine them "
+        "(type_idx=-1) and emit a failed-unit manifest instead of aborting",
+        type_=bool))
+    fault_plan: str | None = field(default=None, metadata=_meta(
+        "JSON FaultPlan file for deterministic fault injection (chaos "
+        "testing; runtime.faults)", type_=str, flag="--fault-plan"))
 
     def __post_init__(self):
         if self.cache_max_bytes is not None and self.cache_max_bytes <= 0:
@@ -355,6 +377,17 @@ class ExecSpec:
                     f"execution.slices must be non-empty non-negative ints, got {ts}")
         if self.resume and self.out_dir is None:
             raise ValueError("execution.resume requires execution.out_dir")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"execution.max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"execution.retry_backoff_s must be >= 0, "
+                f"got {self.retry_backoff_s}")
+        if self.straggler_grace_s < 0:
+            raise ValueError(
+                f"execution.straggler_grace_s must be >= 0, "
+                f"got {self.straggler_grace_s}")
 
 
 @dataclass(frozen=True)
@@ -379,6 +412,19 @@ class ServeSpec:
     window_cache_entries: int = field(default=256, metadata=_meta(
         "in-memory hot-window LRU entries held by the server (0 disables)",
         type_=int, flag="--serve-window-cache-entries"))
+    # Fault tolerance (DESIGN.md §14): deadlines, launch retry, shedding.
+    request_deadline_s: float | None = field(default=None, metadata=_meta(
+        "fail a request's future with TimeoutError if not answered within "
+        "this many seconds of submit (default: no deadline)",
+        type_=float, flag="--serve-deadline-s"))
+    max_queue_depth: int = field(default=0, metadata=_meta(
+        "reject submits (ServerOverloadedError) once this many requests "
+        "are pending — load shedding with backpressure (0 = unbounded)",
+        type_=int, flag="--serve-max-queue-depth"))
+    retry_transient: int = field(default=2, metadata=_meta(
+        "transient launch-failure re-attempts per batch chunk; exhaustion "
+        "fails only the affected windows' futures, not the server",
+        type_=int, flag="--serve-retries"))
 
     def __post_init__(self):
         if not self.tick_seconds >= 0:
@@ -392,6 +438,18 @@ class ServeSpec:
             raise ValueError(
                 f"serve.window_cache_entries must be >= 0, "
                 f"got {self.window_cache_entries}")
+        if self.request_deadline_s is not None and not self.request_deadline_s > 0:
+            raise ValueError(
+                f"serve.request_deadline_s must be > 0 (or null), "
+                f"got {self.request_deadline_s}")
+        if self.max_queue_depth < 0:
+            raise ValueError(
+                f"serve.max_queue_depth must be >= 0, "
+                f"got {self.max_queue_depth}")
+        if self.retry_transient < 0:
+            raise ValueError(
+                f"serve.retry_transient must be >= 0, "
+                f"got {self.retry_transient}")
 
 
 _GROUPS: tuple[tuple[str, type, str], ...] = (
@@ -506,6 +564,11 @@ class PipelineSpec:
             prefetch=self.execution.prefetch,
             prefetch_depth=self.execution.prefetch_depth,
             async_persist=self.execution.async_persist,
+            max_retries=self.execution.max_retries,
+            retry_backoff_s=self.execution.retry_backoff_s,
+            speculate=self.execution.speculate,
+            straggler_grace_s=self.execution.straggler_grace_s,
+            degraded_mode=self.execution.degraded_mode,
         )
 
 
@@ -564,6 +627,11 @@ def spec_from_config(
             prefetch=ec.prefetch,
             prefetch_depth=ec.prefetch_depth,
             async_persist=ec.async_persist,
+            max_retries=ec.max_retries,
+            retry_backoff_s=ec.retry_backoff_s,
+            speculate=ec.speculate,
+            straggler_grace_s=ec.straggler_grace_s,
+            degraded_mode=ec.degraded_mode,
         ),
     )
 

@@ -34,11 +34,13 @@ multi-slice entry point is ``run`` on a ``regions.Plan``, which
 from __future__ import annotations
 
 import functools
+import hashlib
 import json
 import queue
 import threading
 import time
 import warnings
+from concurrent import futures
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, NamedTuple
@@ -53,8 +55,9 @@ from repro.core import grouping as grp
 from repro.core import ml_predict as mlp
 from repro.core import regions
 from repro.core.reuse import ReuseCache
-from repro.data.loader import WindowPrefetcher
-from repro.runtime.monitor import StepMonitor
+from repro.data.loader import PrefetchError, WindowPrefetcher
+from repro.runtime.faults import ShardLostError, is_transient
+from repro.runtime.monitor import StepMonitor, StragglerPolicy
 
 METHODS = (
     "baseline", "grouping", "reuse", "ml", "grouping_ml", "reuse_ml",
@@ -178,17 +181,47 @@ class PDFConfig:
 
 @dataclass(frozen=True)
 class ExecutorConfig:
-    """Staging knobs; ``prefetch=False, async_persist=False`` reproduces the
-    pre-executor strictly serial loop (the reference path for equivalence
-    tests and overlap benchmarks)."""
+    """Staging + fault-tolerance knobs; ``prefetch=False,
+    async_persist=False`` reproduces the pre-executor strictly serial loop
+    (the reference path for equivalence tests and overlap benchmarks).
+
+    None of these change per-point results — the bitwise-equivalence
+    contract: a retried, speculated, or re-dealt work unit recomputes the
+    exact bytes the first attempt would have produced (loads are
+    deterministic, fits are row-pure), which is precisely what makes
+    first-result-wins and re-dealing safe (DESIGN.md §14)."""
 
     prefetch: bool = True
     prefetch_depth: int = 2  # how many windows the load stage may run ahead
     async_persist: bool = True
+    # Work-unit retry: how many *re*-attempts a transiently failing unit
+    # gets (so max_retries + 1 attempts total) before it is quarantined
+    # (degraded_mode=True) or the run aborts (False). Backoff is
+    # exponential (retry_backoff_s * 2^attempt) with a deterministic
+    # per-(unit, attempt) jitter.
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    # Straggler speculation: when a window load exceeds
+    # max(threshold x trailing-median, straggler_grace_s), re-dispatch an
+    # identical load and take whichever finishes first.
+    speculate: bool = True
+    straggler_grace_s: float = 1.0
+    # Degraded completion: quarantine units that exhaust their retries
+    # (type_idx = -1, failed-unit manifest next to the watermark) instead
+    # of aborting the run.
+    degraded_mode: bool = True
 
     def __post_init__(self):
         if self.prefetch_depth < 1:
             raise ValueError(f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}")
+        if self.straggler_grace_s < 0:
+            raise ValueError(
+                f"straggler_grace_s must be >= 0, got {self.straggler_grace_s}")
 
 
 class WindowStats(NamedTuple):
@@ -221,6 +254,20 @@ class SliceResult:
     # (api/cache.py) instead of being computed; cached results are bitwise
     # identical to computed ones but carry no window stats.
     cached: bool = False
+    # Fault-tolerance bookkeeping (DESIGN.md §14): transient re-attempts,
+    # speculative re-dispatches, and the quarantined windows of a degraded
+    # run — each a dict with unit_id/line_start/line_end/attempts/error,
+    # mirrored in the slice's failed-unit manifest on disk. A quarantined
+    # window's points carry type_idx = -1 and zero params/moments.
+    retries: int = 0
+    speculations: int = 0
+    quarantined: tuple = ()
+
+    @property
+    def degraded(self) -> bool:
+        """True when any work unit was quarantined — the result is complete
+        for every other window but NOT cacheable as the slice's answer."""
+        return len(self.quarantined) > 0
 
     def features(self, types) -> "object":
         """§5.4 slice features (SliceFeatures) from this result: average
@@ -265,6 +312,11 @@ class ExecutorReport:
     wait_seconds: float
     compute_seconds: float
     persist_seconds: float
+    # Fault-tolerance totals across the run's slices (DESIGN.md §14).
+    retries: int = 0
+    speculations: int = 0
+    speculation_wins: int = 0
+    quarantined: int = 0
 
     @property
     def load_hidden_seconds(self) -> float:
@@ -409,6 +461,21 @@ class _StagedWindow(NamedTuple):
     load_seconds: float
 
 
+class _FailedUnit(NamedTuple):
+    """Load/compute-stage output for a unit that exhausted its retries in
+    degraded mode: flows down the same stream as ``_StagedWindow`` (raising
+    from the prefetch thread would kill the whole stream) and is quarantined
+    by the run loop instead of computed."""
+
+    unit: regions.WorkUnit
+    error: str
+    attempts: int
+
+
+def _errstr(e: BaseException) -> str:
+    return f"{type(e).__name__}: {e}"
+
+
 # The per-point result arrays of a SliceResult, in persisted/cached order —
 # the one canonical list (persist stage, ResultCache, benchmarks and the
 # bitwise-equality tests all import it; a new field added here is
@@ -448,12 +515,15 @@ class PersistStage:
 
     def __init__(self, out_dir: str | Path | None, async_writes: bool = True,
                  monitor: StepMonitor | None = None,
-                 spec_hash: str | None = None):
+                 spec_hash: str | None = None,
+                 injector=None):
         self.out_dir = Path(out_dir) if out_dir else None
         self.monitor = monitor
         self.spec_hash = spec_hash  # stamped into every .npz + watermark
+        self.injector = injector  # faults.FaultInjector (on_persist hook)
         self.seconds = 0.0
         self.writes = 0
+        self.retries = 0  # transient write failures absorbed in _write
         self._error: BaseException | None = None
         self._async = bool(async_writes and self.out_dir is not None)
         if self._async:
@@ -494,6 +564,34 @@ class PersistStage:
         t0 = time.perf_counter()
         if self.monitor is not None:
             self.monitor.start(uid, now=t0)
+        try:
+            # Transient write failures (an NFS hiccup mid-savez, or the
+            # injector's persist_error) get two quiet re-attempts — a
+            # partially-written .npz is simply overwritten, and the
+            # watermark only advances after a successful write.
+            for attempt in range(3):
+                try:
+                    if self.injector is not None:
+                        self.injector.on_persist(slice_i, w.line_start)
+                    self._write_once(slice_i, w, arrays)
+                    break
+                except OSError:
+                    if attempt == 2:
+                        raise
+                    self.retries += 1
+                    time.sleep(0.01 * (attempt + 1))
+        except BaseException:
+            if self.monitor is not None:
+                self.monitor.abandon(uid)
+            raise
+        t1 = time.perf_counter()
+        if self.monitor is not None:
+            self.monitor.finish(uid, now=t1)
+        self.seconds += t1 - t0
+        self.writes += 1
+
+    def _write_once(self, slice_i: int, w: regions.Window,
+                    arrays: dict[str, np.ndarray]):
         self.out_dir.mkdir(parents=True, exist_ok=True)
         extra = {"spec_hash": self.spec_hash} if self.spec_hash else {}
         np.savez(
@@ -503,11 +601,6 @@ class PersistStage:
         (self.out_dir / f"slice{slice_i}_watermark.json").write_text(
             json.dumps({"next_line": int(w.line_end), **extra})
         )
-        t1 = time.perf_counter()
-        if self.monitor is not None:
-            self.monitor.finish(uid, now=t1)
-        self.seconds += t1 - t0
-        self.writes += 1
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -562,6 +655,41 @@ class PersistStage:
                 for name in _FIELDS:
                     outs[name][lo:hi] = z[name]
 
+    # -- degraded mode: the failed-unit manifest -------------------------------
+
+    def failed_manifest_path(self, slice_i: int) -> Path:
+        return self.out_dir / f"slice{slice_i}_failed_units.json"
+
+    def write_failed_manifest(self, slice_i: int, entries: list[dict]):
+        """Record a degraded slice's quarantined units next to its watermark
+        — the completion contract of degraded mode (DESIGN.md §14): the run
+        *finished*, and this file says exactly which windows it finished
+        without. An empty entry list deletes the manifest (the slice was
+        repaired, e.g. by a resume that re-ran the quarantined units)."""
+        if self.out_dir is None:
+            return
+        f = self.failed_manifest_path(slice_i)
+        if not entries:
+            f.unlink(missing_ok=True)
+            return
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+        f.write_text(json.dumps(
+            {"spec_hash": self.spec_hash, "slice": slice_i, "failed": entries},
+            indent=1,
+        ))
+
+    def failed_lines(self, slice_i: int) -> set[int]:
+        """line_start of every quarantined unit recorded for the slice —
+        resume re-runs these even below the watermark (their .npz was never
+        written, so the watermark alone cannot see the hole)."""
+        if self.out_dir is None:
+            return set()
+        f = self.failed_manifest_path(slice_i)
+        if not f.exists():
+            return set()
+        return {int(e["line_start"])
+                for e in json.loads(f.read_text()).get("failed", ())}
+
 
 class StagedExecutor:
     """Drives Algorithms 1-2 over a Plan of (slice, window) work units.
@@ -582,6 +710,7 @@ class StagedExecutor:
         sharding: jax.sharding.Sharding | None = None,
         exec_config: ExecutorConfig | None = None,
         spec_hash: str | None = None,
+        injector=None,
     ):
         self.config = config
         self.data = data_source
@@ -590,6 +719,7 @@ class StagedExecutor:
         self.sharding = sharding
         self.exec_config = exec_config or ExecutorConfig()
         self.spec_hash = spec_hash  # provenance stamp (api/spec.py hash)
+        self.injector = injector  # faults.FaultInjector (persist-path hook)
         self.cache = ReuseCache()
         if ("ml" in config.method or config.method == "sampling") and tree is None:
             raise ValueError(f"method {config.method!r} requires a decision tree")
@@ -607,15 +737,25 @@ class StagedExecutor:
         )
         self._key_buf: np.ndarray | None = None  # cached (P, 2) quantize buffer
         self._tree_arrays = tree.as_device() if tree else None
-        # One StepMonitor per stage: medians/straggler flags per stage, each
-        # touched by exactly one thread (load -> prefetch thread, compute ->
-        # caller thread, persist -> writer thread).
+        # One StepMonitor per stage: medians/straggler flags per stage. The
+        # load monitor's grace floor is configurable so chaos tests can
+        # exercise speculation without second-long stalls; under
+        # speculation the load monitor sees one start/finish per *attempt*
+        # (deque/dict ops are GIL-atomic, failed attempts are abandoned so
+        # they never enter the straggler median).
         self.monitors = {
-            "load": StepMonitor(),
+            "load": StepMonitor(StragglerPolicy(
+                grace_seconds=self.exec_config.straggler_grace_s)),
             "compute": StepMonitor(),
             "persist": StepMonitor(),
         }
         self.last_report: ExecutorReport | None = None
+        # Per-run fault bookkeeping: {slice -> counter dict} + quarantined
+        # unit records, reset by run(); the lock covers prefetch-thread vs
+        # compute-thread increments.
+        self._fault_lock = threading.Lock()
+        self._fault_counts: dict[int, dict[str, int]] = {}
+        self._spec_pool: futures.ThreadPoolExecutor | None = None
 
     # -- load stage -----------------------------------------------------------
 
@@ -625,18 +765,120 @@ class StagedExecutor:
             arr = jax.device_put(arr, self.sharding)
         return arr
 
-    def _load_unit(self, unit: regions.WorkUnit) -> _StagedWindow:
+    def _load_unit(self, unit: regions.WorkUnit,
+                   uid: str | None = None) -> _StagedWindow:
         """Load + H2D-stage one window (host work only — device kernels stay
         on the compute stage); runs on the prefetch thread when prefetch is
-        enabled."""
+        enabled, or on speculation-pool threads under re-dispatch. ``uid``
+        distinguishes attempts of the same unit in the load monitor; failed
+        attempts are abandoned (no duration recorded) so an injected stall
+        cannot poison the straggler median."""
         mon = self.monitors["load"]
+        uid = uid or unit.unit_id
         t0 = time.perf_counter()
-        mon.start(unit.unit_id, now=t0)
-        raw = self.data.load_window(unit.window)  # (P, n_obs)
-        values = self._stage(raw)
+        mon.start(uid, now=t0)
+        try:
+            raw = self.data.load_window(unit.window)  # (P, n_obs)
+            values = self._stage(raw)
+        except BaseException:
+            mon.abandon(uid)
+            raise
         t1 = time.perf_counter()
-        mon.finish(unit.unit_id, now=t1)
+        mon.finish(uid, now=t1)
         return _StagedWindow(unit, values, t1 - t0)
+
+    # -- fault tolerance: retry, speculation, quarantine (DESIGN.md §14) -------
+
+    def _note_fault(self, slice_i: int, key: str, n: int = 1):
+        with self._fault_lock:
+            c = self._fault_counts.setdefault(
+                slice_i,
+                {"retries": 0, "speculations": 0, "speculation_wins": 0},
+            )
+            c[key] += n
+
+    def _backoff(self, unit: regions.WorkUnit, attempt: int) -> float:
+        """Exponential backoff with *deterministic* jitter: hashed from
+        (unit, attempt) so a re-run backs off identically — randomness
+        would be the one nondeterminism in an otherwise replayable failure
+        path. Jitter in [0.5x, 1.5x) still de-correlates units that failed
+        together (the thundering-herd concern jitter exists for)."""
+        h = hashlib.sha256(f"{unit.unit_id}:{attempt}".encode()).digest()
+        jitter = 0.5 + h[0] / 256.0
+        return self.exec_config.retry_backoff_s * (2 ** attempt) * jitter
+
+    def _pool(self) -> futures.ThreadPoolExecutor:
+        # 4 workers: a straggling loser may still occupy one while the next
+        # unit's primary + speculative pair runs — 2 would deadlock behind it.
+        if self._spec_pool is None:
+            self._spec_pool = futures.ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="load-spec")
+        return self._spec_pool
+
+    def _load_speculative(self, unit: regions.WorkUnit,
+                          uid: str) -> _StagedWindow:
+        """One load attempt with straggler speculation: if the primary load
+        exceeds max(threshold x trailing-median, grace), dispatch a
+        bitwise-identical second load and take whichever finishes first
+        (the Spark speculative-execution contract — safe because loads are
+        deterministic and fits row-pure, so winner identity cannot change
+        the result's bytes). Below ``min_samples`` completed loads there is
+        no median and the attempt runs inline."""
+        mon = self.monitors["load"]
+        med = mon.median()
+        if med is None:
+            return self._load_unit(unit, uid=uid)
+        pol = mon.policy
+        limit = max(pol.threshold * med, pol.grace_seconds)
+        pool = self._pool()
+        primary = pool.submit(self._load_unit, unit, uid)
+        done, _ = futures.wait([primary], timeout=limit)
+        if primary in done:
+            return primary.result()  # raises the load's own error if it failed
+
+        # Straggler: re-dispatch. First *success* wins; the loser runs to
+        # completion in the pool (its duration is a real completed load, so
+        # letting it report is correct) and its staged buffer is dropped.
+        self._note_fault(unit.window.slice_i, "speculations")
+        if uid not in mon.flagged:
+            mon.flagged.append(uid)
+        spec = pool.submit(self._load_unit, unit, f"{uid}#spec")
+        pending = {primary, spec}
+        while pending:
+            done, pending = futures.wait(
+                pending, return_when=futures.FIRST_COMPLETED)
+            for f in done:
+                if f.exception() is None:
+                    if f is spec:
+                        self._note_fault(
+                            unit.window.slice_i, "speculation_wins")
+                    return f.result()
+        raise primary.exception()  # both attempts failed
+
+    def _load_guarded(self, unit: regions.WorkUnit):
+        """The load stage's retry wrapper (the prefetcher's stage_fn):
+        transient failures back off and re-attempt up to ``max_retries``
+        times; exhaustion returns a ``_FailedUnit`` sentinel — raising here
+        would kill the whole prefetch stream, and would reach the consumer
+        wrapped in an opaque ``PrefetchError``. The run loop turns the
+        sentinel into quarantine (degraded mode) or a clean per-unit error.
+        Fatal errors — including ``ShardLostError`` — always raise."""
+        ec = self.exec_config
+        last: BaseException | None = None
+        for attempt in range(ec.max_retries + 1):
+            uid = unit.unit_id if attempt == 0 else f"{unit.unit_id}#r{attempt}"
+            try:
+                if ec.speculate:
+                    return self._load_speculative(unit, uid)
+                return self._load_unit(unit, uid=uid)
+            except Exception as e:  # noqa: BLE001 — classified below
+                if not is_transient(e):
+                    raise
+                last = e
+                if attempt < ec.max_retries:
+                    self._note_fault(unit.window.slice_i, "retries")
+                    time.sleep(self._backoff(unit, attempt))
+        return _FailedUnit(unit, _errstr(last), ec.max_retries + 1)
 
     # -- compute stage: ComputePDF&Error dispatch per method -------------------
 
@@ -890,6 +1132,7 @@ class StagedExecutor:
             async_writes=self.exec_config.async_persist,
             monitor=self.monitors["persist"],
             spec_hash=self.spec_hash,
+            injector=self.injector,
         )
 
         outs = {
@@ -912,64 +1155,67 @@ class StagedExecutor:
             for s, info in infos.items():
                 persist.check_resume_hash(s, info)
             marks = {s: int(info["next_line"]) for s, info in infos.items()}
+            # Units a previous degraded run quarantined sit *below* the
+            # watermark with no persisted .npz — the failed-unit manifest
+            # is what re-includes them, so a fault-free resume repairs the
+            # hole (and clears the manifest below).
+            failed_prev = {s: persist.failed_lines(s) for s in requested}
             for s, mark in marks.items():
                 if mark > 0:
                     persist.restore_windows(s, mark, ppl, outs[s])
-            units = [u for u in units if u.window.line_start >= marks[u.window.slice_i]]
+            units = [
+                u for u in units
+                if u.window.line_start >= marks[u.window.slice_i]
+                or u.window.line_start in failed_prev[u.window.slice_i]
+            ]
 
+        self._fault_counts = {}
+        quarantined: dict[int, list[dict]] = {s: [] for s in requested}
         load_total = wait_total = compute_total = 0.0
         wall0 = time.perf_counter()
         prefetcher = None
         if self.exec_config.prefetch and units:
             prefetcher = WindowPrefetcher(
-                units, self._load_unit, depth=self.exec_config.prefetch_depth
+                units, self._load_guarded, depth=self.exec_config.prefetch_depth
             )
             stream = iter(prefetcher)
         else:
-            stream = (self._load_unit(u) for u in units)
+            stream = (self._load_guarded(u) for u in units)
 
-        cmon = self.monitors["compute"]
         try:
             while True:
                 w0 = time.perf_counter()
-                item = next(stream, None)
+                try:
+                    item = next(stream, None)
+                except PrefetchError as pe:
+                    # Shard death must surface as itself: the scheduler's
+                    # re-deal catches ShardLostError, not the prefetch
+                    # wrapper it crossed the thread boundary in.
+                    if isinstance(pe.__cause__, ShardLostError):
+                        raise pe.__cause__
+                    raise
                 if item is None:
                     break
                 # wait_s: the only load-stage time the device was blocked on
                 # (serial mode does the whole load inline here, so wait ==
                 # load by construction; with prefetch it is the shortfall).
                 wait_s = time.perf_counter() - w0
-                w = item.unit.window
-                values = item.values
-                total_points = values.shape[0]
-                sample_idx = None
-                if (self.config.method == "sampling"
-                        and self.config.sampler == "random"):
-                    # §5.4's entire point: only the sampled fraction is
-                    # touched — subset the window on device *before* the
-                    # moments pass, so per-window device work (and the
-                    # figure-15 cost curve) scales with the rate. k-means
-                    # keeps the full pass: it clusters on every point's
-                    # (mu, sigma) by construction.
-                    sample_idx = self._draw_sample(total_points, w)
-                    values = values[jnp.asarray(sample_idx)]
-                moments = jax.block_until_ready(self._moments(values))
-                t1 = time.perf_counter()
 
-                cmon.start(item.unit.unit_id, now=t1)
-                t, p, e, fitted, hits = self._select_and_fit(
-                    values, dists.Moments(*moments), w,
-                    sample_idx=sample_idx, total_points=total_points,
-                )
-                t2 = time.perf_counter()
-                cmon.finish(item.unit.unit_id, now=t2)
+                if not isinstance(item, _FailedUnit):
+                    item = self._compute_with_retry(item)
+                if isinstance(item, _FailedUnit):
+                    if not self.exec_config.degraded_mode:
+                        raise RuntimeError(
+                            f"work unit {item.unit.unit_id} failed after "
+                            f"{item.attempts} attempts: {item.error}")
+                    self._quarantine(item, outs, ppl, quarantined)
+                    continue
 
+                (w, t, p, e, mom_np, sample_idx, fitted, hits,
+                 comp_s, _load_s) = item
                 o = outs[w.slice_i]
                 lo, hi = w.line_start * ppl, w.line_end * ppl
                 o["type_idx"][lo:hi], o["params"][lo:hi], o["error"][lo:hi] = t, p, e
-                mom_np = (np.asarray(moments[0]),
-                          np.sqrt(np.maximum(np.asarray(moments[1]), 0)),
-                          np.asarray(moments[2]), np.asarray(moments[3]))
                 if sample_idx is None:
                     for name, col in zip(("mean", "std", "skew", "kurt"), mom_np):
                         o[name][lo:hi] = col
@@ -980,11 +1226,11 @@ class StagedExecutor:
                         o[name][lo:hi][sample_idx] = col
 
                 ws = WindowStats(w, hi - lo, fitted, item.load_seconds,
-                                 t2 - t1, hits, wait_s)
+                                 comp_s, hits, wait_s)
                 stats[w.slice_i].append(ws)
                 load_total += item.load_seconds
                 wait_total += wait_s
-                compute_total += t2 - t1
+                compute_total += comp_s
 
                 persist.submit(
                     w.slice_i, w, {name: o[name][lo:hi] for name in _FIELDS}
@@ -995,9 +1241,16 @@ class StagedExecutor:
             if prefetcher is not None:
                 prefetcher.close()
             persist.close()  # flushes: the watermark is durable before any re-raise
+            if self._spec_pool is not None:
+                self._spec_pool.shutdown(wait=False, cancel_futures=True)
+                self._spec_pool = None
 
         persist.raise_if_failed()
+        if self.out_dir is not None:
+            for s in requested:
+                persist.write_failed_manifest(s, quarantined[s])
         wall = time.perf_counter() - wall0
+        counts = self._fault_counts
         self.last_report = ExecutorReport(
             wall_seconds=wall,
             units=sum(len(v) for v in stats.values()),
@@ -1005,19 +1258,126 @@ class StagedExecutor:
             wait_seconds=wait_total,
             compute_seconds=compute_total,
             persist_seconds=persist.seconds,
+            retries=sum(c["retries"] for c in counts.values()),
+            speculations=sum(c["speculations"] for c in counts.values()),
+            speculation_wins=sum(
+                c["speculation_wins"] for c in counts.values()),
+            quarantined=sum(len(v) for v in quarantined.values()),
         )
 
         results: dict[int, SliceResult] = {}
         for s in requested:
             o = outs[s]
             avg_err = float(o["error"].mean())
+            c = counts.get(s, {})
             r = SliceResult(o["type_idx"], o["params"], o["error"], o["mean"],
                             o["std"], o["skew"], o["kurt"], avg_err, stats[s],
-                            slice_i=s, spec_hash=self.spec_hash)
+                            slice_i=s, spec_hash=self.spec_hash,
+                            retries=c.get("retries", 0),
+                            speculations=c.get("speculations", 0),
+                            quarantined=tuple(quarantined[s]))
             if self.config.error_bound is not None:
                 r.error_bound_satisfied = avg_err <= self.config.error_bound
             results[s] = r
         return results
+
+    class _ComputedWindow(NamedTuple):
+        """One computed window: everything the run loop scatters/persists."""
+
+        window: regions.Window
+        type_idx: np.ndarray
+        params: np.ndarray
+        error: np.ndarray
+        mom_np: tuple
+        sample_idx: np.ndarray | None
+        fitted: int
+        cache_hits: int
+        compute_seconds: float
+        load_seconds: float = 0.0
+
+    def _compute_window(self, item: _StagedWindow,
+                        attempt: int = 0) -> "_ComputedWindow":
+        """The compute-stage body for one staged window (moments + Select &
+        fit) — factored out of the run loop so it can be retried as a unit."""
+        cmon = self.monitors["compute"]
+        unit = item.unit
+        w = unit.window
+        uid = unit.unit_id if attempt == 0 else f"{unit.unit_id}#c{attempt}"
+        values = item.values
+        total_points = values.shape[0]
+        sample_idx = None
+        if (self.config.method == "sampling"
+                and self.config.sampler == "random"):
+            # §5.4's entire point: only the sampled fraction is touched —
+            # subset the window on device *before* the moments pass, so
+            # per-window device work (and the figure-15 cost curve) scales
+            # with the rate. k-means keeps the full pass: it clusters on
+            # every point's (mu, sigma) by construction.
+            sample_idx = self._draw_sample(total_points, w)
+            values = values[jnp.asarray(sample_idx)]
+        moments = jax.block_until_ready(self._moments(values))
+        t1 = time.perf_counter()
+        cmon.start(uid, now=t1)
+        try:
+            t, p, e, fitted, hits = self._select_and_fit(
+                values, dists.Moments(*moments), w,
+                sample_idx=sample_idx, total_points=total_points,
+            )
+        except BaseException:
+            cmon.abandon(uid)
+            raise
+        t2 = time.perf_counter()
+        cmon.finish(uid, now=t2)
+        mom_np = (np.asarray(moments[0]),
+                  np.sqrt(np.maximum(np.asarray(moments[1]), 0)),
+                  np.asarray(moments[2]), np.asarray(moments[3]))
+        return self._ComputedWindow(w, t, p, e, mom_np, sample_idx, fitted,
+                                    hits, t2 - t1, item.load_seconds)
+
+    def _compute_with_retry(self, item: _StagedWindow):
+        """Compute one staged window, retrying transient failures with a
+        *fresh load* each time — the fit executables donate the staged
+        buffer, so after any fit dispatch the old device array must be
+        treated as consumed. Returns a ``_ComputedWindow``, or a
+        ``_FailedUnit`` after exhaustion (the run loop quarantines it in
+        degraded mode, or raises a per-unit error outside it)."""
+        ec = self.exec_config
+        unit = item.unit
+        last: BaseException | None = None
+        for attempt in range(ec.max_retries + 1):
+            try:
+                if item is None:
+                    item = self._load_unit(unit, uid=f"{unit.unit_id}#c{attempt}")
+                return self._compute_window(item, attempt)
+            except Exception as e:  # noqa: BLE001 — classified below
+                if not is_transient(e):
+                    raise
+                last = e
+                item = None  # possibly-donated buffer: reload next attempt
+                if attempt < ec.max_retries:
+                    self._note_fault(unit.window.slice_i, "retries")
+                    time.sleep(self._backoff(unit, attempt))
+        return _FailedUnit(unit, _errstr(last), ec.max_retries + 1)
+
+    def _quarantine(self, failed: _FailedUnit, outs: dict, ppl: int,
+                    quarantined: dict[int, list[dict]]):
+        """Degraded mode's terminal state for a unit: its points carry
+        ``type_idx = -1`` (the established unclassified marker) and zero
+        params/moments, nothing is persisted for the window (the manifest —
+        not a fabricated .npz — records the hole), and the run continues."""
+        w = failed.unit.window
+        o = outs[w.slice_i]
+        lo, hi = w.line_start * ppl, w.line_end * ppl
+        o["type_idx"][lo:hi] = -1
+        for name in ("params", "error", "mean", "std", "skew", "kurt"):
+            o[name][lo:hi] = 0
+        quarantined[w.slice_i].append({
+            "unit_id": failed.unit.unit_id,
+            "line_start": int(w.line_start),
+            "line_end": int(w.line_end),
+            "attempts": int(failed.attempts),
+            "error": failed.error,
+        })
 
     def run_slice(
         self,

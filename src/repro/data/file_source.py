@@ -39,6 +39,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 from collections import OrderedDict
 from pathlib import Path
 from typing import Callable
@@ -199,10 +200,22 @@ class FileCubeSource:
     fresh array — the copy forces the actual page-in, so a wrapping
     ``ThrottledSource`` times real bytes moved, and the buffer handed to the
     prefetcher is safe to donate.
+
+    ``enable_read_verification()`` arms *verified reads*: every chunk a
+    window touches is fully loaded (no memmap) and re-hashed against the
+    manifest, with ONE automatic re-read on mismatch before raising — a torn
+    read over NFS (reader racing a copy, transient bit flip in transit)
+    recovers transparently; persistent corruption raises with the chunk path
+    and attempt count (DESIGN.md §14). ``verify()`` uses the same re-read
+    policy. ``read_hook`` is the chaos-testing seam ``runtime.faults`` uses
+    to corrupt chunk bytes deterministically in tests.
     """
 
-    def __init__(self, path: str | Path):
+    def __init__(self, path: str | Path, verify_reads: bool = False,
+                 read_hook: Callable | None = None):
         self.path = Path(path)
+        self.verify_reads = bool(verify_reads)
+        self.read_hook = read_hook
         self.manifest = read_manifest(self.path)
         m = self.manifest
         self.geometry = CubeGeometry(
@@ -230,12 +243,26 @@ class FileCubeSource:
                     f"chunks tile lines [0, {line}) of "
                     f"[0, {self.geometry.lines_per_slice})")
         self._mmaps: OrderedDict[str, np.ndarray] = OrderedDict()
+        # Speculative re-dispatch (core.executor) can read two windows of
+        # one source from two threads; the LRU mutations must not race.
+        self._mmap_lock = threading.Lock()
+
+    def enable_read_verification(self, read_hook: Callable | None = None):
+        """Arm verified (full-load + sha256 + one re-read) window reads; see
+        the class docstring. ``read_hook(slice_i, line_start, arr, attempt)
+        -> arr`` intercepts each freshly read chunk — the fault-injection
+        seam. Returns ``self`` for chaining."""
+        self.verify_reads = True
+        if read_hook is not None:
+            self.read_hook = read_hook
+        return self
 
     def _mmap(self, entry: dict) -> np.ndarray:
         name = entry["file"]
-        if name in self._mmaps:
-            self._mmaps.move_to_end(name)
-            return self._mmaps[name]
+        with self._mmap_lock:
+            if name in self._mmaps:
+                self._mmaps.move_to_end(name)
+                return self._mmaps[name]
         arr = np.load(self.path / name, mmap_mode="r")
         expect = (entry["line_end"] - entry["line_start"],
                   self.geometry.points_per_line, self.num_observations)
@@ -243,10 +270,34 @@ class FileCubeSource:
             raise ValueError(
                 f"cube chunk {name}: shape {arr.shape} dtype {arr.dtype} "
                 f"does not match manifest ({expect}, float32)")
-        self._mmaps[name] = arr
-        if len(self._mmaps) > _MMAP_CACHE_SIZE:
-            self._mmaps.popitem(last=False)
+        with self._mmap_lock:
+            self._mmaps[name] = arr
+            if len(self._mmaps) > _MMAP_CACHE_SIZE:
+                self._mmaps.popitem(last=False)
         return arr
+
+    def _read_chunk_verified(self, entry: dict) -> np.ndarray:
+        """Fully load one chunk and check its sha256 against the manifest.
+
+        A mismatch triggers exactly ONE re-read (the torn-read/transient
+        case self-heals); a second mismatch raises with the chunk path and
+        attempt count, so the operator knows retrying was already tried."""
+        name = entry["file"]
+        attempts = 0
+        while True:
+            attempts += 1
+            arr = np.load(self.path / name)
+            if self.read_hook is not None:
+                arr = self.read_hook(
+                    entry["slice"], entry["line_start"], arr, attempts)
+            got = _array_sha256(arr)
+            if got == entry["sha256"]:
+                return arr
+            if attempts >= 2:
+                raise ValueError(
+                    f"cube chunk {self.path / name} corrupt after "
+                    f"{attempts} read attempts: sha256 {got} != "
+                    f"manifest {entry['sha256']}")
 
     def load_window(self, w: Window) -> np.ndarray:
         geom = self.geometry
@@ -263,7 +314,8 @@ class FileCubeSource:
                 break
             lo = max(w.line_start, entry["line_start"])
             hi = min(w.line_end, entry["line_end"])
-            src = self._mmap(entry)
+            src = (self._read_chunk_verified(entry) if self.verify_reads
+                   else self._mmap(entry))
             out[lo - w.line_start : hi - w.line_start] = src[
                 lo - entry["line_start"] : hi - entry["line_start"]]
         return out.reshape(w.num_lines * geom.points_per_line,
@@ -271,14 +323,10 @@ class FileCubeSource:
 
     def verify(self) -> None:
         """Re-hash every chunk against the manifest; raises on the first
-        mismatch (bit rot, partial copy, or tampering)."""
+        *persistent* mismatch (bit rot, partial copy, or tampering) — each
+        chunk gets the standard one-re-read grace for torn reads."""
         for c in self.manifest["chunks"]:
-            arr = np.load(self.path / c["file"])
-            got = _array_sha256(arr)
-            if got != c["sha256"]:
-                raise ValueError(
-                    f"cube chunk {c['file']} corrupt: sha256 {got} != "
-                    f"manifest {c['sha256']}")
+            self._read_chunk_verified(c)
 
     def nominal_bytes(self) -> int:
         return (self.geometry.total_points * self.num_observations * 4)

@@ -72,6 +72,10 @@ def main():
         print(f"[slice {r.slice_i}] E={r.avg_error:.4f} windows={len(r.stats)} "
               f"fitted={sum(w.num_fitted for w in r.stats)}"
               f"/{session.geometry.points_per_slice}")
+        if r.degraded:
+            print(f"[degraded] slice {r.slice_i}: {len(r.quarantined)} "
+                  f"window(s) quarantined — see the failed-unit manifest "
+                  f"next to the watermark")
     wall = time.perf_counter() - t0
 
     rep = session.report()
@@ -88,6 +92,12 @@ def main():
     if spec.execution.cache_dir:
         print(f"[cache] hits={rep.cache_hits} misses={rep.cache_misses} "
               f"dir={spec.execution.cache_dir}")
+    if (rep.retries or rep.speculations or rep.quarantined_units
+            or rep.shards_lost or spec.execution.fault_plan):
+        print(f"[faults] retries={rep.retries} "
+              f"speculations={rep.speculations} "
+              f"quarantined={rep.quarantined_units} "
+              f"shards_lost={len(rep.shards_lost)}")
     if window_durations:
         med = sorted(window_durations)[len(window_durations) // 2]
         print(f"[total] wall={wall:.3f}s windows={rep.windows} "

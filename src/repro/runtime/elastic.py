@@ -1,17 +1,25 @@
-"""Elastic re-meshing plans: respond to node loss / scale-up by choosing a
-new mesh shape and re-sharding from the last checkpoint.
+"""Elastic plans: respond to node/shard loss by re-planning the work.
 
-The contract at 1000+ nodes: a failure shrinks the healthy device set; we
-pick the largest (data', model') grid that (a) fits the healthy count,
-(b) preserves the model-axis divisibility the arch needs, and (c) keeps the
-global batch by raising grad-accumulation. CheckpointManager.restore with
-the new mesh's shardings performs the actual re-layout (device_put handles
-arbitrary source->target resharding).
+Two granularities live here. ``plan_remesh`` is the training-style contract
+at 1000+ nodes: a failure shrinks the healthy device set; pick the largest
+(data', model') grid that fits it, preserve model-axis divisibility, keep
+the global batch via grad-accumulation, and let CheckpointManager.restore
+re-layout.
+
+``plan_redeal`` is the PDF pipeline's batch form of the same thing
+(DESIGN.md §14): slices are dealt round-robin over shards
+(``scheduler.assign_slices``), and whole slices are the unit of locality —
+so when a shard dies mid-run (``faults.ShardLostError``), its *unfinished
+slices* are simply re-dealt round-robin over the surviving shards. Safe by
+the same argument as retry/speculation: slices are independently
+recomputable, the watermark/resume machinery skips whatever the dead shard
+already persisted, and re-running a window yields bitwise-identical bytes.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 
 @dataclass(frozen=True)
@@ -55,3 +63,42 @@ def plan_remesh(
     if best is None:
         raise ValueError(f"no viable mesh for {healthy_devices} devices")
     return best
+
+
+@dataclass(frozen=True)
+class RedealPlan:
+    """Recovery plan for lost shards: which slices move where."""
+
+    lost_shards: tuple[int, ...]
+    healthy_shards: tuple[int, ...]
+    # slice -> healthy shard that takes it over, round-robin in slice order.
+    assignments: tuple[tuple[int, int], ...]
+
+    def slices_for(self, shard: int) -> tuple[int, ...]:
+        return tuple(s for s, sh in self.assignments if sh == shard)
+
+
+def plan_redeal(
+    pending_slices: Sequence[int],
+    healthy_shards: Sequence[int],
+    lost_shards: Sequence[int] = (),
+) -> RedealPlan:
+    """Re-deal a dead shard's unfinished slices over the healthy shards.
+
+    Round-robin in the given slice order, mirroring ``assign_slices`` — the
+    re-deal stays balanced to within one slice. Raises when no healthy
+    shard remains: with every worker dead there is no degraded mode, the
+    run must fail loudly."""
+    healthy = tuple(dict.fromkeys(healthy_shards))
+    if not healthy:
+        raise ValueError(
+            f"cannot re-deal slices {tuple(pending_slices)}: no healthy "
+            f"shards remain (lost: {tuple(lost_shards)})")
+    assignments = tuple(
+        (s, healthy[i % len(healthy)]) for i, s in enumerate(pending_slices)
+    )
+    return RedealPlan(
+        lost_shards=tuple(lost_shards),
+        healthy_shards=healthy,
+        assignments=assignments,
+    )

@@ -73,6 +73,14 @@ class StepMonitor:
         self.completed += 1
         return dur
 
+    def abandon(self, unit_id: str) -> None:
+        """Drop an inflight unit without recording a duration — for failed
+        or superseded attempts (a retry, a losing speculative launch). The
+        duration of an attempt that *didn't complete* must not enter the
+        straggler median: an injected 10s stall recorded as a sample would
+        triple the re-dispatch limit for every unit after it."""
+        self._inflight.pop(unit_id, None)
+
     @property
     def history(self) -> tuple[float, ...]:
         """Completed-unit durations (trailing ``HISTORY_LIMIT``), oldest

@@ -24,6 +24,8 @@ from dataclasses import dataclass
 from typing import Callable, Mapping, Sequence
 
 from repro.core import regions
+from repro.runtime import elastic
+from repro.runtime.faults import ShardLostError
 from repro.runtime.monitor import StepMonitor, StragglerPolicy
 
 
@@ -77,6 +79,8 @@ class SliceScheduler:
         self.shard_monitor = StepMonitor(policy or StragglerPolicy())
         self.window_monitor = StepMonitor(policy or StragglerPolicy())
         self.last_reports: dict[int, object] = {}
+        self.lost_shards: tuple[int, ...] = ()
+        self.last_redeal: elastic.RedealPlan | None = None
 
     def assignments(self, slices: Sequence[int]) -> tuple[ShardAssignment, ...]:
         return assign_slices(slices, self.num_shards)
@@ -104,32 +108,77 @@ class SliceScheduler:
         shard — on a cluster that is the per-node construction site; here it
         usually returns executors over the same data source. ``shard``
         restricts execution to one shard ("this node").
+
+        Shard loss (``ShardLostError`` escaping an executor run) is
+        survivable when other shards ran: the dead shard's *unfinished*
+        slices are re-dealt over the healthy shards via
+        ``elastic.plan_redeal`` and run there (with ``resume=True``, so
+        windows the dead shard already persisted are skipped). One level
+        only — a shard dying during its re-dealt work propagates.
         """
         results: dict[int, object] = {}
         self.last_reports = {}
+        self.last_redeal = None
+        lost: list[int] = []
+        pending: list[int] = []  # slices stranded on dead shards, in order
+        healthy: list[int] = []
         for a in self.assignments(slices):
             if shard is not None and a.shard != shard:
                 continue
             if not a.slices:
+                healthy.append(a.shard)
                 continue
-            ex = executor_factory(a.shard)
-            wl = window_lines if window_lines is not None else ex.config.window_lines
-            plan = regions.build_plan(ex.data.geometry, a.slices, wl)
-
-            def hook(ws):
-                uid = f"s{ws.window.slice_i}/l{ws.window.line_start:05d}"
-                self.window_monitor.start(uid, now=0.0)
-                self.window_monitor.finish(
-                    uid, now=ws.load_seconds + ws.compute_seconds
-                )
-                if on_window:
-                    on_window(ws)
-
-            sid = f"shard{a.shard}"
-            self.shard_monitor.start(sid)
             try:
-                results.update(ex.run(plan, resume=resume, on_window=hook))
-            finally:
-                self.shard_monitor.finish(sid)
-            self.last_reports[a.shard] = getattr(ex, "last_report", None)
+                results.update(self._run_shard(
+                    executor_factory, a.shard, a.slices, window_lines,
+                    resume, on_window,
+                ))
+                healthy.append(a.shard)
+            except ShardLostError:
+                lost.append(a.shard)
+                pending.extend(s for s in a.slices if s not in results)
+        if lost:
+            self.lost_shards = tuple(lost)
+            plan = elastic.plan_redeal(pending, healthy, lost)
+            self.last_redeal = plan
+            for h in plan.healthy_shards:
+                redealt = plan.slices_for(h)
+                if redealt:
+                    # resume=True: skip whatever the dead shard persisted
+                    # before dying (the watermark is the recovery line).
+                    results.update(self._run_shard(
+                        executor_factory, h, redealt, window_lines,
+                        True, on_window,
+                    ))
         return results
+
+    def _run_shard(
+        self,
+        executor_factory: Callable[[int], object],
+        shard: int,
+        shard_slices: Sequence[int],
+        window_lines: int | None,
+        resume: bool,
+        on_window: Callable | None,
+    ) -> Mapping[int, object]:
+        ex = executor_factory(shard)
+        wl = window_lines if window_lines is not None else ex.config.window_lines
+        plan = regions.build_plan(ex.data.geometry, shard_slices, wl)
+
+        def hook(ws):
+            uid = f"s{ws.window.slice_i}/l{ws.window.line_start:05d}"
+            self.window_monitor.start(uid, now=0.0)
+            self.window_monitor.finish(
+                uid, now=ws.load_seconds + ws.compute_seconds
+            )
+            if on_window:
+                on_window(ws)
+
+        sid = f"shard{shard}"
+        self.shard_monitor.start(sid)
+        try:
+            out = ex.run(plan, resume=resume, on_window=hook)
+        finally:
+            self.shard_monitor.finish(sid)
+        self.last_reports[shard] = getattr(ex, "last_report", None)
+        return out

@@ -19,6 +19,7 @@ from repro.serve.server import (
     PointQuery,
     QueryAnswer,
     RegionQuery,
+    ServerOverloadedError,
     ServerStats,
     WindowQuery,
 )
@@ -28,6 +29,7 @@ __all__ = [
     "PointQuery",
     "QueryAnswer",
     "RegionQuery",
+    "ServerOverloadedError",
     "ServerStats",
     "WindowQuery",
 ]

@@ -26,9 +26,18 @@ between those consumers and the warm machinery a ``PDFSession`` owns:
 
 The batching thread follows the offline-inference engine pattern the
 ROADMAP points at (batch slots + request queue + background thread that
-fails loudly): any exception fails the in-flight batch's futures, poisons
-the server, and re-raises — a wedged server is impossible to mistake for a
-slow one.
+fails loudly), refined by a transient/fatal split (DESIGN.md §14): a
+*transient* launch failure (``faults.is_transient`` — injected faults,
+OSError, timeouts) is retried up to ``serve.retry_transient`` times and,
+if still failing, fails ONLY the futures whose windows that launch
+covered — the server keeps serving everything else. Any *fatal* exception
+keeps the original behaviour: it fails the in-flight batch's futures,
+poisons the server, and re-raises — a wedged server is impossible to
+mistake for a slow one. Two more overload guards: ``serve.max_queue_depth``
+sheds submissions (``ServerOverloadedError``) once the queue gauge hits
+the cap, and ``serve.request_deadline_s`` expires requests that waited in
+the queue longer than their deadline (their futures get ``TimeoutError``
+before any compute is spent on them).
 
 **Coalescing-equivalence contract**: answers are bitwise-identical to
 running each query's windows through the executor serially
@@ -56,9 +65,16 @@ from repro.api.session import PDFSession
 from repro.api.spec import PipelineSpec
 from repro.core import regions
 from repro.core.executor import RESULT_FIELDS, SliceResult, WindowResult
+from repro.runtime.faults import is_transient
 from repro.runtime.monitor import StepMonitor, StragglerPolicy, percentiles
 
 _SHUTDOWN = object()
+
+
+class ServerOverloadedError(RuntimeError):
+    """Raised by ``submit`` when the queue gauge is at
+    ``serve.max_queue_depth``: load shedding — the caller should back off
+    and retry, the server is protecting its latency for admitted work."""
 
 
 # -- queries -------------------------------------------------------------------
@@ -135,6 +151,11 @@ class ServerStats:
     latency: dict[str, float]  # request p50/p99, seconds
     launch_latency: dict[str, float]  # run_window_batch p50/p99, seconds
     stage_percentiles: dict[str, dict[str, float]] = field(default_factory=dict)
+    # failure-model counters (DESIGN.md §14)
+    shed_requests: int = 0  # submits refused at serve.max_queue_depth
+    deadline_expired: int = 0  # requests timed out waiting in the queue
+    launch_retries: int = 0  # transient launch failures (retried attempts)
+    windows_failed: int = 0  # windows whose launches exhausted retries
 
     @property
     def coalesce_ratio(self) -> float:
@@ -197,6 +218,8 @@ class PDFServer:
             queries=0, ticks=0, launches=0, windows_requested=0,
             windows_unique=0, windows_computed=0, windows_from_memory=0,
             windows_from_disk=0, slices_stored=0, max_queue_depth=0,
+            shed_requests=0, deadline_expired=0, launch_retries=0,
+            windows_failed=0,
         )
         self._by_kind: dict[str, int] = {}
         self._failure: BaseException | None = None
@@ -217,9 +240,12 @@ class PDFServer:
     def close(self, timeout: float | None = None) -> None:
         """Graceful drain: stop accepting new queries, serve everything
         already queued (FIFO up to the shutdown marker), stop the thread.
-        Idempotent; re-raises a serving-thread failure if one occurred."""
+
+        The *first* close re-raises a serving-thread failure (a crash must
+        surface loudly at least once); every later close is a silent no-op,
+        so ``close()`` is safe from ``finally`` blocks and ``__exit__``
+        stacks even after the serving thread died mid-batch."""
         if self._closed:
-            self.raise_if_failed()
             return
         self._closed = True
         if self._thread is not None:
@@ -242,12 +268,19 @@ class PDFServer:
     def submit(self, q) -> Future:
         """Enqueue a query; returns a ``Future`` resolving to its
         ``QueryAnswer``. Raises immediately on malformed queries, a closed
-        server, or a failed serving thread."""
+        server, a failed serving thread, or (``ServerOverloadedError``) a
+        queue already at ``serve.max_queue_depth``."""
         self.raise_if_failed()
         if self._closed:
             raise RuntimeError("server is closed")
         if self._thread is None:
             raise RuntimeError("server not started (use start() or 'with')")
+        cap = self._serve.max_queue_depth
+        if cap and self._depth >= cap:
+            self._counts["shed_requests"] += 1
+            raise ServerOverloadedError(
+                f"queue depth {self._depth} at max_queue_depth={cap} — "
+                "request shed, retry with backoff")
         pending = self._resolve_span(q)
         self._depth += 1
         self._counts["max_queue_depth"] = max(
@@ -366,11 +399,14 @@ class PDFServer:
 
     def _serve_batch(self, batch: list[_Pending]) -> None:
         self._counts["ticks"] += 1
+        batch = self._expire(batch)
+        if not batch:
+            return
         try:
             if self._serve.coalesce:
-                resolved = self._resolve_coalesced(batch)
+                resolved, failed = self._resolve_coalesced(batch)
             else:
-                resolved = self._resolve_naive(batch)
+                resolved, failed = self._resolve_naive(batch)
         except BaseException as e:
             for p in batch:
                 if not p.future.done():
@@ -382,13 +418,49 @@ class PDFServer:
             self._counts["queries"] += 1
             kind = type(p.query).__name__
             self._by_kind[kind] = self._by_kind.get(kind, 0) + 1
+            bad = None
+            if failed:
+                for w in p.windows:
+                    bad = failed.get((w.slice_i, w.line_start))
+                    if bad is not None:
+                        break
+            if bad is not None:
+                # Only the requests touching a failed launch's windows fail;
+                # the rest of the batch is answered normally.
+                if not p.future.done():
+                    p.future.set_exception(bad)
+                continue
             rmon.start(f"q{self._counts['queries']}", now=p.t_submit)
             latency = rmon.finish(f"q{self._counts['queries']}", now=now)
             p.future.set_result(self._answer(p, resolved, latency))
 
+    def _expire(self, batch: list[_Pending]) -> list[_Pending]:
+        """Fail (``TimeoutError``) requests that sat in the queue longer
+        than ``serve.request_deadline_s`` — no compute is spent on an answer
+        the caller has already given up on. Returns the live remainder."""
+        deadline = self._serve.request_deadline_s
+        if deadline is None:
+            return batch
+        now = time.perf_counter()
+        live = []
+        for p in batch:
+            waited = now - p.t_submit
+            if waited > deadline:
+                self._counts["deadline_expired"] += 1
+                if not p.future.done():
+                    p.future.set_exception(TimeoutError(
+                        f"request expired: queued {waited:.3f}s > "
+                        f"deadline {deadline}s"))
+            else:
+                live.append(p)
+        return live
+
     def _resolve_coalesced(self, batch):
         """Dedup every pending query's windows, serve what the caches hold,
-        compute the rest in (chunked) single launches."""
+        compute the rest in (chunked) single launches. Returns
+        ``(resolved, failed)``: windows whose launch exhausted its transient
+        retries land in ``failed`` (key -> exception) instead of poisoning
+        the server."""
         needed: OrderedDict[tuple[int, int], str] = OrderedDict()
         for p in batch:
             self._counts["windows_requested"] += len(p.windows)
@@ -397,6 +469,7 @@ class PDFServer:
         self._counts["windows_unique"] += len(needed)
 
         resolved: dict[tuple[int, int], tuple[str, WindowResult]] = {}
+        failed: dict[tuple[int, int], BaseException] = {}
         to_compute: list[regions.Window] = []
         for key, w in needed.items():
             served = self._from_caches(key, w)
@@ -406,45 +479,78 @@ class PDFServer:
                 to_compute.append(w)
 
         ex = self.session.executor(0) if to_compute else None
-        lmon = self.monitors["launch"]
         for i in range(0, len(to_compute), self._serve.max_batch_windows):
             chunk = to_compute[i:i + self._serve.max_batch_windows]
-            uid = f"launch{self._counts['launches']}"
-            lmon.start(uid, now=time.perf_counter())
-            results = ex.run_window_batch(chunk)
-            lmon.finish(uid, now=time.perf_counter())
-            self._counts["launches"] += 1
+            results = self._launch(
+                lambda: ex.run_window_batch(chunk), chunk, failed)
+            if results is None:
+                continue
             self._counts["windows_computed"] += len(chunk)
             for wr in results:
                 key = (wr.window.slice_i, wr.window.line_start)
                 resolved[key] = ("computed", wr)
                 self._remember(key, wr)
-        return resolved
+        return resolved, failed
 
     def _resolve_naive(self, batch):
         """The one-launch-per-query baseline: no cross-request dedup, each
         query's windows dispatched individually (cache layers still apply —
         coalescing is the lever this baseline isolates)."""
         resolved: dict[tuple[int, int], tuple[str, WindowResult]] = {}
-        lmon = self.monitors["launch"]
+        failed: dict[tuple[int, int], BaseException] = {}
         for p in batch:
             self._counts["windows_requested"] += len(p.windows)
             for w in p.windows:
                 key = (w.slice_i, w.line_start)
                 self._counts["windows_unique"] += 1
+                if key in resolved or key in failed:
+                    continue
                 served = self._from_caches(key, w)
                 if served is not None:
                     resolved[key] = served
                     continue
-                uid = f"launch{self._counts['launches']}"
-                lmon.start(uid, now=time.perf_counter())
-                wr = self.session.executor(0).run_window(w)
-                lmon.finish(uid, now=time.perf_counter())
-                self._counts["launches"] += 1
+                ex = self.session.executor(0)
+                results = self._launch(
+                    lambda: [ex.run_window(w)], (w,), failed)
+                if results is None:
+                    continue
                 self._counts["windows_computed"] += 1
-                resolved[key] = ("computed", wr)
-                self._remember(key, wr)
-        return resolved
+                resolved[key] = ("computed", results[0])
+                self._remember(key, results[0])
+        return resolved, failed
+
+    def _launch(self, run, chunk, failed):
+        """One monitored launch with transient retry (DESIGN.md §14).
+
+        ``run()`` computes the ``WindowResult``s for ``chunk``. A transient
+        failure (``faults.is_transient``) is retried up to
+        ``serve.retry_transient`` times with a short linear backoff — the
+        failed attempt's timing is abandoned so it cannot skew the launch
+        percentiles. Exhaustion marks every window of the chunk in
+        ``failed`` (only their requests' futures fail) and returns None; a
+        fatal error raises and keeps the poison-the-server path."""
+        lmon = self.monitors["launch"]
+        last: BaseException | None = None
+        for attempt in range(self._serve.retry_transient + 1):
+            uid = f"launch{self._counts['launches']}"
+            lmon.start(uid, now=time.perf_counter())
+            try:
+                results = run()
+            except Exception as e:
+                lmon.abandon(uid)
+                if not is_transient(e):
+                    raise
+                last = e
+                self._counts["launch_retries"] += 1
+                time.sleep(0.01 * (attempt + 1))
+                continue
+            lmon.finish(uid, now=time.perf_counter())
+            self._counts["launches"] += 1
+            return results
+        for w in chunk:
+            failed[(w.slice_i, w.line_start)] = last
+            self._counts["windows_failed"] += 1
+        return None
 
     # -- cache layers ----------------------------------------------------------
 
@@ -571,6 +677,10 @@ class PDFServer:
             windows_from_disk=c["windows_from_disk"],
             slices_stored=c["slices_stored"],
             max_queue_depth=c["max_queue_depth"],
+            shed_requests=c["shed_requests"],
+            deadline_expired=c["deadline_expired"],
+            launch_retries=c["launch_retries"],
+            windows_failed=c["windows_failed"],
             latency=self.monitors["request"].percentiles(),
             launch_latency=self.monitors["launch"].percentiles(),
             stage_percentiles=self.session.stage_percentiles(),

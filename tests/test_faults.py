@@ -1,0 +1,554 @@
+"""Chaos suite (DESIGN.md §14): the fault-injection layer and everything
+it exercises — work-unit retry, straggler speculation, degraded-mode
+quarantine + failed-unit manifests, shard-death re-dealing, verified chunk
+reads, cache-lock degradation, and the server's partial-failure /
+load-shedding / deadline paths.
+
+The load-bearing invariant everywhere: any COMPLETED result produced under
+injected faults is bitwise-identical to the fault-free run. Work units are
+independently recomputable partitions (re-loading a window yields the same
+bytes, fits are row-pure), so retrying, speculating, or re-dealing a unit
+can change wall time and placement — never the answer's bits."""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    MethodSpec,
+    PDFSession,
+    PipelineSpec,
+    ResultCache,
+    SourceSpec,
+    build_source,
+)
+from repro.api.spec import ServeSpec
+from repro.core.executor import RESULT_FIELDS, SliceResult
+from repro.data import file_source
+from repro.runtime.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    ShardLostError,
+    TransientError,
+    is_transient,
+)
+from repro.runtime import elastic
+from repro.serve import (
+    PDFServer,
+    PointQuery,
+    ServerOverloadedError,
+    WindowQuery,
+)
+
+SOURCE = SourceSpec(num_slices=3, lines_per_slice=10, points_per_line=8,
+                    observations=150)
+PPL = SOURCE.points_per_line
+WINDOW_LINES = 3
+
+# Chaos-test executor defaults: near-zero backoff (we inject the delays we
+# want), no speculation unless the test is about speculation.
+FAST_RETRY = dict(retry_backoff_s=0.001, speculate=False)
+
+
+def make_spec(method="grouping", source=SOURCE, execution=None, serve=None):
+    kw = {}
+    if serve is not None:
+        kw["serve"] = serve
+    return PipelineSpec(
+        source=source,
+        method=MethodSpec(name=method),
+        compute=ComputeSpec(window_lines=WINDOW_LINES, num_bins=20),
+        execution=execution or ExecSpec(),
+        **kw,
+    )
+
+
+def assert_bitwise(result, ref, what=""):
+    for name in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(result, name), getattr(ref, name),
+            err_msg=f"{what}{name}")
+
+
+@pytest.fixture(scope="module")
+def clean():
+    """The fault-free reference arrays every bitwise assertion compares
+    against (ExecSpec is hash-excluded, so one reference serves them all)."""
+    return PDFSession(make_spec()).run_all([0, 1, 2])
+
+
+# -- the plan / taxonomy -------------------------------------------------------
+
+
+def test_plan_json_roundtrip():
+    plan = FaultPlan(seed=7, rules=(
+        FaultRule("read_error", slice_i=1, line_start=3, times=2),
+        FaultRule("latency", seconds=0.5, rate=0.25),
+        FaultRule("shard_death", shard=1, after_units=4),
+    ))
+    again = FaultPlan.from_json(plan.to_json())
+    assert again == plan
+    assert again.rules[2].shard == 1
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultRule("meteor_strike")
+    with pytest.raises(ValueError, match="shard"):
+        FaultRule("shard_death")  # no target shard
+    with pytest.raises(ValueError, match="rate"):
+        FaultRule("read_error", rate=0.0)
+    with pytest.raises(ValueError, match="unknown fault plan keys"):
+        FaultPlan.from_dict({"seed": 0, "rules": [], "extra": 1})
+
+
+def test_is_transient_classification():
+    assert is_transient(InjectedFault("hiccup"))
+    assert is_transient(TransientError("retry me"))
+    assert is_transient(OSError("nfs wobble"))
+    assert is_transient(TimeoutError("slow"))
+    assert not is_transient(ValueError("bad shape"))
+    assert not is_transient(ShardLostError(3))
+    # classification follows the __cause__ chain through wrappers
+    wrapped = RuntimeError("prefetch stage failed")
+    wrapped.__cause__ = OSError("root cause")
+    assert is_transient(wrapped)
+    fatal = RuntimeError("shard gone")
+    fatal.__cause__ = ShardLostError(1)
+    assert not is_transient(fatal)
+
+
+def test_affliction_is_deterministic():
+    plan = FaultPlan(seed=3, rules=(FaultRule("read_error", rate=0.5),))
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+    keys = [(s, line) for s in range(4) for line in range(0, 40, 3)]
+    decide = lambda inj: [inj._afflicted(0, plan.rules[0], k) for k in keys]
+    assert decide(a) == decide(b)
+    assert 0 < sum(decide(a)) < len(keys)  # rate actually partitions
+
+
+# -- executor: retry / speculation / quarantine --------------------------------
+
+
+def test_transient_read_errors_recover_bitwise(clean):
+    """Every window's first read fails; retries recover every unit and the
+    completed results are bitwise-identical to the fault-free run."""
+    spec = make_spec(execution=ExecSpec(**FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(FaultRule("read_error", times=1),)))
+    sess = PDFSession(spec, fault_injector=inj)
+    results = sess.run_all([0, 1, 2])
+    for s in (0, 1, 2):
+        assert not results[s].degraded
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    rep = sess.report()
+    assert rep.retries > 0
+    assert rep.quarantined_units == 0
+    assert inj.events["read_error"] > 0
+
+
+def test_straggler_speculation_wins_bitwise(clean):
+    """An injected latency spike on a late window trips the straggler
+    threshold; the speculative re-dispatch races it and the first success
+    wins — with bitwise-identical results (loads are deterministic)."""
+    spec = make_spec(execution=ExecSpec(
+        retry_backoff_s=0.001, speculate=True, straggler_grace_s=0.05,
+        prefetch=False))
+    # slice 2 is the shard's 9th-12th unit: the trailing median exists
+    # (min_samples=5) by the time the spike hits, so speculation can fire.
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("latency", slice_i=2, line_start=6, seconds=1.5, times=1),
+    )))
+    sess = PDFSession(spec, fault_injector=inj)
+    results = sess.run_all([0, 1, 2])
+    for s in (0, 1, 2):
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    rep = sess.report()
+    assert rep.speculations > 0
+    assert inj.events["latency"] == 1
+
+
+def test_unrecoverable_unit_quarantines_not_aborts(clean, tmp_path):
+    """A unit whose reads NEVER succeed completes the run degraded: its
+    window carries type_idx=-1, the failed-unit manifest sits next to the
+    watermark, every other window is bitwise-correct, and the degraded
+    slice is NOT stored in the result cache."""
+    out = tmp_path / "out"
+    cache = tmp_path / "cache"
+    spec = make_spec(execution=ExecSpec(
+        out_dir=str(out), cache_dir=str(cache), max_retries=1, **FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("read_error", slice_i=1, line_start=3, times=10_000),
+    )))
+    sess = PDFSession(spec, fault_injector=inj)
+    with pytest.warns(UserWarning, match="not stored"):
+        results = sess.run_all([0, 1, 2])
+
+    r1 = results[1]
+    assert r1.degraded
+    assert [q["line_start"] for q in r1.quarantined] == [3]
+    assert r1.quarantined[0]["attempts"] == 2  # max_retries + 1
+    assert "injected transient read error" in r1.quarantined[0]["error"]
+    lo, hi = 3 * PPL, 6 * PPL
+    assert (r1.type_idx[lo:hi] == -1).all()
+    assert (r1.params[lo:hi] == 0).all()
+    # everything OUTSIDE the quarantined window is bitwise the clean run
+    for name in RESULT_FIELDS:
+        got, want = getattr(r1, name), getattr(clean[1], name)
+        np.testing.assert_array_equal(got[:lo], want[:lo], err_msg=name)
+        np.testing.assert_array_equal(got[hi:], want[hi:], err_msg=name)
+    for s in (0, 2):
+        assert not results[s].degraded
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+
+    manifest = out / "slice1_failed_units.json"
+    assert manifest.exists()
+    m = json.loads(manifest.read_text())
+    assert m["spec_hash"] == sess.spec_hash
+    assert [e["line_start"] for e in m["failed"]] == [3]
+    # degraded slice not cached; healthy neighbours are
+    assert sess.cache.lookup(sess.spec_hash, 1) is None
+    assert sess.cache.lookup(sess.spec_hash, 0) is not None
+    assert rep_quarantined(sess) == 1
+
+    # -- repair: a fault-free resume re-runs ONLY the manifest's units,
+    # fills the hole bitwise, and clears the manifest.
+    sess2 = PDFSession(spec)
+    repaired = sess2.run_all([1], resume=True)[1]
+    assert not repaired.degraded
+    assert_bitwise(repaired, clean[1], "repaired/")
+    assert not manifest.exists()
+
+
+def rep_quarantined(sess):
+    return sess.report().quarantined_units
+
+
+def test_degraded_mode_off_raises():
+    spec = make_spec(execution=ExecSpec(
+        degraded_mode=False, max_retries=1, **FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("read_error", slice_i=0, line_start=0, times=10_000),
+    )))
+    with pytest.raises(RuntimeError, match="failed after 2 attempts"):
+        PDFSession(spec, fault_injector=inj).run_all([0])
+
+
+# -- shard death / re-dealing --------------------------------------------------
+
+
+def test_plan_redeal():
+    plan = elastic.plan_redeal([4, 7, 9], healthy_shards=[0, 2], lost_shards=[1])
+    assert plan.lost_shards == (1,)
+    assert plan.slices_for(0) == (4, 9)
+    assert plan.slices_for(2) == (7,)
+    with pytest.raises(ValueError, match="no healthy shards"):
+        elastic.plan_redeal([1], healthy_shards=[], lost_shards=[0])
+
+
+def test_shard_death_redeals_and_completes_bitwise(clean, tmp_path):
+    """Shard 1 dies mid-slice; its remaining work is re-dealt to shard 0
+    with resume, so windows the dead shard persisted are restored (not
+    recomputed) and every slice still completes bitwise-identical."""
+    spec = make_spec(execution=ExecSpec(
+        shards=2, out_dir=str(tmp_path / "out"), **FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("shard_death", shard=1, after_units=2),
+    )))
+    sess = PDFSession(spec, fault_injector=inj)
+    results = sess.run_all([0, 1, 2])
+    assert set(results) == {0, 1, 2}
+    for s in (0, 1, 2):
+        assert not results[s].degraded
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    assert sess.shards_lost == (1,)
+    assert sess.report().shards_lost == (1,)
+    assert inj.events["shard_death"] >= 1
+
+
+def test_all_shards_lost_is_fatal():
+    spec = make_spec(execution=ExecSpec(shards=1, **FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("shard_death", shard=0, after_units=0),
+    )))
+    with pytest.raises((ShardLostError, ValueError)):
+        PDFSession(spec, fault_injector=inj).run_all([0])
+
+
+# -- corrupt chunk bytes / verified reads --------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cube_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("cube")
+    return file_source.export_cube(SOURCE, out), out
+
+
+def test_corrupt_chunk_reread_recovers_bitwise(clean, cube_dir):
+    """A torn first read of one chunk is detected by the manifest sha256
+    and healed by the automatic re-read — no unit retry even needed, and
+    the run is bitwise the fault-free one."""
+    file_spec, _ = cube_dir
+    spec = make_spec(source=file_spec, execution=ExecSpec(**FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("corrupt", slice_i=0, line_start=0, times=1),
+    )))
+    sess = PDFSession(spec, fault_injector=inj)
+    results = sess.run_all([0, 1, 2])
+    for s in (0, 1, 2):
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    assert inj.events["corrupt"] == 1
+    assert sess.report().quarantined_units == 0
+
+
+def test_corrupt_rules_require_file_source():
+    inj = FaultInjector(FaultPlan(rules=(FaultRule("corrupt"),)))
+    with pytest.raises(ValueError, match="file-backed source"):
+        inj.wrap_source(build_source(SOURCE))
+
+
+def test_persistent_corruption_raises_with_path_and_attempts(tmp_path):
+    spec = file_source.export_cube(SOURCE, tmp_path / "cube2")
+    src = file_source.FileCubeSource(spec.path)
+    chunk = tmp_path / "cube2" / src.manifest["chunks"][0]["file"]
+    arr = np.load(chunk)
+    arr[0, 0, 0] += 1.0
+    np.save(chunk, arr)
+    with pytest.raises(ValueError, match="corrupt after 2 read attempts"):
+        src.verify()
+    with pytest.raises(ValueError, match=str(chunk)):
+        src.verify()
+
+
+# -- cache lock degradation ----------------------------------------------------
+
+
+def _tiny_result(spec_hash="deadbeef", slice_i=0, n=8):
+    return SliceResult(
+        np.zeros(n, np.int32), np.zeros((n, 3), np.float32),
+        np.zeros(n, np.float32), np.zeros(n, np.float32),
+        np.zeros(n, np.float32), np.zeros(n, np.float32),
+        np.zeros(n, np.float32), 0.0, [],
+        slice_i=slice_i, spec_hash=spec_hash)
+
+
+def test_cache_store_lock_contention_degrades_to_skip(tmp_path):
+    cache = ResultCache(tmp_path, lock_timeout_s=0.05)
+    result = _tiny_result()
+    entry_dir = tmp_path / "deadbeef"
+    entry_dir.mkdir()
+    (entry_dir / ".lock").write_text("12345")  # held by "another process"
+    t0 = time.monotonic()
+    with pytest.warns(UserWarning, match="locked by another process"):
+        cache.store(result)
+    assert time.monotonic() - t0 < 5  # bounded: degraded, never a hang
+    assert cache.lock_misses == 1
+    assert not cache.path("deadbeef", 0).exists()
+    # lock released -> the next store lands normally
+    (entry_dir / ".lock").unlink()
+    cache.store(result)
+    assert cache.lookup("deadbeef", 0) is not None
+    assert not (entry_dir / ".lock").exists()  # released after the store
+
+
+def test_cache_stale_lock_is_broken(tmp_path):
+    cache = ResultCache(tmp_path, lock_timeout_s=0.5)
+    entry_dir = tmp_path / "deadbeef"
+    entry_dir.mkdir()
+    lock = entry_dir / ".lock"
+    lock.write_text("999999")
+    old = time.time() - 3600  # holder died an hour ago
+    os.utime(lock, (old, old))
+    cache.store(_tiny_result())  # breaks the stale lock, no warning
+    assert cache.lock_misses == 0
+    assert cache.lookup("deadbeef", 0) is not None
+
+
+def test_injected_cache_faults_degrade_to_miss(tmp_path, clean):
+    """cache_error faults ride the cache's existing OSError degradation:
+    a failed lookup is a warned miss (slice recomputes), a failed store a
+    warned skip — results stay bitwise-correct throughout."""
+    spec = make_spec(execution=ExecSpec(
+        cache_dir=str(tmp_path / "cache"), **FAST_RETRY))
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("cache_error", slice_i=0, times=10_000),
+    )))
+    sess = PDFSession(spec, fault_injector=inj)
+    with pytest.warns(UserWarning, match="cache store failed"):
+        results = sess.run_all([0, 1])
+    assert_bitwise(results[0], clean[0], "slice0/")
+    assert_bitwise(results[1], clean[1], "slice1/")
+    assert sess.cache.lookup(sess.spec_hash, 1) is not None  # untargeted
+    assert inj.events["cache_error"] > 0
+
+
+# -- the server under faults ---------------------------------------------------
+
+
+class _FlakyOnce:
+    """Fails each window's FIRST load with a transient error."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.geometry = inner.geometry
+        self._seen = set()
+        self._lock = threading.Lock()
+
+    def load_window(self, w):
+        key = (w.slice_i, w.line_start)
+        with self._lock:
+            fresh = key not in self._seen
+            self._seen.add(key)
+        if fresh:
+            raise InjectedFault(f"flaky first read of {key}")
+        return self.inner.load_window(w)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class _DeadSlice:
+    """Every load of one slice fails transiently, forever."""
+
+    def __init__(self, inner, dead_slice):
+        self.inner = inner
+        self.geometry = inner.geometry
+        self.dead = dead_slice
+
+    def load_window(self, w):
+        if w.slice_i == self.dead:
+            raise InjectedFault(f"slice {self.dead} unreachable")
+        return self.inner.load_window(w)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class _Gated:
+    """Blocks every load until the event is set (for queue-shape tests)."""
+
+    def __init__(self, inner, event):
+        self.inner = inner
+        self.geometry = inner.geometry
+        self.event = event
+
+    def load_window(self, w):
+        self.event.wait()
+        return self.inner.load_window(w)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_server_transient_retry_recovers_bitwise(clean):
+    # the 5-line query spans 3 windows and each fails its first load, so
+    # the chunk launch needs up to 3 retries before a fully clean attempt
+    spec = make_spec(serve=ServeSpec(retry_transient=3, tick_seconds=0.0))
+    src = _FlakyOnce(build_source(SOURCE))
+    with PDFServer(spec, data_source=src) as srv:
+        a = srv.query(WindowQuery(0, 2, 7), timeout=120)
+        for name in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(a, name), getattr(clean[0], name)[2 * PPL:7 * PPL],
+                err_msg=name)
+        stats = srv.stats()
+    assert stats.launch_retries > 0
+    assert stats.windows_failed == 0
+
+
+def test_server_exhausted_transient_fails_only_affected_requests(clean):
+    """A window whose launches keep failing transiently fails ITS futures
+    with the underlying error — the server is not poisoned and keeps
+    serving other slices bitwise-correctly."""
+    spec = make_spec(serve=ServeSpec(retry_transient=1, tick_seconds=0.0))
+    src = _DeadSlice(build_source(SOURCE), dead_slice=1)
+    with PDFServer(spec, data_source=src) as srv:
+        with pytest.raises(InjectedFault, match="unreachable"):
+            srv.query(PointQuery(1, 0, 0), timeout=120)
+        # still alive: an untouched slice serves fine afterwards
+        a = srv.query(PointQuery(0, 4, 2), timeout=120)
+        np.testing.assert_array_equal(
+            a.type_idx, clean[0].type_idx[4 * PPL + 2:4 * PPL + 3])
+        stats = srv.stats()
+        assert stats.windows_failed >= 1
+        assert srv._failure is None
+    # close() after a partial failure is clean — nothing was poisoned
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_server_fatal_error_still_poisons():
+    class _Fatal:
+        def __init__(self, inner):
+            self.inner = inner
+            self.geometry = inner.geometry
+
+        def load_window(self, w):
+            raise ValueError("fatal: bad geometry")
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+    spec = make_spec(serve=ServeSpec(retry_transient=3, tick_seconds=0.0))
+    srv = PDFServer(spec, data_source=_Fatal(build_source(SOURCE))).start()
+    fut = srv.submit(PointQuery(0, 0, 0))
+    with pytest.raises(ValueError, match="fatal"):
+        fut.result(timeout=120)
+    srv._thread.join(timeout=60)
+    with pytest.raises(RuntimeError, match="server thread failed"):
+        srv.close()
+    srv.close()  # second close: silent no-op (safe from finally blocks)
+
+
+def test_server_close_is_idempotent():
+    srv = PDFServer(make_spec()).start()
+    srv.close(timeout=60)
+    srv.close(timeout=60)  # no raise, no hang
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(PointQuery(0, 0, 0))
+
+
+def test_server_load_shedding():
+    """With the queue at max_queue_depth, submit sheds immediately with
+    ServerOverloadedError; admitted requests still complete once the
+    backlog drains."""
+    gate = threading.Event()
+    spec = make_spec(serve=ServeSpec(max_queue_depth=2, tick_seconds=0.0))
+    src = _Gated(build_source(SOURCE), gate)
+    with PDFServer(spec, data_source=src) as srv:
+        first = srv.submit(PointQuery(0, 0, 0))  # drained, blocks on gate
+        time.sleep(0.1)
+        queued = [srv.submit(PointQuery(0, 3, 1)),
+                  srv.submit(PointQuery(0, 6, 2))]  # depth now 2
+        with pytest.raises(ServerOverloadedError, match="shed"):
+            srv.submit(PointQuery(0, 9, 3))
+        gate.set()
+        for f in [first] + queued:
+            assert f.result(timeout=120) is not None
+        assert srv.stats().shed_requests == 1
+
+
+def test_server_request_deadline_expires_queued_work():
+    """A request that waited in the queue past serve.request_deadline_s
+    fails with TimeoutError before any compute is spent on it."""
+    gate = threading.Event()
+    spec = make_spec(serve=ServeSpec(request_deadline_s=0.1, tick_seconds=0.0))
+    src = _Gated(build_source(SOURCE), gate)
+    with PDFServer(spec, data_source=src) as srv:
+        first = srv.submit(PointQuery(0, 0, 0))  # in flight, blocks on gate
+        time.sleep(0.05)
+        stale = srv.submit(PointQuery(1, 0, 0))  # sits queued past deadline
+        time.sleep(0.3)
+        gate.set()
+        assert first.result(timeout=120) is not None  # admitted before block
+        with pytest.raises(TimeoutError, match="expired"):
+            stale.result(timeout=120)
+        assert srv.stats().deadline_expired == 1
