@@ -1,0 +1,38 @@
+"""Wall time of the static invariant checker over the full package tree.
+
+One row, ``analysis/wall_time_full_tree``: the time for a complete
+``python -m repro.analysis`` pass (all five rules over every module of
+``src/repro``), which is what the CI ``lint-invariants`` job and every
+pre-commit run pay. Tracked, not gated — the checker is pure-Python AST
+walking, so its absolute time swings with interpreter and filesystem noise
+far more than with real regressions; the row exists so a rule that goes
+accidentally quadratic in tree size shows up in BENCH history.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from benchmarks import common  # noqa: E402 — run via benchmarks/run.py
+import repro.analysis
+from repro.analysis import ALL_RULES
+from repro.analysis.engine import analyze_tree
+
+
+def run(quick: bool = True):
+    # the repro package root (repro itself is a namespace package, so it
+    # has no __file__ — resolve via the analysis subpackage, like the CLI)
+    root = Path(repro.analysis.__file__).resolve().parent.parent
+    reps = 3 if quick else 10
+    # warmup: touch every file once so the timed passes measure parsing
+    # and rule evaluation, not cold page cache
+    report = analyze_tree(root, list(ALL_RULES))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        report = analyze_tree(root, list(ALL_RULES))
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return [common.Row(
+        "analysis/wall_time_full_tree", us,
+        f"{report.files} files; {len(report.findings)} findings; "
+        f"{len(ALL_RULES)} rules")]

@@ -104,6 +104,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        analysis_bench,
         cache_bench,
         fault_bench,
         fig06_methods_small,
@@ -120,7 +121,7 @@ def main() -> None:
     modules = [
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
-        cache_bench, serve_bench, fault_bench,
+        cache_bench, serve_bench, fault_bench, analysis_bench,
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}

@@ -1,0 +1,51 @@
+"""repro.analysis — the repo-invariant static checker (DESIGN.md §15).
+
+Every hard-won contract in this reproduction is one careless edit away
+from silently breaking: determinism (bitwise results under faults), spec
+content-hash coverage (cache keys), the serial-shape launch discipline
+(PR 6's ~1 ulp drift), and the lock/error taxonomy around shared state.
+This package walks ``src/repro`` with ``ast`` and fails CI when a change
+violates one — the same role a race detector or sanitizer plays for a
+training stack.
+
+Usage::
+
+    python -m repro.analysis                      # human output, exit code
+    python -m repro.analysis --rules DET,LOCK     # subset
+    python -m repro.analysis --baseline analysis_baseline.json
+    python -m repro.analysis --json               # machine-readable
+    python -m repro.analysis --self-check         # rules vs their fixtures
+
+Exit codes: 0 clean, 1 new findings / stale baseline / self-check failure,
+2 usage or internal error. Suppress a single line with
+``# repro: allow[RULE]: reason``; park pre-existing findings in the
+baseline file (every entry needs a one-line justification).
+
+The rule battery lives in sibling modules (``det``, ``hashes``, ``shape``,
+``locks``, ``errors``); ``engine`` owns findings, suppression, baselines,
+and the tree walk. Rules never import the code under analysis — the
+checker runs on a bare Python without JAX installed.
+"""
+
+from repro.analysis.det import DetRule
+from repro.analysis.engine import (
+    Finding,
+    Rule,
+    TreeReport,
+    analyze_source,
+    analyze_tree,
+    apply_baseline,
+    load_baseline,
+)
+from repro.analysis.errors import ErrRule
+from repro.analysis.hashes import HashRule
+from repro.analysis.locks import LockRule
+from repro.analysis.shape import ShapeRule
+
+#: The battery, in reporting order.
+ALL_RULES = (DetRule(), HashRule(), ShapeRule(), LockRule(), ErrRule())
+
+__all__ = [
+    "ALL_RULES", "Finding", "Rule", "TreeReport", "analyze_source",
+    "analyze_tree", "apply_baseline", "load_baseline",
+]

@@ -1,0 +1,115 @@
+"""DET — determinism sources inside result-defining modules.
+
+The bitwise contracts (staged-executor equivalence §9, fault recovery §14,
+coalescing equivalence) all assume a window's bytes depend on the spec
+alone. This rule flags the four ways ambient state leaks into that path:
+
+* wall-clock reads (``time.time`` / ``datetime.now``) — timing-only uses
+  (staleness checks, backoff) carry a justified ``# repro: allow[DET]``;
+* unseeded randomness: NumPy's global RNG (``np.random.rand`` et al.), a
+  seed-less ``default_rng()`` / ``RandomState()``, the stdlib ``random``
+  module, ``os.urandom`` / ``secrets`` / ``uuid.uuid4``;
+* environment reads (``os.environ`` / ``os.getenv``) — config must arrive
+  through the spec, never ambiently;
+* iteration over a ``set`` literal / comprehension / call — string hashing
+  is salted per process (PYTHONHASHSEED), so set order is run-dependent;
+  ordered consumers (``sorted``, ``min``/``max``), membership tests, and
+  aggregations (``len``/``sum``/``any``/``all``) are fine.
+
+Scope: ``core/``, ``kernels/``, ``data/``, ``serve/``, ``api/`` — the
+modules whose outputs are result-defining. ``runtime/`` (monitor, backoff,
+fault clocks) and ``launch/`` are timing/UX layers and exempt by design.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, Rule, import_aliases, qualname
+
+SCOPE = ("core/", "kernels/", "data/", "serve/", "api/")
+
+WALL_CLOCK = {
+    "time.time": "wall-clock read (time.time)",
+    "time.time_ns": "wall-clock read (time.time_ns)",
+    "datetime.datetime.now": "wall-clock read (datetime.now)",
+    "datetime.datetime.utcnow": "wall-clock read (datetime.utcnow)",
+    "datetime.datetime.today": "wall-clock read (datetime.today)",
+    "datetime.date.today": "wall-clock read (date.today)",
+}
+
+# numpy.random attributes that are NOT the seeded-generator API: anything
+# else on numpy.random is the shared global RNG.
+NP_RANDOM_OK = {"default_rng", "Generator", "RandomState", "SeedSequence",
+                "PCG64", "Philox", "SFC64", "MT19937", "BitGenerator"}
+
+ENTROPY = {
+    "os.urandom": "os.urandom is non-deterministic entropy",
+    "uuid.uuid4": "uuid.uuid4 is non-deterministic entropy",
+}
+
+# builtins that materialize their argument's iteration order
+ORDER_SINKS = {"list", "tuple", "iter", "enumerate"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+class DetRule(Rule):
+    name = "DET"
+    description = ("no unseeded randomness, wall-clock, env reads, or "
+                   "set-iteration-order leakage in result-defining modules")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(SCOPE)
+
+    def check(self, tree, lines, relpath):
+        aliases = import_aliases(tree)
+        out: list[Finding] = []
+
+        def emit(node, msg):
+            out.append(self.finding(relpath, node, msg, lines))
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                q = qualname(node.func, aliases)
+                if q in WALL_CLOCK:
+                    emit(node, WALL_CLOCK[q]
+                         + " — results must not depend on when they ran")
+                elif q in ENTROPY:
+                    emit(node, ENTROPY[q])
+                elif q and q.startswith("numpy.random."):
+                    attr = q.rsplit(".", 1)[1]
+                    if attr not in NP_RANDOM_OK:
+                        emit(node, f"numpy global-RNG call ({attr}) — use "
+                                   "np.random.default_rng(seed)")
+                    elif attr in ("default_rng", "RandomState") and not (
+                            node.args or node.keywords):
+                        emit(node, f"{attr}() without a seed draws OS entropy")
+                elif q and (q.startswith("random.") or q.startswith("secrets.")):
+                    emit(node, f"{q} is unseeded process-global randomness")
+                elif q == "os.getenv" or (q or "").startswith("os.environ."):
+                    emit(node, "environment read — configuration must come "
+                               "from the spec, not ambient state")
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in ORDER_SINKS and node.args
+                        and _is_set_expr(node.args[0])):
+                    emit(node, f"{node.func.id}() over a set materializes "
+                               "hash-salted iteration order")
+            elif isinstance(node, ast.Subscript):
+                if qualname(node.value, aliases) == "os.environ":
+                    emit(node, "environment read — configuration must come "
+                               "from the spec, not ambient state")
+            elif isinstance(node, ast.For) and _is_set_expr(node.iter):
+                emit(node, "for-loop over a set leaks hash-salted iteration "
+                           "order into results (sort it)")
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter):
+                        emit(gen.iter, "comprehension over a set leaks "
+                                       "hash-salted iteration order (sort it)")
+        return out

@@ -1,0 +1,8 @@
+"""Seeded-violation fixtures for ``repro.analysis --self-check``.
+
+Every ``*_case.py`` here is *parsed, never imported*: each marked line is a
+deliberate invariant violation its rule must report (``# expect[RULE]``),
+next to clean idioms the rule must stay silent on and one
+``# repro: allow[RULE]`` line proving suppression works. The engine's tree
+walk excludes this whole package, so the fixtures never pollute a real run.
+"""

@@ -1,0 +1,67 @@
+"""DET fixture: ambient-state leaks the rule must catch (parsed, never
+imported — see fixtures/__init__)."""
+
+import os
+import random
+import time
+
+import numpy as np
+
+
+def wall_clock_stamp():
+    return time.time()  # expect[DET]
+
+
+def global_rng_draw():
+    return np.random.rand(3)  # expect[DET]
+
+
+def unseeded_generator():
+    return np.random.default_rng()  # expect[DET]
+
+
+def seeded_generator_ok(seed):
+    return np.random.default_rng(seed)
+
+
+def stdlib_random():
+    return random.random()  # expect[DET]
+
+
+def env_read():
+    return os.environ["REPRO_MODE"]  # expect[DET]
+
+
+def env_get():
+    return os.getenv("REPRO_MODE")  # expect[DET]
+
+
+def set_comprehension_leak(items):
+    return [x * 2 for x in {i % 7 for i in items}]  # expect[DET]
+
+
+def set_loop_leak(tags):
+    out = []
+    for t in set(tags):  # expect[DET]
+        out.append(t)
+    return out
+
+
+def set_materialize_leak(tags):
+    return list({t.lower() for t in tags})  # expect[DET]
+
+
+def sorted_set_ok(tags):
+    return sorted({t.lower() for t in tags})
+
+
+def membership_ok(tag):
+    return tag in {"mean", "std", "skew"}
+
+
+def perf_counter_ok():
+    return time.perf_counter()
+
+
+def allowed_wall_clock():
+    return time.time()  # repro: allow[DET]: fixture — suppression must hold

@@ -1,0 +1,32 @@
+"""SHAPE fixture: device-shape assembly outside the blessed shape-class
+helpers (parsed as if it were ``core/executor.py``; never imported)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def unblessed_batch(parts):
+    flat = jnp.concatenate(parts)  # expect[SHAPE]
+    return flat.sum()
+
+
+def unblessed_stack(a, b):
+    return jnp.stack([a, b])  # expect[SHAPE]
+
+
+def unblessed_reshape(x, n):
+    return jnp.reshape(x, (n, -1))  # expect[SHAPE]
+
+
+def blessed_batch(parts, grp):
+    padded = grp.padded_size(sum(p.shape[0] for p in parts))
+    flat = jnp.concatenate(parts)
+    return flat, padded
+
+
+def host_assembly_ok(parts):
+    return np.concatenate(parts)
+
+
+def allowed_fixed_triple(a, b, c):
+    return jnp.stack([a, b, c], axis=-1)  # repro: allow[SHAPE]: fixed triple, not a batch seam

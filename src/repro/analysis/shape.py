@@ -1,0 +1,86 @@
+"""SHAPE — launch-shape discipline at the jit boundary (the PR 6 drift class).
+
+XLA specializes executables per input shape, and two executables that
+compute "the same" reduction at different shapes may differ by ~1 ulp —
+PR 6 measured exactly that when a batched concatenate produced a
+differently-shaped fused launch than the serial path. The repo's defense is
+the *shape-class* discipline: device inputs are padded to a small set of
+blessed bucket sizes (``grouping.padded_size``) so batched and serial runs
+hit the same executable.
+
+This rule guards the two files that build device launches — the executor
+and the serving batcher: any ``jnp.concatenate``/``stack``/``reshape``/
+``pad``-family call inside a function that never consults ``padded_size``
+is flagged as a potential unblessed shape seam. Fixed-shape assemblies that
+are provably not batch seams (e.g. a per-point feature triple) carry an
+inline ``# repro: allow[SHAPE]`` with the argument.
+
+Host-side ``np.*`` assembly is exempt: NumPy never feeds a jit boundary
+directly here, and host concatenation is bitwise-associative-free by
+construction (no re-tiling).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, Rule, import_aliases, qualname
+
+SCOPE_FILES = ("core/executor.py", "serve/server.py")
+
+SHAPE_FNS = {"concatenate", "stack", "hstack", "vstack", "dstack",
+             "column_stack", "reshape", "pad", "tile", "repeat", "resize",
+             "broadcast_to", "atleast_1d", "atleast_2d", "atleast_3d"}
+
+
+def _blessed_functions(tree: ast.Module) -> set[ast.AST]:
+    """Function nodes whose subtree calls ``padded_size`` — the shape-class
+    helper blesses every device assembly in that function."""
+    blessed: set[ast.AST] = set()
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                name = f.attr if isinstance(f, ast.Attribute) else (
+                    f.id if isinstance(f, ast.Name) else None)
+                if name == "padded_size":
+                    blessed.add(fn)
+                    break
+    return blessed
+
+
+class ShapeRule(Rule):
+    name = "SHAPE"
+    description = ("jnp concatenate/stack/reshape feeding a jit boundary "
+                   "outside the padded_size shape-class helpers")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in SCOPE_FILES
+
+    def check(self, tree, lines, relpath):
+        aliases = import_aliases(tree)
+        blessed = _blessed_functions(tree)
+        out: list[Finding] = []
+
+        def visit(node: ast.AST, fn_stack: tuple[ast.AST, ...]) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn_stack = fn_stack + (node,)
+            elif isinstance(node, ast.Call):
+                q = qualname(node.func, aliases)
+                if q and q.startswith(("jax.numpy.", "jax.lax.")):
+                    attr = q.rsplit(".", 1)[1]
+                    if attr in SHAPE_FNS and not any(
+                            fn in blessed for fn in fn_stack):
+                        out.append(self.finding(
+                            relpath, node,
+                            f"{attr} builds a device-array shape outside a "
+                            "padded_size shape class — a differently-shaped "
+                            "executable can drift ~1 ulp (DESIGN.md §13)",
+                            lines))
+            for child in ast.iter_child_nodes(node):
+                visit(child, fn_stack)
+
+        visit(tree, ())
+        return out

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import threading
 import time
 import warnings
 import zipfile
@@ -128,6 +129,10 @@ class ResultCache:
         self.max_bytes = max_bytes
         self.lock_timeout_s = lock_timeout_s
         self.injector = injector  # faults.FaultInjector (on_cache hook)
+        # one cache instance is shared across threads (a PDFServer's serving
+        # thread stores slices while the owning session reads): counter
+        # bumps hold _stats_lock (the LOCK rule enforces consistency)
+        self._stats_lock = threading.Lock()
         self.evictions = 0  # entries unlinked by the size cap, this process
         self.lock_misses = 0  # stores/evictions skipped on lock contention
         self._reap_stale_tmps(tmp_reap_seconds)
@@ -194,7 +199,8 @@ class ResultCache:
             f.parent.mkdir(parents=True, exist_ok=True)
             lock = _DirLock(f.parent, self.lock_timeout_s)
             if not lock.acquire():
-                self.lock_misses += 1
+                with self._stats_lock:
+                    self.lock_misses += 1
                 warnings.warn(
                     f"cache entry dir {f.parent} locked by another process — "
                     f"skipping store for slice {result.slice_i}", stacklevel=2)
@@ -266,7 +272,8 @@ class ResultCache:
                 continue
             lock = _DirLock(f.parent, min(0.1, self.lock_timeout_s))
             if not lock.acquire():
-                self.lock_misses += 1
+                with self._stats_lock:
+                    self.lock_misses += 1
                 continue
             try:
                 os.unlink(f)
@@ -276,7 +283,8 @@ class ResultCache:
             finally:
                 lock.release()
             total -= size
-            self.evictions += 1
+            with self._stats_lock:
+                self.evictions += 1
 
     def _touch(self, f: Path) -> None:
         """Refresh an entry's recency; racing with eviction is benign (a

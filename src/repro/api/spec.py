@@ -54,15 +54,32 @@ MODES = ("faithful", "fused")
 SOURCE_KINDS = ("simulation", "external", "file")
 FILE_LAYOUTS = ("chunked",)  # mirrors data.file_source.LAYOUTS (tested)
 
+# The hash subtree, declared once and machine-checked: ``content_hash``
+# covers exactly these top-level sections (``execution``/``serve`` are
+# staging-only by the bitwise-equivalence contracts, DESIGN.md §9/§13),
+# minus the per-section carve-outs below (location and bandwidth do not
+# change the observations read). Every field additionally carries a
+# ``hashed=`` tag in its ``_meta`` — the static HASH rule
+# (``python -m repro.analysis``) cross-checks tags against these
+# declarations, and tests/test_analysis.py asserts the tags agree with
+# actual ``content_hash`` behavior for every single field.
+HASHED_SECTIONS = ("source", "method", "compute")
+HASH_EXCLUDED_FIELDS = {"source": ("throttle_mb_s", "path", "layout")}
 
-def _meta(help_: str, *, type_: Any = None, choices=None, nargs=None,
-          flag: str | None = None, convert=None) -> dict:
+
+def _meta(help_: str, *, hashed: bool, type_: Any = None, choices=None,
+          nargs=None, flag: str | None = None, convert=None) -> dict:
     """CLI metadata attached to a spec field (consumed by ``api.cli``):
     ``type_``/``choices``/``nargs`` feed argparse, ``flag`` overrides the
     auto-derived flag name, ``convert`` post-processes the parsed value
-    (e.g. '--types 4' -> the TYPES_4 tuple)."""
-    return {"help": help_, "type": type_, "choices": choices, "nargs": nargs,
-            "flag": flag, "convert": convert}
+    (e.g. '--types 4' -> the TYPES_4 tuple). ``hashed`` is the
+    machine-readable tag for whether this field feeds ``content_hash`` —
+    required, so no spec field can ship without declaring its hash
+    behavior (the HASH rule verifies the tag against HASHED_SECTIONS /
+    HASH_EXCLUDED_FIELDS)."""
+    return {"help": help_, "hashed": hashed, "type": type_,
+            "choices": choices, "nargs": nargs, "flag": flag,
+            "convert": convert}
 
 
 def _types_convert(vals):
@@ -89,35 +106,35 @@ class SourceSpec:
     geometry fields are advisory for both non-simulation kinds."""
 
     kind: str = field(default="simulation", metadata=_meta(
-        "observation source", type_=str, choices=list(SOURCE_KINDS)))
+        "observation source", hashed=True, type_=str, choices=list(SOURCE_KINDS)))
     path: str | None = field(default=None, metadata=_meta(
-        "exported cube directory (kind='file'; see data.file_source)",
+        "exported cube directory (kind='file'; see data.file_source)", hashed=False,
         type_=str, flag="--source-path"))
     layout: str = field(default="chunked", metadata=_meta(
-        "on-disk cube layout (kind='file')", type_=str,
+        "on-disk cube layout (kind='file')", hashed=False, type_=str,
         choices=list(FILE_LAYOUTS)))
     num_slices: int = field(default=8, metadata=_meta(
-        "cube depth (slices)", type_=int))
+        "cube depth (slices)", hashed=True, type_=int))
     lines_per_slice: int = field(default=24, metadata=_meta(
-        "lines per slice", type_=int, flag="--lines"))
+        "lines per slice", hashed=True, type_=int, flag="--lines"))
     points_per_line: int = field(default=60, metadata=_meta(
-        "points per line", type_=int, flag="--ppl"))
+        "points per line", hashed=True, type_=int, flag="--ppl"))
     observations: int = field(default=300, metadata=_meta(
-        "Monte-Carlo observations per point", type_=int, flag="--obs"))
+        "Monte-Carlo observations per point", hashed=True, type_=int, flag="--obs"))
     num_layers: int = field(default=16, metadata=_meta(
-        "velocity-model layers (type cycle)", type_=int))
+        "velocity-model layers (type cycle)", hashed=True, type_=int))
     base_vp: float = field(default=3000.0, metadata=_meta(
-        "m/s scale of the layered velocity model", type_=float))
+        "m/s scale of the layered velocity model", hashed=True, type_=float))
     quantize_decimals: int = field(default=3, metadata=_meta(
-        "output rounding -> grouping redundancy", type_=int))
+        "output rounding -> grouping redundancy", hashed=True, type_=int))
     group_block: int = field(default=4, metadata=_meta(
-        "points per line sharing one generator cell", type_=int))
+        "points per line sharing one generator cell", hashed=True, type_=int))
     line_block: int = field(default=2, metadata=_meta(
-        "consecutive lines sharing generator cells", type_=int))
+        "consecutive lines sharing generator cells", hashed=True, type_=int))
     seed: int = field(default=0, metadata=_meta(
-        "simulation seed", type_=int))
+        "simulation seed", hashed=True, type_=int))
     throttle_mb_s: float | None = field(default=None, metadata=_meta(
-        "model NFS reads at this bandwidth (MB/s; overlap benchmarks)",
+        "model NFS reads at this bandwidth (MB/s; overlap benchmarks)", hashed=False,
         type_=float))
 
     def __post_init__(self):
@@ -165,7 +182,7 @@ class SourceSpec:
 
             return {"kind": "file", "manifest_sha256": manifest_sha(self.path)}
         d = dataclasses.asdict(self)
-        for name in ("throttle_mb_s", "path", "layout"):
+        for name in HASH_EXCLUDED_FIELDS["source"]:
             d.pop(name)
         return d
 
@@ -178,15 +195,15 @@ class TreeSpec:
     distribution types in the synthetic cube."""
 
     depth: int = field(default=4, metadata=_meta(
-        "decision tree depth", type_=int, flag="--tree-depth"))
+        "decision tree depth", hashed=True, type_=int, flag="--tree-depth"))
     max_bins: int = field(default=32, metadata=_meta(
-        "candidate split thresholds per feature", type_=int,
+        "candidate split thresholds per feature", hashed=True, type_=int,
         flag="--tree-max-bins"))
     train_slices: tuple[int, ...] | None = field(default=None, metadata=_meta(
-        "slices of 'previously generated output data' (default: first 4)",
+        "slices of 'previously generated output data' (default: first 4)", hashed=True,
         type_=int, nargs="+", flag="--tree-train-slices"))
     train_window_lines: int = field(default=4, metadata=_meta(
-        "window size for the training baseline runs", type_=int,
+        "window size for the training baseline runs", hashed=True, type_=int,
         flag="--tree-train-window-lines"))
 
     def __post_init__(self):
@@ -212,26 +229,26 @@ class MethodSpec:
     here rather than benchmark-side glue."""
 
     name: str = field(default="baseline", metadata=_meta(
-        "paper method (§5/§6)", type_=str, choices=list(METHODS),
+        "paper method (§5/§6)", hashed=True, type_=str, choices=list(METHODS),
         flag="--method"))
     group_tol: float = field(default=grp.DEFAULT_TOL, metadata=_meta(
-        "grouping tolerance (§5.2 'acceptable fluctuation')", type_=float))
+        "grouping tolerance (§5.2 'acceptable fluctuation')", hashed=True, type_=float))
     rep_bucket: int = field(default=64, metadata=_meta(
         "geometric padding bucket for representative batches "
-        "(64 suits reduced workloads, 256 at paper scale)", type_=int))
+        "(64 suits reduced workloads, 256 at paper scale)", hashed=True, type_=int))
     error_bound: float | None = field(default=None, metadata=_meta(
-        "the paper's bounded-error constraint on Eq.-6 E", type_=float))
+        "the paper's bounded-error constraint on Eq.-6 E", hashed=True, type_=float))
     sample_frac: float = field(default=0.1, metadata=_meta(
-        "sampling rate for method=sampling", type_=float))
+        "sampling rate for method=sampling", hashed=True, type_=float))
     sampler: str = field(default="random", metadata=_meta(
-        "point sampler for method=sampling", type_=str,
+        "point sampler for method=sampling", hashed=True, type_=str,
         choices=list(SAMPLERS)))
     kmeans_iters: int = field(default=10, metadata=_meta(
-        "Lloyd iterations for sampler=kmeans", type_=int))
+        "Lloyd iterations for sampler=kmeans", hashed=True, type_=int))
     sample_seed: int = field(default=0, metadata=_meta(
-        "base seed for the per-window sample draw", type_=int))
+        "base seed for the per-window sample draw", hashed=True, type_=int))
     tree: TreeSpec = field(default=TreeSpec(), metadata=_meta(
-        "decision-tree training config"))
+        "decision-tree training config", hashed=True))
 
     def __post_init__(self):
         if self.name not in METHODS:
@@ -260,20 +277,20 @@ class ComputeSpec:
     and which backend implements fit / Select."""
 
     types: tuple[str, ...] = field(default=dists.TYPES_4, metadata=_meta(
-        "candidate distribution set: '4', '10', or explicit names",
+        "candidate distribution set: '4', '10', or explicit names", hashed=True,
         type_=str, nargs="+", convert=_types_convert))
     num_bins: int = field(default=64, metadata=_meta(
-        "histogram bins L for the Eq.-5 error", type_=int))
+        "histogram bins L for the Eq.-5 error", hashed=True, type_=int))
     window_lines: int = field(default=6, metadata=_meta(
-        "lines per window (§4.2; grouping dedup scope)", type_=int))
+        "lines per window (§4.2; grouping dedup scope)", hashed=True, type_=int))
     mode: str = field(default="fused", metadata=_meta(
-        "shared-histogram fit vs paper-faithful per-type passes",
+        "shared-histogram fit vs paper-faithful per-type passes", hashed=True,
         type_=str, choices=list(MODES)))
     fit_backend: str = field(default="fused", metadata=_meta(
-        "device-work implementation (DESIGN.md §2.1)", type_=str,
+        "device-work implementation (DESIGN.md §2.1)", hashed=True, type_=str,
         choices=list(fitting.FIT_BACKENDS)))
     select_backend: str = field(default="host", metadata=_meta(
-        "where Select's dedup runs (DESIGN.md §6)", type_=str,
+        "where Select's dedup runs (DESIGN.md §6)", hashed=True, type_=str,
         choices=list(SELECT_BACKENDS)))
 
     def __post_init__(self):
@@ -308,50 +325,50 @@ class ExecSpec:
     (the staged-executor bitwise-equivalence contract, DESIGN.md §9)."""
 
     slices: tuple[int, ...] | None = field(default=None, metadata=_meta(
-        "slices to run (default: every slice of the cube)", type_=int,
+        "slices to run (default: every slice of the cube)", hashed=False, type_=int,
         nargs="+"))
     shards: int = field(default=1, metadata=_meta(
-        "shards of the mesh data axis (per-node slice assignment)", type_=int))
+        "shards of the mesh data axis (per-node slice assignment)", hashed=False, type_=int))
     shard: int | None = field(default=None, metadata=_meta(
-        "run only this shard's assignment (per-node mode)", type_=int))
+        "run only this shard's assignment (per-node mode)", hashed=False, type_=int))
     prefetch: bool = field(default=True, metadata=_meta(
-        "overlap window loading with device compute", type_=bool))
+        "overlap window loading with device compute", hashed=False, type_=bool))
     prefetch_depth: int = field(default=2, metadata=_meta(
-        "how many windows the load stage may run ahead", type_=int))
+        "how many windows the load stage may run ahead", hashed=False, type_=int))
     async_persist: bool = field(default=True, metadata=_meta(
-        "write .npz watermarks off the critical path", type_=bool))
+        "write .npz watermarks off the critical path", hashed=False, type_=bool))
     out_dir: str | None = field(default=None, metadata=_meta(
-        "persist per-window .npz + watermarks here", type_=str, flag="--out-dir"))
+        "persist per-window .npz + watermarks here", hashed=False, type_=str, flag="--out-dir"))
     resume: bool = field(default=False, metadata=_meta(
-        "skip windows completed under a matching spec hash", type_=bool))
+        "skip windows completed under a matching spec hash", hashed=False, type_=bool))
     cache_dir: str | None = field(default=None, metadata=_meta(
         "spec-hash-keyed result cache: serve identical reruns per slice "
-        "and store misses (api.ResultCache)", type_=str, flag="--cache-dir"))
+        "and store misses (api.ResultCache)", hashed=False, type_=str, flag="--cache-dir"))
     cache_max_bytes: int | None = field(default=None, metadata=_meta(
         "LRU size cap for cache_dir in bytes (oldest-used entries evicted; "
-        "default: unbounded)", type_=int, flag="--cache-max-bytes"))
+        "default: unbounded)", hashed=False, type_=int, flag="--cache-max-bytes"))
     # Fault tolerance (DESIGN.md §14). Like every other ExecSpec knob,
     # none of these change per-point results: retried/speculated/re-dealt
     # units recompute identical bytes, so they stay hash-excluded.
     max_retries: int = field(default=2, metadata=_meta(
         "transient-failure re-attempts per work unit before quarantine "
-        "(exponential backoff + deterministic jitter)", type_=int))
+        "(exponential backoff + deterministic jitter)", hashed=False, type_=int))
     retry_backoff_s: float = field(default=0.05, metadata=_meta(
-        "base backoff between work-unit retries (doubles per attempt)",
+        "base backoff between work-unit retries (doubles per attempt)", hashed=False,
         type_=float))
     speculate: bool = field(default=True, metadata=_meta(
         "re-dispatch straggling window loads (first result wins; safe — "
-        "launches are bitwise-identical by construction)", type_=bool))
+        "launches are bitwise-identical by construction)", hashed=False, type_=bool))
     straggler_grace_s: float = field(default=1.0, metadata=_meta(
-        "absolute floor below which a load is never flagged as straggling",
+        "absolute floor below which a load is never flagged as straggling", hashed=False,
         type_=float))
     degraded_mode: bool = field(default=True, metadata=_meta(
         "complete runs despite unrecoverable units: quarantine them "
-        "(type_idx=-1) and emit a failed-unit manifest instead of aborting",
+        "(type_idx=-1) and emit a failed-unit manifest instead of aborting", hashed=False,
         type_=bool))
     fault_plan: str | None = field(default=None, metadata=_meta(
         "JSON FaultPlan file for deterministic fault injection (chaos "
-        "testing; runtime.faults)", type_=str, flag="--fault-plan"))
+        "testing; runtime.faults)", hashed=False, type_=str, flag="--fault-plan"))
 
     def __post_init__(self):
         if self.cache_max_bytes is not None and self.cache_max_bytes <= 0:
@@ -400,30 +417,30 @@ class ServeSpec:
 
     tick_seconds: float = field(default=0.001, metadata=_meta(
         "how long the batcher keeps draining the queue after the first "
-        "pending request before launching (the coalescing window)",
+        "pending request before launching (the coalescing window)", hashed=False,
         type_=float, flag="--serve-tick-seconds"))
     max_batch_windows: int = field(default=32, metadata=_meta(
         "max deduplicated windows per fused launch (larger batches are "
-        "chunked)", type_=int, flag="--serve-max-batch-windows"))
+        "chunked)", hashed=False, type_=int, flag="--serve-max-batch-windows"))
     coalesce: bool = field(default=True, metadata=_meta(
         "batch concurrent requests into shared launches; off = the naive "
-        "one-launch-per-query baseline (benchmarks/serve_bench.py)",
+        "one-launch-per-query baseline (benchmarks/serve_bench.py)", hashed=False,
         type_=bool, flag="--serve-coalesce"))
     window_cache_entries: int = field(default=256, metadata=_meta(
-        "in-memory hot-window LRU entries held by the server (0 disables)",
+        "in-memory hot-window LRU entries held by the server (0 disables)", hashed=False,
         type_=int, flag="--serve-window-cache-entries"))
     # Fault tolerance (DESIGN.md §14): deadlines, launch retry, shedding.
     request_deadline_s: float | None = field(default=None, metadata=_meta(
         "fail a request's future with TimeoutError if not answered within "
-        "this many seconds of submit (default: no deadline)",
+        "this many seconds of submit (default: no deadline)", hashed=False,
         type_=float, flag="--serve-deadline-s"))
     max_queue_depth: int = field(default=0, metadata=_meta(
         "reject submits (ServerOverloadedError) once this many requests "
         "are pending — load shedding with backpressure (0 = unbounded)",
-        type_=int, flag="--serve-max-queue-depth"))
+        hashed=False, type_=int, flag="--serve-max-queue-depth"))
     retry_transient: int = field(default=2, metadata=_meta(
         "transient launch-failure re-attempts per batch chunk; exhaustion "
-        "fails only the affected windows' futures, not the server",
+        "fails only the affected windows' futures, not the server", hashed=False,
         type_=int, flag="--serve-retries"))
 
     def __post_init__(self):
@@ -530,12 +547,12 @@ class PipelineSpec:
         ``kind='file'`` sources hash by their manifest's content sha256
         (``SourceSpec.hash_payload``), so the hash pins the exact bytes the
         run reads — the key the ``ResultCache`` relies on (DESIGN.md §12)."""
-        payload = {
-            "version": self.version,
-            "source": self.source.hash_payload(),
-            "method": dataclasses.asdict(self.method),
-            "compute": dataclasses.asdict(self.compute),
-        }
+        payload: dict[str, Any] = {"version": self.version}
+        for name in HASHED_SECTIONS:
+            sub = getattr(self, name)
+            payload[name] = (sub.hash_payload()
+                             if hasattr(sub, "hash_payload")
+                             else dataclasses.asdict(sub))
         blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

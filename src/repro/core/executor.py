@@ -109,7 +109,7 @@ def _quiet_donation(f):
 
 def tree_features(moments: dists.Moments):
     cv = moments.std / jnp.maximum(jnp.abs(moments.mean), 1e-12)
-    return jnp.stack([cv, moments.skew, moments.kurt], axis=-1)
+    return jnp.stack([cv, moments.skew, moments.kurt], axis=-1)  # repro: allow[SHAPE]: fixed (P, 3) feature triple inside every executable — not a batch-shape seam
 
 
 def tree_features_np(mean, std, skew, kurt):
@@ -554,7 +554,7 @@ class PersistStage:
                     return
                 if self._error is None:
                     self._write(*item)
-            except BaseException as e:  # noqa: BLE001 — surfaced via flush()
+            except BaseException as e:  # repro: allow[ERR]: parked — flush()/raise_if_failed re-raise on the main thread
                 self._error = e
             finally:
                 self._q.task_done()
@@ -1169,7 +1169,11 @@ class StagedExecutor:
                 or u.window.line_start in failed_prev[u.window.slice_i]
             ]
 
-        self._fault_counts = {}
+        # retry/speculation threads bump these via _note_fault under the
+        # same lock; an unlocked reset here raced a concurrent bump (the
+        # LOCK rule's first true positive)
+        with self._fault_lock:
+            self._fault_counts = {}
         quarantined: dict[int, list[dict]] = {s: [] for s in requested}
         load_total = wait_total = compute_total = 0.0
         wall0 = time.perf_counter()

@@ -202,7 +202,11 @@ class PDFServer:
         self._windows_per_slice = regions.num_windows(geom, self._grid)
 
         self._queue: queue.SimpleQueue = queue.SimpleQueue()
-        self._depth = 0  # approximate queued-request gauge (lock-free)
+        # _depth and _counts are mutated from caller threads (submit/shed)
+        # AND the serving thread — every mutation holds _stats_lock (the
+        # LOCK rule enforces this); stats() reads are lock-snapshot too.
+        self._stats_lock = threading.Lock()
+        self._depth = 0  # queued-request gauge
         self._lru: OrderedDict[tuple[int, int], WindowResult] = OrderedDict()
         # per-slice window accumulation -> ResultCache store on completion
         self._parts: dict[int, dict[tuple[int, int], WindowResult]] = {}
@@ -276,15 +280,18 @@ class PDFServer:
         if self._thread is None:
             raise RuntimeError("server not started (use start() or 'with')")
         cap = self._serve.max_queue_depth
-        if cap and self._depth >= cap:
-            self._counts["shed_requests"] += 1
-            raise ServerOverloadedError(
-                f"queue depth {self._depth} at max_queue_depth={cap} — "
-                "request shed, retry with backoff")
+        if cap:
+            with self._stats_lock:
+                if self._depth >= cap:
+                    self._counts["shed_requests"] += 1
+                    raise ServerOverloadedError(
+                        f"queue depth {self._depth} at max_queue_depth={cap}"
+                        " — request shed, retry with backoff")
         pending = self._resolve_span(q)
-        self._depth += 1
-        self._counts["max_queue_depth"] = max(
-            self._counts["max_queue_depth"], self._depth)
+        with self._stats_lock:
+            self._depth += 1
+            self._counts["max_queue_depth"] = max(
+                self._counts["max_queue_depth"], self._depth)
         self._queue.put(pending)
         return pending.future
 
@@ -364,7 +371,8 @@ class PDFServer:
                             stop = True
                             break
                         batch.append(nxt)
-                self._depth -= len(batch)
+                with self._stats_lock:
+                    self._depth -= len(batch)
                 self._serve_batch(batch)
                 if stop:
                     break
@@ -397,8 +405,15 @@ class PDFServer:
             if item is not _SHUTDOWN and not item.future.done():
                 item.future.set_exception(exc)
 
+    def _bump(self, key: str, n: int = 1) -> None:
+        """All counter mutations funnel through here: ``_counts`` is shared
+        with caller threads (shed/queue-depth accounting in ``submit``), so
+        even serving-thread increments hold ``_stats_lock``."""
+        with self._stats_lock:
+            self._counts[key] += n
+
     def _serve_batch(self, batch: list[_Pending]) -> None:
-        self._counts["ticks"] += 1
+        self._bump("ticks")
         batch = self._expire(batch)
         if not batch:
             return
@@ -415,7 +430,7 @@ class PDFServer:
         now = time.perf_counter()
         rmon = self.monitors["request"]
         for i, p in enumerate(batch):
-            self._counts["queries"] += 1
+            self._bump("queries")
             kind = type(p.query).__name__
             self._by_kind[kind] = self._by_kind.get(kind, 0) + 1
             bad = None
@@ -446,7 +461,7 @@ class PDFServer:
         for p in batch:
             waited = now - p.t_submit
             if waited > deadline:
-                self._counts["deadline_expired"] += 1
+                self._bump("deadline_expired")
                 if not p.future.done():
                     p.future.set_exception(TimeoutError(
                         f"request expired: queued {waited:.3f}s > "
@@ -463,10 +478,10 @@ class PDFServer:
         the server."""
         needed: OrderedDict[tuple[int, int], str] = OrderedDict()
         for p in batch:
-            self._counts["windows_requested"] += len(p.windows)
+            self._bump("windows_requested", len(p.windows))
             for w in p.windows:
                 needed.setdefault((w.slice_i, w.line_start), w)
-        self._counts["windows_unique"] += len(needed)
+        self._bump("windows_unique", len(needed))
 
         resolved: dict[tuple[int, int], tuple[str, WindowResult]] = {}
         failed: dict[tuple[int, int], BaseException] = {}
@@ -485,7 +500,7 @@ class PDFServer:
                 lambda: ex.run_window_batch(chunk), chunk, failed)
             if results is None:
                 continue
-            self._counts["windows_computed"] += len(chunk)
+            self._bump("windows_computed", len(chunk))
             for wr in results:
                 key = (wr.window.slice_i, wr.window.line_start)
                 resolved[key] = ("computed", wr)
@@ -499,10 +514,10 @@ class PDFServer:
         resolved: dict[tuple[int, int], tuple[str, WindowResult]] = {}
         failed: dict[tuple[int, int], BaseException] = {}
         for p in batch:
-            self._counts["windows_requested"] += len(p.windows)
+            self._bump("windows_requested", len(p.windows))
             for w in p.windows:
                 key = (w.slice_i, w.line_start)
-                self._counts["windows_unique"] += 1
+                self._bump("windows_unique")
                 if key in resolved or key in failed:
                     continue
                 served = self._from_caches(key, w)
@@ -514,7 +529,7 @@ class PDFServer:
                     lambda: [ex.run_window(w)], (w,), failed)
                 if results is None:
                     continue
-                self._counts["windows_computed"] += 1
+                self._bump("windows_computed")
                 resolved[key] = ("computed", results[0])
                 self._remember(key, results[0])
         return resolved, failed
@@ -541,15 +556,15 @@ class PDFServer:
                 if not is_transient(e):
                     raise
                 last = e
-                self._counts["launch_retries"] += 1
+                self._bump("launch_retries")
                 time.sleep(0.01 * (attempt + 1))
                 continue
             lmon.finish(uid, now=time.perf_counter())
-            self._counts["launches"] += 1
+            self._bump("launches")
             return results
         for w in chunk:
             failed[(w.slice_i, w.line_start)] = last
-            self._counts["windows_failed"] += 1
+            self._bump("windows_failed")
         return None
 
     # -- cache layers ----------------------------------------------------------
@@ -557,11 +572,11 @@ class PDFServer:
     def _from_caches(self, key, w: regions.Window):
         wr = self._lru_get(key)
         if wr is not None:
-            self._counts["windows_from_memory"] += 1
+            self._bump("windows_from_memory")
             return ("memory", wr)
         wr = self._from_result_cache(w)
         if wr is not None:
-            self._counts["windows_from_disk"] += 1
+            self._bump("windows_from_disk")
             self._lru_put(key, wr)
             return ("disk", wr)
         return None
@@ -628,7 +643,7 @@ class PDFServer:
         )
         cache.store(result)
         self._stored_slices.add(s)
-        self._counts["slices_stored"] += 1
+        self._bump("slices_stored")
         del self._parts[s]
 
     # -- answers / stats -------------------------------------------------------
@@ -661,9 +676,10 @@ class PDFServer:
         )
 
     def stats(self) -> ServerStats:
-        """Counter snapshot (single-writer counters: the serving thread;
-        concurrent reads may lag by at most the in-flight tick)."""
-        c = dict(self._counts)
+        """Consistent counter snapshot (taken under ``_stats_lock``, so a
+        mid-tick read never sees a half-updated counter set)."""
+        with self._stats_lock:
+            c = dict(self._counts)
         return ServerStats(
             spec_hash=self.session.spec_hash,
             queries=c["queries"],

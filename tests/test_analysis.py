@@ -1,0 +1,326 @@
+"""Tier-1 coverage for the ``repro.analysis`` invariant checker.
+
+Three layers:
+
+* the *framework* — seeded-violation fixtures per rule (via the built-in
+  self-check), inline suppression, baseline matching/staleness, the CLI
+  exit-code contract;
+* the *repo pin* — the shipped tree plus ``analysis_baseline.json`` must be
+  clean (exit 0), and the baseline must stay within its ≤ 5-entry budget
+  with a justification on every row;
+* the *HASH ground truth* — the static rule only checks that ``hashed=``
+  tags agree with the declarations in ``api.spec``; here we check the
+  declarations agree with *runtime behavior*, by mutating every single spec
+  field and asserting ``content_hash`` moves iff the field says it should.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import fields, replace
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.engine import (
+    BaselineError,
+    analyze_source,
+    analyze_tree,
+    apply_baseline,
+    load_baseline,
+)
+from repro.analysis.selfcheck import FIXTURE_DIR, FIXTURES, run_self_check
+from repro.api import spec as spec_mod
+from repro.api.spec import (
+    HASH_EXCLUDED_FIELDS,
+    HASHED_SECTIONS,
+    PipelineSpec,
+)
+from repro.core import distributions as dists
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINE = REPO_ROOT / "analysis_baseline.json"
+PACKAGE_ROOT = Path(spec_mod.__file__).resolve().parent.parent
+
+
+# -- the framework --------------------------------------------------------------
+
+
+def test_self_check_is_clean():
+    """Every rule finds exactly its fixture's ``# expect[RULE]`` lines —
+    nothing more, nothing less — and honors the fixture's suppression."""
+    assert run_self_check() == []
+
+
+def test_every_rule_has_a_fixture():
+    covered = {r.name for _, _, rules in FIXTURES for r in rules}
+    assert covered == {r.name for r in ALL_RULES}
+
+
+def test_fixtures_seed_findings_and_suppressions():
+    """Each fixture actually produces findings for its rule (the checker is
+    not vacuously green) and carries at least one exercised suppression."""
+    for fname, relpath, rules in FIXTURES:
+        src = (FIXTURE_DIR / fname).read_text()
+        findings, suppressed = analyze_source(src, relpath, list(rules))
+        assert findings, f"{fname} seeded no findings"
+        assert suppressed >= 1, f"{fname} exercised no suppression"
+        assert {f.rule for f in findings} == {r.name for r in rules}
+
+
+DET_VIOLATION = "import time\n\n\ndef f():\n    return time.time()\n"
+
+
+def test_inline_suppression_silences_a_finding():
+    findings, suppressed = analyze_source(DET_VIOLATION, "core/x.py",
+                                          list(ALL_RULES))
+    assert [f.rule for f in findings] == ["DET"]
+    silenced = DET_VIOLATION.replace(
+        "time.time()", "time.time()  # repro: allow[DET]: test")
+    findings, suppressed = analyze_source(silenced, "core/x.py",
+                                          list(ALL_RULES))
+    assert findings == [] and suppressed == 1
+
+
+def test_wildcard_suppression():
+    silenced = DET_VIOLATION.replace("time.time()",
+                                     "time.time()  # repro: allow[*]")
+    findings, suppressed = analyze_source(silenced, "core/x.py",
+                                          list(ALL_RULES))
+    assert findings == [] and suppressed == 1
+
+
+def test_out_of_scope_paths_are_ignored():
+    findings, _ = analyze_source(DET_VIOLATION, "benchmarks_glue/x.py",
+                                 list(ALL_RULES))
+    assert findings == []
+
+
+def test_baseline_matches_by_snippet_not_line():
+    findings, _ = analyze_source(DET_VIOLATION, "core/x.py", list(ALL_RULES))
+    entry = {"rule": "DET", "path": "core/x.py",
+             "snippet": "return time.time()", "justification": "test"}
+    new, baselined, stale = apply_baseline(findings, [entry])
+    assert new == [] and len(baselined) == 1 and stale == []
+    # the same source shifted down two lines still matches (identity is the
+    # stripped line, not its number) ...
+    shifted, _ = analyze_source("\n\n" + DET_VIOLATION, "core/x.py",
+                                list(ALL_RULES))
+    new, baselined, stale = apply_baseline(shifted, [entry])
+    assert new == [] and len(baselined) == 1
+    # ... but once the offending line is gone the entry is stale.
+    new, baselined, stale = apply_baseline([], [entry])
+    assert stale == [entry]
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"findings": [
+        {"rule": "DET", "path": "core/x.py", "snippet": "x"}]}))
+    with pytest.raises(BaselineError, match="justification"):
+        load_baseline(p)
+
+
+# -- the CLI exit-code contract -------------------------------------------------
+
+
+def _seeded_tree(tmp_path: Path) -> Path:
+    root = tmp_path / "pkg"
+    (root / "core").mkdir(parents=True)
+    (root / "core" / "bad.py").write_text(DET_VIOLATION)
+    return root
+
+
+def test_cli_flags_seeded_violation(tmp_path, capsys):
+    root = _seeded_tree(tmp_path)
+    assert analysis_main(["--root", str(root)]) == 1
+    out = capsys.readouterr().out
+    assert "core/bad.py" in out and "[DET]" in out
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    root = tmp_path / "pkg"
+    (root / "core").mkdir(parents=True)
+    (root / "core" / "ok.py").write_text("X = 1\n")
+    assert analysis_main(["--root", str(root)]) == 0
+
+
+def test_cli_stale_baseline_fails(tmp_path, capsys):
+    root = tmp_path / "pkg"
+    (root / "core").mkdir(parents=True)
+    (root / "core" / "ok.py").write_text("X = 1\n")
+    b = tmp_path / "b.json"
+    b.write_text(json.dumps({"findings": [
+        {"rule": "DET", "path": "core/ok.py", "snippet": "gone()",
+         "justification": "was fixed"}]}))
+    assert analysis_main(["--root", str(root), "--baseline", str(b)]) == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    root = _seeded_tree(tmp_path)
+    assert analysis_main(["--root", str(root), "--json"]) == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["files"] == 1
+    assert [f["rule"] for f in report["new"]] == ["DET"]
+    assert report["new"][0]["snippet"] == "return time.time()"
+
+
+def test_cli_unknown_rule_is_usage_error(tmp_path, capsys):
+    assert analysis_main(["--rules", "NOPE"]) == 2
+
+
+def test_cli_rule_subset(tmp_path, capsys):
+    root = _seeded_tree(tmp_path)
+    # the violation is DET-only, so a SHAPE-only run is clean
+    assert analysis_main(["--root", str(root), "--rules", "SHAPE"]) == 0
+    assert analysis_main(["--root", str(root), "--rules", "DET"]) == 1
+
+
+# -- the repo pin ---------------------------------------------------------------
+
+
+def test_repo_tree_is_clean_under_baseline(capsys):
+    """The acceptance gate, pinned as a test: the shipped tree plus the
+    checked-in baseline is clean. CI runs the same command."""
+    rc = analysis_main(["--root", str(PACKAGE_ROOT),
+                        "--baseline", str(BASELINE)])
+    assert rc == 0, capsys.readouterr().out
+
+
+def test_repo_baseline_within_budget():
+    entries = load_baseline(BASELINE)
+    assert len(entries) <= 5, "baseline budget is 5 justified findings"
+    for e in entries:
+        assert e["justification"].strip()
+
+
+# -- HASH ground truth: hashed= tags agree with content_hash behavior -----------
+
+# One mutation per spec field, each producing a *valid* spec (post_init
+# passes) that differs from the default in that field. A few knobs are only
+# valid together (resume needs out_dir, ...) — those mutate as a dict whose
+# fields must all carry the same hashed= tag.
+_OTHER = lambda choices, cur: next(c for c in choices if c != cur)  # noqa: E731
+
+MUTATIONS: dict[str, dict[str, object]] = {
+    "source": {
+        "kind": "external",
+        "num_slices": 9, "lines_per_slice": 25, "points_per_line": 61,
+        "observations": 301, "num_layers": 17, "base_vp": 3100.0,
+        "quantize_decimals": 4, "group_block": 5, "line_block": 3,
+        "seed": 1, "throttle_mb_s": 5.0,
+    },
+    "method": {
+        "name": "grouping", "group_tol": 0.123, "rep_bucket": 65,
+        "error_bound": 0.5, "sample_frac": 0.2, "sampler": "kmeans",
+        "kmeans_iters": 11, "sample_seed": 1,
+    },
+    "method.tree": {
+        "depth": 5, "max_bins": 33, "train_slices": (0, 1),
+        "train_window_lines": 5,
+    },
+    "compute": {
+        "types": dists.TYPES_10, "num_bins": 65, "window_lines": 7,
+        "mode": "faithful",
+        "fit_backend": "__other__", "select_backend": "__other__",
+    },
+    "execution": {
+        "slices": (0,), "shards": 2, "shard": 0, "prefetch": False,
+        "prefetch_depth": 3, "async_persist": False, "out_dir": "/tmp/x",
+        "resume": {"resume": True, "out_dir": "/tmp/x"},
+        "cache_dir": "/tmp/c",
+        "cache_max_bytes": {"cache_max_bytes": 100, "cache_dir": "/tmp/c"},
+        "max_retries": 3, "retry_backoff_s": 0.1, "speculate": False,
+        "straggler_grace_s": 2.0, "degraded_mode": False,
+        "fault_plan": "plan.json",
+    },
+    "serve": {
+        "tick_seconds": 0.002, "max_batch_windows": 16, "coalesce": False,
+        "window_cache_entries": 0, "request_deadline_s": 1.0,
+        "max_queue_depth": 4, "retry_transient": 3,
+    },
+}
+
+# Fields that cannot be mutated in isolation on a valid default spec:
+# ``path``/``layout`` only mean anything for kind='file' (which hashes by
+# manifest bytes, not by these fields). They must be tagged un-hashed AND
+# appear in the source carve-out — asserted explicitly below.
+UNMUTABLE = {("source", "path"), ("source", "layout")}
+
+
+def _apply(spec: PipelineSpec, path: str, **mut) -> PipelineSpec:
+    if path == "method.tree":
+        return replace(spec, method=replace(
+            spec.method, tree=replace(spec.method.tree, **mut)))
+    return replace(spec, **{path: replace(getattr(spec, path), **mut)})
+
+
+def _resolve(value, fld):
+    if value == "__other__":
+        return _OTHER(fld.metadata["choices"], fld.default)
+    return value
+
+
+def _iter_spec_fields():
+    for path, cls, _prefix in spec_mod._GROUPS:
+        for fld in fields(cls):
+            if path == "method" and fld.name == "tree":
+                continue  # covered field-by-field via the method.tree group
+            yield path, fld
+
+
+def test_every_field_declares_hashed():
+    for path, fld in _iter_spec_fields():
+        assert isinstance(fld.metadata.get("hashed"), bool), \
+            f"{path}.{fld.name} has no machine-readable hashed= tag"
+
+
+def test_every_field_has_mutation_coverage():
+    """A new spec field must land in MUTATIONS (or the justified UNMUTABLE
+    set) or this fails — metadata ↔ hash agreement stays total forever."""
+    for path, fld in _iter_spec_fields():
+        if (path, fld.name) in UNMUTABLE:
+            continue
+        assert fld.name in MUTATIONS[path], \
+            f"no hash-behavior mutation for {path}.{fld.name}"
+
+
+def test_hashed_tags_match_content_hash_behavior():
+    base = PipelineSpec()
+    base_hash = base.content_hash()
+    for path, fld in _iter_spec_fields():
+        if (path, fld.name) in UNMUTABLE:
+            continue
+        raw = _resolve(MUTATIONS[path][fld.name], fld)
+        mut = raw if isinstance(raw, dict) else {fld.name: raw}
+        changed = _apply(base, path, **mut).content_hash() != base_hash
+        expect = fld.metadata["hashed"]
+        assert changed == expect, (
+            f"{path}.{fld.name}: hashed={expect} but mutating it "
+            f"{'changed' if changed else 'did not change'} content_hash")
+
+
+def test_unmutable_fields_are_carved_out():
+    for path, name in UNMUTABLE:
+        cls = dict((p, c) for p, c, _ in spec_mod._GROUPS)[path]
+        fld = next(f for f in fields(cls) if f.name == name)
+        assert fld.metadata["hashed"] is False
+        assert name in HASH_EXCLUDED_FIELDS[path]
+
+
+def test_declarations_cover_all_sections():
+    spec_fields = {f.name for f in fields(PipelineSpec)} - {"version"}
+    for s in HASHED_SECTIONS:
+        assert s in spec_fields
+    assert set(HASH_EXCLUDED_FIELDS) <= set(HASHED_SECTIONS)
+
+
+def test_hash_pin():
+    """The default spec's hash — BENCH ``__specs__`` rows and on-disk cache
+    entries key on it; an unintended change here silently invalidates every
+    existing cache. Bump deliberately, with a SPEC_VERSION bump."""
+    assert PipelineSpec().content_hash() == "cb207f5072e44101"
