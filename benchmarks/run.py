@@ -116,12 +116,14 @@ def main() -> None:
         fig18_bigdata,
         kernel_bench,
         serve_bench,
+        streaming_bench,
     )
 
     modules = [
         fig06_methods_small, fig07_errors, fig08_window_size, fig10_slice,
         fig13_scalability, fig15_sampling, fig18_bigdata, kernel_bench,
         cache_bench, serve_bench, fault_bench, analysis_bench,
+        streaming_bench,
     ]
     only = [tok for tok in (args.only or "").split(",") if tok]
     results: dict[str, float] = {}

@@ -21,7 +21,9 @@ from repro.api.spec import (
     ExecSpec,
     MethodSpec,
     PipelineSpec,
+    ServeSpec,
     SourceSpec,
+    StreamSpec,
     TreeSpec,
     build_source,
     source_spec_for,
@@ -36,8 +38,10 @@ __all__ = [
     "PDFSession",
     "PipelineSpec",
     "ResultCache",
+    "ServeSpec",
     "SessionReport",
     "SourceSpec",
+    "StreamSpec",
     "TreeSpec",
     "add_spec_args",
     "build_source",

@@ -68,8 +68,9 @@ class _DirLock:
     presumed orphaned by a dead holder and broken."""
 
     def __init__(self, dirpath: Path, timeout_s: float,
-                 stale_s: float = LOCK_STALE_SECONDS):
-        self.path = dirpath / ".lock"
+                 stale_s: float = LOCK_STALE_SECONDS,
+                 name: str = ".lock"):
+        self.path = dirpath / name
         self.timeout_s = timeout_s
         self.stale_s = stale_s
         self.acquired = False
@@ -135,6 +136,7 @@ class ResultCache:
         self._stats_lock = threading.Lock()
         self.evictions = 0  # entries unlinked by the size cap, this process
         self.lock_misses = 0  # stores/evictions skipped on lock contention
+        self.adoptions = 0  # entries re-keyed across an append (streaming)
         self._reap_stale_tmps(tmp_reap_seconds)
 
     def path(self, spec_hash: str, slice_i: int) -> Path:
@@ -179,10 +181,17 @@ class ResultCache:
         self._touch(f)
         return result
 
-    def store(self, result: SliceResult) -> None:
+    def store(self, result: SliceResult,
+              deps: tuple[str, ...] | None = None) -> None:
         """Persist one computed slice under its own ``spec_hash``; then, with
         a ``max_bytes`` cap, evict least-recently-used entries until the
         directory fits again (never the entry just written).
+
+        ``deps`` is the slice's chunk-dependency fingerprint (the sha256s of
+        every cube chunk the slice reads, ``file_source.slice_chunk_shas``):
+        stored inside the entry so ``adopt`` can later prove the slice's
+        input bytes are unchanged across an append (chunk-granular
+        invalidation — entries *without* deps simply can never be adopted).
 
         The write happens under the entry dir's ``.lock`` (``_DirLock``) so
         it cannot race another process's eviction pass over the same dir.
@@ -192,39 +201,23 @@ class ResultCache:
         if result.spec_hash is None or result.slice_i is None:
             raise ValueError(
                 "cannot cache a SliceResult without spec_hash and slice_i")
+        payload = {
+            "spec_hash": result.spec_hash,
+            "slice_i": result.slice_i,
+            "avg_error": result.avg_error,
+            **{name: getattr(result, name) for name in _FIELDS},
+        }
+        if deps is not None:
+            payload["deps"] = np.asarray(list(deps), dtype=np.str_)
         f = self.path(result.spec_hash, result.slice_i)
         try:
             if self.injector is not None:
                 self.injector.on_cache("store", result.slice_i)
-            f.parent.mkdir(parents=True, exist_ok=True)
-            lock = _DirLock(f.parent, self.lock_timeout_s)
-            if not lock.acquire():
-                with self._stats_lock:
-                    self.lock_misses += 1
+            if not self._write_entry(f, payload):
                 warnings.warn(
                     f"cache entry dir {f.parent} locked by another process — "
                     f"skipping store for slice {result.slice_i}", stacklevel=2)
                 return
-            try:
-                fd, tmp = tempfile.mkstemp(dir=f.parent, suffix=".tmp")
-                try:
-                    with os.fdopen(fd, "wb") as fh:
-                        np.savez(
-                            fh,
-                            spec_hash=result.spec_hash,
-                            slice_i=result.slice_i,
-                            avg_error=result.avg_error,
-                            **{name: getattr(result, name) for name in _FIELDS},
-                        )
-                    os.replace(tmp, f)
-                except BaseException:
-                    try:
-                        os.unlink(tmp)
-                    except OSError:
-                        pass
-                    raise
-            finally:
-                lock.release()
         except OSError as e:
             warnings.warn(
                 f"cache store failed for {f}: {e} — continuing without "
@@ -232,6 +225,97 @@ class ResultCache:
             return
         if self.max_bytes is not None:
             self._evict(keep=f)
+
+    def _write_entry(self, f: Path, payload: dict) -> bool:
+        """tmp + atomic-rename one entry under its dir's ``.lock``; False on
+        lock contention (counted), OSError propagates to the caller's
+        warned-skip handling."""
+        f.parent.mkdir(parents=True, exist_ok=True)
+        lock = _DirLock(f.parent, self.lock_timeout_s)
+        if not lock.acquire():
+            with self._stats_lock:
+                self.lock_misses += 1
+            return False
+        try:
+            fd, tmp = tempfile.mkstemp(dir=f.parent, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as fh:
+                    np.savez(fh, **payload)
+                os.replace(tmp, f)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        finally:
+            lock.release()
+        return True
+
+    # -- chunk-granular adoption (streaming appends) ---------------------------
+
+    def deps(self, spec_hash: str, slice_i: int) -> tuple[str, ...] | None:
+        """The chunk-dependency fingerprint stored with an entry, or None
+        when the entry is missing or predates dependency tracking."""
+        f = self.path(spec_hash, slice_i)
+        try:
+            with np.load(f) as z:
+                if "deps" not in z.files:
+                    return None
+                return tuple(str(d) for d in z["deps"])
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile):
+            return None
+
+    def adopt(self, old_hash: str, new_hash: str, slice_i: int,
+              expected_deps: tuple[str, ...]) -> bool:
+        """Re-key one slice's entry from ``old_hash`` to ``new_hash`` iff
+        its stored chunk fingerprint equals ``expected_deps``.
+
+        This is the soundness core of incremental recompute across appends:
+        the two hashes come from the SAME spec differing only in manifest
+        version, so equal fingerprints prove the slice reads identical
+        bytes under both — the old result is bitwise-valid for the new
+        hash. Anything less (missing deps, mismatched fingerprint, entry
+        gone) refuses, and the slice recomputes normally. Returns True when
+        the new entry exists afterwards."""
+        target = self.path(new_hash, slice_i)
+        if target.exists():
+            return True
+        if not expected_deps:
+            return False
+        old = self.path(old_hash, slice_i)
+        if not old.exists():
+            return False
+        try:
+            with np.load(old) as z:
+                if str(z["spec_hash"]) != old_hash or "deps" not in z.files:
+                    return False
+                if tuple(str(d) for d in z["deps"]) != tuple(expected_deps):
+                    return False
+                payload = {
+                    "spec_hash": new_hash,
+                    "slice_i": slice_i,
+                    "avg_error": float(z["avg_error"]),
+                    "deps": z["deps"],
+                    **{name: z[name] for name in _FIELDS},
+                }
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile) as e:
+            warnings.warn(f"ignoring unreadable cache entry {old}: {e}",
+                          stacklevel=2)
+            return False
+        try:
+            if not self._write_entry(target, payload):
+                return False
+        except OSError as e:
+            warnings.warn(
+                f"cache adopt failed for {target}: {e} — slice will "
+                "recompute", stacklevel=2)
+            return False
+        with self._stats_lock:
+            self.adoptions += 1
+        return True
 
     # -- size accounting / eviction -------------------------------------------
 
@@ -259,10 +343,26 @@ class ResultCache:
         entry a store just wrote) is never evicted, even when it alone
         exceeds the cap — a store must not erase its own result.
 
-        Each unlink takes its entry dir's ``.lock`` with a short timeout so
-        it cannot race another process's in-flight store into the same dir;
-        a contended dir is simply skipped this pass (the next store's
-        eviction will see it again)."""
+        The whole pass runs under a root-level ``.sweep.lock`` so two
+        processes sharing one cache_dir never trim from independent stale
+        snapshots (each would over-evict, blind to the other's unlinks); a
+        contended sweep is skipped outright — the other process is already
+        enforcing the cap. Each unlink additionally takes its entry dir's
+        ``.lock`` with a short timeout so it cannot race another process's
+        in-flight store into the same dir; a contended dir is simply
+        skipped this pass (the next store's eviction will see it again)."""
+        sweep = _DirLock(self.dir, min(0.1, self.lock_timeout_s),
+                         name=".sweep.lock")
+        if not sweep.acquire():
+            with self._stats_lock:
+                self.lock_misses += 1
+            return
+        try:
+            self._evict_locked(keep)
+        finally:
+            sweep.release()
+
+    def _evict_locked(self, keep: Path | None) -> None:
         entries = self.entries()
         total = sum(size for _, _, size in entries)
         for f, _mtime, size in entries:

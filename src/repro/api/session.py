@@ -54,6 +54,11 @@ class SessionReport:
     # compute vs slices computed (and stored). Both stay 0 with no cache.
     cache_hits: int = 0
     cache_misses: int = 0
+    # Streaming (DESIGN.md §16): entries re-keyed across an append because
+    # their chunk fingerprints were unchanged (each then counts as a hit),
+    # and slices updated by the merge path instead of a full recompute.
+    cache_adopted: int = 0
+    slices_merged: int = 0
     # Fault-tolerance totals (DESIGN.md §14): transient re-attempts,
     # speculative load re-dispatches, quarantined (degraded-mode) units,
     # and shards that died mid-run whose slices were re-dealt.
@@ -119,6 +124,10 @@ class PDFSession:
                       if spec.execution.cache_dir else None)
         self.cache_hits = 0
         self.cache_misses = 0
+        self.cache_adopted = 0
+        self.slices_merged = 0
+        self._manifest: dict | None = None  # file-source manifest, read once
+        self._lineage: tuple[str, ...] | None = None  # archived-version hashes
         if self.cache is not None and spec.source.kind == "external":
             # Same honesty gap as resume: the hash covers the pipeline
             # knobs but cannot capture an external source's data identity,
@@ -175,6 +184,14 @@ class PDFSession:
             source = self.source
             if self.injector is not None:
                 source = self.injector.wrap_source(source, shard=shard)
+            recorder = None
+            if (self.spec.stream.persist_stats
+                    and self.spec.execution.out_dir is not None):
+                from repro.streaming.stats import StatsRecorder
+
+                recorder = StatsRecorder(self.spec.execution.out_dir,
+                                         self.spec.compute.num_bins,
+                                         spec_hash=self.spec_hash)
             self._executors[shard] = StagedExecutor(
                 self.spec.pdf_config(),
                 source,
@@ -183,6 +200,7 @@ class PDFSession:
                 exec_config=self.spec.exec_config(),
                 spec_hash=self.spec_hash,
                 injector=self.injector,
+                stats_recorder=recorder,
             )
         return self._executors[shard]
 
@@ -227,10 +245,12 @@ class PDFSession:
                 stacklevel=2)
         exe = self.spec.execution
         bound = self.spec.method.error_bound
+        resolved = self.resolve_slices(slices)
+        self._adopt_unchanged(resolved)
         lost: list[int] = []
         pending: list[int] = []  # slices stranded on dead shards, in order
         healthy: list[int] = []
-        for a in assign_slices(self.resolve_slices(slices), exe.shards):
+        for a in assign_slices(resolved, exe.shards):
             if exe.shard is not None and a.shard != exe.shard:
                 continue
             dead = False
@@ -247,6 +267,18 @@ class PDFSession:
                         yield hit
                         continue
                     self.cache_misses += 1
+                merged = self._try_merge(s)
+                if merged is not None:
+                    # merge-mode incremental update (streaming/incremental):
+                    # NOT stored in the ResultCache — merged results are
+                    # path-dependent (within the recorded ulp budget, not
+                    # bitwise), and the cache serves only bitwise entries.
+                    if bound is not None:
+                        merged.error_bound_satisfied = merged.avg_error <= bound
+                    self._slices_done += 1
+                    self.slices_merged += 1
+                    yield merged
+                    continue
                 if ex is None:
                     ex = self.executor(a.shard)
                 try:
@@ -295,8 +327,113 @@ class PDFSession:
                     f"({len(result.quarantined)} quarantined unit(s)) — "
                     "not stored in the result cache", stacklevel=2)
             else:
-                self.cache.store(result)
+                self.cache.store(result, deps=self._slice_deps(s))
         return result
+
+    # -- streaming: adoption / merge updates (DESIGN.md §16) -------------------
+
+    def _file_source(self):
+        """The underlying ``FileCubeSource`` (unwrapping a throttle), or
+        None when the session does not read a file cube."""
+        if self.spec.source.kind != "file":
+            return None
+        src = getattr(self.source, "inner", self.source)
+        return src if hasattr(src, "load_window_obs") else None
+
+    def _slice_deps(self, s: int) -> tuple[str, ...] | None:
+        """The slice's chunk-dependency fingerprint under the manifest this
+        session hashed against (read once — a manifest swapped mid-run must
+        not split the session across two fingerprints)."""
+        if self.spec.source.kind != "file":
+            return None
+        from repro.data.file_source import read_manifest, slice_chunk_shas
+
+        if self._manifest is None:
+            self._manifest = read_manifest(self.spec.source.path)
+        return slice_chunk_shas(self._manifest, s)
+
+    def _adopt_unchanged(self, slices) -> None:
+        """Chunk-granular invalidation, the adoption half: re-key cached
+        entries from earlier manifest versions whose chunk fingerprints are
+        unchanged by the appends since (``ResultCache.adopt`` proves that
+        per slice), so only chunk-overlapping slices miss. Most-recent
+        version first; each adopted entry becomes a plain cache hit."""
+        if (self.cache is None or not self.spec.stream.incremental
+                or self._file_source() is None):
+            return
+        from repro.data.file_source import manifest_version
+
+        try:
+            cur = manifest_version(self.spec.source.path)
+        except (OSError, ValueError, KeyError):
+            return
+        remaining = [s for s in slices
+                     if not self.cache.path(self.spec_hash, s).exists()]
+        for v in range(cur - 1, 0, -1):
+            if not remaining:
+                return
+            try:
+                old_hash = self.spec.content_hash(manifest_version=v)
+            except (OSError, ValueError, KeyError):
+                return  # archived manifest missing: nothing older to scan
+            still = []
+            for s in remaining:
+                deps = self._slice_deps(s)
+                if deps and self.cache.adopt(old_hash, self.spec_hash, s, deps):
+                    self.cache_adopted += 1
+                else:
+                    still.append(s)
+            remaining = still
+
+    def _lineage_hashes(self) -> tuple[str, ...]:
+        """The spec's hashes at every archived manifest version, newest
+        first — the set of stamps a sidecar written by an ancestor run of
+        THIS spec over THIS cube may legitimately carry (``merge_slice``
+        accepts them after a cache-hit persist re-stamped the watermark
+        without rewriting the sidecars). Memoized per spec hash;
+        ``refresh_source`` invalidates."""
+        if self._lineage is None:
+            from repro.data.file_source import manifest_version
+
+            hashes: list[str] = []
+            try:
+                cur = manifest_version(self.spec.source.path)
+                for v in range(cur - 1, 0, -1):
+                    hashes.append(self.spec.content_hash(manifest_version=v))
+            except (OSError, ValueError, KeyError):
+                pass  # unversioned/missing archives: lineage ends here
+            self._lineage = tuple(hashes)
+        return self._lineage
+
+    def _try_merge(self, s: int):
+        """The merge-mode incremental path for one slice, or None to fall
+        through to a full recompute (strict mode, non-file sources, no
+        persisted prior run, or any failed merge precondition)."""
+        if (self.spec.stream.update_mode != "merge"
+                or self.spec.execution.out_dir is None):
+            return None
+        src = self._file_source()
+        if src is None:
+            return None
+        from repro.streaming.incremental import merge_slice
+
+        return merge_slice(self.spec, src, s, self.spec_hash,
+                           lineage=self._lineage_hashes())
+
+    def refresh_source(self) -> str:
+        """Re-open a file source at the cube's current manifest version and
+        re-hash the spec — the serve layer's ``invalidate`` and ``run_pdf
+        --watch`` call this after an append lands. Executors are dropped
+        (their sources pin the old version); returns the new spec hash."""
+        from repro.api.spec import build_source as _build
+
+        if self.spec.source.kind == "file":
+            self.source = _build(self.spec.source)
+        self._manifest = None
+        self._lineage = None
+        self._executors.clear()
+        self._spec_hash = self.spec.content_hash()
+        return self._spec_hash
 
     def _persist_cached(self, result: SliceResult, resume: bool = False) -> None:
         """Honor ``ExecSpec.out_dir`` for cache-served slices: a hit skips
@@ -378,6 +515,8 @@ class PDFSession:
             windows=windows,
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
+            cache_adopted=self.cache_adopted,
+            slices_merged=self.slices_merged,
             retries=retries,
             speculations=speculations,
             quarantined_units=quarantined,

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import warnings
 from dataclasses import dataclass, field, fields
 from typing import Any
 
@@ -48,7 +49,11 @@ from repro.core.executor import (
 # Version 2: SourceSpec grew kind='file' (+ path/layout) and file sources
 # hash by their manifest's content sha256 — a semantic change to the hash
 # payload, so version-1 specs must be re-emitted.
-SPEC_VERSION = 2
+# Version 3: the ``stream`` section (StreamSpec — streaming ingestion /
+# incremental recompute). Staging-only, so version-2 specs upgrade in place:
+# ``from_dict`` loads them with ``stream`` defaults and a warning (the
+# forward-compat shim), not an error.
+SPEC_VERSION = 3
 
 MODES = ("faithful", "fused")
 SOURCE_KINDS = ("simulation", "external", "file")
@@ -165,7 +170,7 @@ class SourceSpec:
             raise ValueError(
                 f"source.throttle_mb_s must be > 0, got {self.throttle_mb_s}")
 
-    def hash_payload(self) -> dict:
+    def hash_payload(self, manifest_version: int | None = None) -> dict:
         """The source's contribution to ``content_hash``.
 
         ``throttle_mb_s`` is always excluded (the NFS model only sleeps);
@@ -176,11 +181,18 @@ class SourceSpec:
         payload is the manifest's content sha256 instead: the hash tracks
         the actual bytes, so re-exporting different data to the same path
         is a different computation. Reads the manifest — a file spec whose
-        cube does not exist (yet) cannot be hashed, by design."""
+        cube does not exist (yet) cannot be hashed, by design.
+
+        ``manifest_version`` pins an archived manifest version of an
+        append-able cube (default: the current one) — the streaming layer
+        hashes the same spec at two versions to re-key unchanged slices
+        across an append (``ResultCache.adopt``)."""
         if self.kind == "file":
             from repro.data.file_source import manifest_sha
 
-            return {"kind": "file", "manifest_sha256": manifest_sha(self.path)}
+            return {"kind": "file",
+                    "manifest_sha256": manifest_sha(self.path,
+                                                    version=manifest_version)}
         d = dataclasses.asdict(self)
         for name in HASH_EXCLUDED_FIELDS["source"]:
             d.pop(name)
@@ -469,6 +481,55 @@ class ServeSpec:
                 f"got {self.retry_transient}")
 
 
+UPDATE_MODES = ("merge", "strict")
+
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """Streaming ingestion (``repro.streaming``): how a run reacts to cube
+    appends. Staging-only — excluded from ``content_hash`` like ``ExecSpec``.
+    That exclusion is sound because the cache never holds merge-path
+    results: cached entries are always fresh full computes (or dep-verified
+    adoptions of one), bitwise-reproducible by the hash rule, while
+    ``update_mode='merge'`` updates live only in the persisted windows,
+    whose watermarks record the merge tolerance (``MERGE_ULP_BUDGET``)."""
+
+    update_mode: str = field(default="merge", metadata=_meta(
+        "how appends update already-fitted windows: 'merge' re-fits from "
+        "merged sufficient statistics (histograms bitwise, moments within "
+        "the recorded ulp budget), 'strict' recomputes affected windows "
+        "in full for a bitwise guarantee", hashed=False, type_=str,
+        choices=list(UPDATE_MODES), flag="--stream-update-mode"))
+    persist_stats: bool = field(default=False, metadata=_meta(
+        "write per-window sufficient-statistic sidecars next to persisted "
+        ".npz windows (required for merge-mode updates of old windows)",
+        hashed=False, type_=bool, flag="--stream-persist-stats"))
+    incremental: bool = field(default=True, metadata=_meta(
+        "adopt cached slices whose chunk fingerprints are unchanged across "
+        "an append, recomputing only touched slices", hashed=False,
+        type_=bool, flag="--stream-incremental"))
+    poll_interval_s: float = field(default=1.0, metadata=_meta(
+        "manifest-version polling interval for run_pdf --watch", hashed=False,
+        type_=float, flag="--stream-poll-interval-s"))
+    max_updates: int | None = field(default=None, metadata=_meta(
+        "stop --watch after applying this many appends (default: run until "
+        "interrupted)", hashed=False, type_=int, flag="--stream-max-updates"))
+
+    def __post_init__(self):
+        if self.update_mode not in UPDATE_MODES:
+            raise ValueError(
+                f"stream.update_mode must be one of {UPDATE_MODES}, "
+                f"got {self.update_mode!r}")
+        if not self.poll_interval_s > 0:
+            raise ValueError(
+                f"stream.poll_interval_s must be > 0, "
+                f"got {self.poll_interval_s}")
+        if self.max_updates is not None and self.max_updates < 1:
+            raise ValueError(
+                f"stream.max_updates must be >= 1 (or null), "
+                f"got {self.max_updates}")
+
+
 _GROUPS: tuple[tuple[str, type, str], ...] = (
     # (dotted path into PipelineSpec, dataclass, auto flag prefix)
     ("source", SourceSpec, ""),
@@ -477,6 +538,7 @@ _GROUPS: tuple[tuple[str, type, str], ...] = (
     ("compute", ComputeSpec, ""),
     ("execution", ExecSpec, ""),
     ("serve", ServeSpec, ""),
+    ("stream", StreamSpec, ""),
 )
 
 
@@ -494,6 +556,7 @@ class PipelineSpec:
     compute: ComputeSpec = ComputeSpec()
     execution: ExecSpec = ExecSpec()
     serve: ServeSpec = ServeSpec()
+    stream: StreamSpec = StreamSpec()
 
     def __post_init__(self):
         if self.version != SPEC_VERSION:
@@ -523,10 +586,21 @@ class PipelineSpec:
         parts = {}
         for name, sub_cls in (("source", SourceSpec), ("method", MethodSpec),
                               ("compute", ComputeSpec), ("execution", ExecSpec),
-                              ("serve", ServeSpec)):
+                              ("serve", ServeSpec), ("stream", StreamSpec)):
             if name in d:
                 parts[name] = _sub_from_dict(sub_cls, d.pop(name), name)
         version = d.pop("version", SPEC_VERSION)
+        if version == SPEC_VERSION - 1:
+            # Forward-compat shim: version 3 only ADDED the staging-only
+            # ``stream`` section, so a version-2 spec is a valid version-3
+            # spec with stream defaults. Note the upgrade DOES change the
+            # spec's content_hash (the version feeds the hash payload) —
+            # persisted watermarks from the old build won't resume against
+            # it, which is exactly the resume-mismatch detection working.
+            warnings.warn(
+                f"upgrading spec from version {version} to {SPEC_VERSION}: "
+                "the new 'stream' section takes its defaults", stacklevel=2)
+            version = SPEC_VERSION
         if d:
             raise ValueError(f"unknown spec keys: {sorted(d)}")
         return cls(version=version, **parts)
@@ -537,20 +611,22 @@ class PipelineSpec:
 
     # -- provenance ------------------------------------------------------------
 
-    def content_hash(self) -> str:
+    def content_hash(self, manifest_version: int | None = None) -> str:
         """Stable hash of the result-defining subtree (version + source +
         method + compute). Two specs with equal hashes must produce bitwise
-        identical per-point results; ``execution`` and ``serve`` are
-        staging-only and excluded, and so is ``source.throttle_mb_s`` — the NFS-bandwidth
-        model only *sleeps* (data is unchanged), so a throttled benchmark
-        run and its unthrottled resume are the same computation.
+        identical per-point results; ``execution``, ``serve`` and ``stream``
+        are staging-only and excluded, and so is ``source.throttle_mb_s`` — the
+        NFS-bandwidth model only *sleeps* (data is unchanged), so a throttled
+        benchmark run and its unthrottled resume are the same computation.
         ``kind='file'`` sources hash by their manifest's content sha256
         (``SourceSpec.hash_payload``), so the hash pins the exact bytes the
-        run reads — the key the ``ResultCache`` relies on (DESIGN.md §12)."""
+        run reads — the key the ``ResultCache`` relies on (DESIGN.md §12).
+        ``manifest_version`` hashes a file source at an archived manifest
+        version (streaming adoption; see ``SourceSpec.hash_payload``)."""
         payload: dict[str, Any] = {"version": self.version}
         for name in HASHED_SECTIONS:
             sub = getattr(self, name)
-            payload[name] = (sub.hash_payload()
+            payload[name] = (sub.hash_payload(manifest_version)
                              if hasattr(sub, "hash_payload")
                              else dataclasses.asdict(sub))
         blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))

@@ -711,6 +711,7 @@ class StagedExecutor:
         exec_config: ExecutorConfig | None = None,
         spec_hash: str | None = None,
         injector=None,
+        stats_recorder=None,
     ):
         self.config = config
         self.data = data_source
@@ -720,6 +721,11 @@ class StagedExecutor:
         self.exec_config = exec_config or ExecutorConfig()
         self.spec_hash = spec_hash  # provenance stamp (api/spec.py hash)
         self.injector = injector  # faults.FaultInjector (persist-path hook)
+        # streaming.stats.StatsRecorder (or any callable taking
+        # (window, values, moments)): observes each full window's staged
+        # values + moments before the fit donates the buffer, so merge-able
+        # sufficient statistics can be persisted without a second read.
+        self.stats_recorder = stats_recorder
         self.cache = ReuseCache()
         if ("ml" in config.method or config.method == "sampling") and tree is None:
             raise ValueError(f"method {config.method!r} requires a decision tree")
@@ -1320,6 +1326,11 @@ class StagedExecutor:
             sample_idx = self._draw_sample(total_points, w)
             values = values[jnp.asarray(sample_idx)]
         moments = jax.block_until_ready(self._moments(values))
+        if self.stats_recorder is not None and sample_idx is None:
+            # Must run before _select_and_fit: the fit executables donate
+            # ``values``. Sampled windows are skipped — their stats describe
+            # a draw, not the window, and cannot merge with append data.
+            self.stats_recorder(w, values, dists.Moments(*moments))
         t1 = time.perf_counter()
         cmon.start(uid, now=t1)
         try:

@@ -202,6 +202,13 @@ class FitBackend(NamedTuple):
     ``moments`` maps values (..., n) -> Moments; ``histogram`` is the
     chain-path histogram_fn (also used by ``mode='faithful'``); ``fit_all``
     and ``fit_predicted`` are Algorithms 3 and 4.
+
+    ``merge_stats``/``merge_hist`` are the streaming layer's pairwise
+    sufficient-statistic and histogram-count merges (repro.streaming.moments)
+    in the backend's own array module: host/float64 for ``reference``, jnp
+    for the kernel backends. Same formulas either way — the registry carries
+    them so incremental updates pick the path matching the backend that
+    produced the stats.
     """
 
     name: str
@@ -209,12 +216,19 @@ class FitBackend(NamedTuple):
     histogram: Callable[..., jax.Array]
     fit_all: Callable[..., FitResult]  # (values, moments, types, num_bins, mode)
     fit_predicted: Callable[..., FitResult]  # (values, moments, pred, types, num_bins)
+    merge_stats: Callable = None  # (SuffStats, SuffStats) -> SuffStats
+    merge_hist: Callable = None  # (counts, counts) -> counts
 
 
 @functools.lru_cache(maxsize=16)
 def get_fit_backend(name: str = "fused", num_bins: int = 64) -> FitBackend:
     """Resolve a ``FIT_BACKENDS`` name; kernel imports stay lazy so the
     reference backend never touches Pallas."""
+    # Lazy like the kernel imports: fitting must stay importable without
+    # pulling the streaming subsystem in (and vice versa — streaming.moments
+    # imports only distributions from core).
+    from repro.streaming import moments as sm
+
     if name == "reference":
         hist = pe.histogram_scatter
 
@@ -228,7 +242,8 @@ def get_fit_backend(name: str = "fused", num_bins: int = 64) -> FitBackend:
                 values, moments, pred, types, num_bins, histogram_fn=hist
             )
 
-        return FitBackend(name, dists.moments_from_values, hist, fit_all, fit_predicted)
+        return FitBackend(name, dists.moments_from_values, hist, fit_all,
+                          fit_predicted, sm.merge_suffstats, sm.merge_counts)
 
     if name == "kernels":
         from repro.kernels.hist import ops as hops
@@ -245,7 +260,9 @@ def get_fit_backend(name: str = "fused", num_bins: int = 64) -> FitBackend:
                 values, moments, pred, types, num_bins, histogram_fn=hops.histogram
             )
 
-        return FitBackend(name, mops.moments, hops.histogram, fit_all, fit_predicted)
+        return FitBackend(name, mops.moments, hops.histogram, fit_all,
+                          fit_predicted, sm.merge_suffstats_jnp,
+                          sm.merge_counts_jnp)
 
     if name == "fused":
         from repro.kernels.fitpdf import ops as fops
@@ -270,6 +287,8 @@ def get_fit_backend(name: str = "fused", num_bins: int = 64) -> FitBackend:
             errs = fops.fit_errors(values, moments, params_all, types, num_bins)
             return select_predicted(params_all, errs, pred)
 
-        return FitBackend(name, moments_fn, pe.histogram_scatter, fit_all, fit_predicted)
+        return FitBackend(name, moments_fn, pe.histogram_scatter, fit_all,
+                          fit_predicted, sm.merge_suffstats_jnp,
+                          sm.merge_counts_jnp)
 
     raise ValueError(f"fit_backend must be one of {FIT_BACKENDS}, got {name!r}")

@@ -50,7 +50,15 @@ from repro.core.regions import CubeGeometry, Window, iter_windows
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_NAME = "repro-cube"
+# Format 1: immutable snapshot cubes (export_cube). Format 2 adds the
+# streaming-append extensions — a monotone manifest ``version``, archived
+# ``manifest.vNNNNNN.json`` bodies, and delta chunks carrying an
+# ``obs_start``/``obs_end`` observation range (streaming/append.py). A
+# reader speaks both; export still writes format 1 so snapshot cubes stay
+# readable by builds that predate streaming.
 FORMAT_VERSION = 1
+APPEND_FORMAT_VERSION = 2
+SUPPORTED_FORMAT_VERSIONS = (1, 2)
 LAYOUTS = ("chunked",)
 DEFAULT_LINES_PER_CHUNK = 16
 
@@ -79,31 +87,104 @@ def _manifest_content_sha(manifest: dict) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
-def read_manifest(path: str | Path) -> dict:
-    """Load + sanity-check a cube directory's manifest."""
+def _archive_name(version: int) -> str:
+    return f"manifest.v{version:06d}.json"
+
+
+def read_manifest(path: str | Path, version: int | None = None) -> dict:
+    """Load + sanity-check a cube directory's manifest.
+
+    ``version=None`` reads the current manifest; an explicit version reads
+    that snapshot of the cube's history — the current manifest if it *is*
+    that version, else the ``manifest.vNNNNNN.json`` body an append
+    archived (streaming/append.py)."""
     f = Path(path) / MANIFEST_NAME
     if not f.exists():
         raise ValueError(
             f"no cube manifest at {f} — export one first with "
             "data.file_source.export_cube(source, out_dir)")
     manifest = json.loads(f.read_text())
+    current = int(manifest.get("version", 1))
+    if version is not None and version != current:
+        if not 1 <= version < current:
+            raise ValueError(
+                f"cube at {path} has no version {version} "
+                f"(current is {current})")
+        arch = Path(path) / _archive_name(version)
+        if not arch.exists():
+            raise ValueError(
+                f"cube at {path}: archived manifest {arch.name} is missing "
+                f"(crash-orphaned history?) — only the current version "
+                f"{current} is readable")
+        manifest = json.loads(arch.read_text())
     if manifest.get("format") != FORMAT_NAME:
         raise ValueError(
             f"{f} is not a {FORMAT_NAME} manifest (format="
             f"{manifest.get('format')!r})")
-    if manifest.get("format_version") != FORMAT_VERSION:
+    if manifest.get("format_version") not in SUPPORTED_FORMAT_VERSIONS:
         raise ValueError(
             f"cube format version {manifest.get('format_version')} "
-            f"unsupported (this build reads version {FORMAT_VERSION})")
+            f"unsupported (this build reads versions "
+            f"{SUPPORTED_FORMAT_VERSIONS})")
     return manifest
 
 
-def manifest_sha(path: str | Path) -> str:
+def manifest_sha(path: str | Path, version: int | None = None) -> str:
     """The cube's ``content_sha256`` — what ``SourceSpec(kind='file')``
     hashes by. Recomputed from the manifest body (not trusted from the
     stored field), so a hand-edited manifest cannot alias another cube's
-    provenance."""
-    return _manifest_content_sha(read_manifest(path))
+    provenance. ``version`` addresses an archived manifest — how the
+    incremental layer reconstructs the spec hash a *previous* version of
+    the cube ran under (streaming/incremental.py)."""
+    return _manifest_content_sha(read_manifest(path, version=version))
+
+
+def manifest_version(path: str | Path) -> int:
+    """The cube's current manifest version (1 for never-appended cubes —
+    format-1 manifests carry no ``version`` field)."""
+    return int(read_manifest(path).get("version", 1))
+
+
+def chunk_obs_range(entry: dict, base_obs: int) -> tuple[int, int]:
+    """A chunk's observation range ``[obs_start, obs_end)``. Base chunks
+    (format 1, or the original export inside an appended cube) carry no
+    range and cover the base observations."""
+    return (int(entry.get("obs_start", 0)),
+            int(entry.get("obs_end", base_obs)))
+
+
+def slice_chunk_shas(manifest: dict, slice_i: int) -> tuple[str, ...]:
+    """The slice's chunk sha256 set in canonical (obs_start, line_start)
+    order — the per-slice *dependency fingerprint* the chunk-granular
+    ``ResultCache`` invalidation records and compares (api/cache.py):
+    equal fingerprints ⇒ the slice's input bytes are unchanged."""
+    base_obs = int(manifest["num_observations"])
+    mine = [c for c in manifest["chunks"] if c["slice"] == slice_i]
+    mine.sort(key=lambda c: (chunk_obs_range(c, base_obs)[0], c["line_start"]))
+    return tuple(c["sha256"] for c in mine)
+
+
+def chunk_diff(path: str | Path, old_version: int,
+               new_version: int | None = None) -> dict:
+    """What changed between two versions of a cube: the slices whose chunk
+    set differs and the chunk entries present only in the newer version.
+    Drives chunk-granular invalidation — a consumer holding results for
+    ``old_version`` needs to recompute exactly ``changed_slices`` and can
+    keep everything else."""
+    old_m = read_manifest(path, version=old_version)
+    new_m = read_manifest(path, version=new_version)
+    old_files = {c["file"] for c in old_m["chunks"]}
+    new_chunks = [c for c in new_m["chunks"] if c["file"] not in old_files]
+    num_slices = int(new_m["num_slices"])
+    changed = sorted({
+        s for s in range(num_slices)
+        if slice_chunk_shas(old_m, s) != slice_chunk_shas(new_m, s)})
+    return {
+        "old_version": int(old_m.get("version", 1)),
+        "new_version": int(new_m.get("version", 1)),
+        "changed_slices": changed,
+        "new_chunks": new_chunks,
+    }
 
 
 def export_cube(
@@ -111,6 +192,7 @@ def export_cube(
     out_dir: str | Path,
     lines_per_chunk: int = DEFAULT_LINES_PER_CHUNK,
     progress: Callable[[int, int], None] | None = None,
+    overwrite: bool = False,
 ):
     """Snapshot a window-addressable source to a chunked cube directory.
 
@@ -124,7 +206,11 @@ def export_cube(
 
     The manifest is written last (tmp + atomic rename): a crashed export
     leaves a directory without a manifest, which every reader refuses —
-    never a readable-but-truncated cube.
+    never a readable-but-truncated cube. A directory that already holds a
+    cube (its ``manifest.json`` exists) is refused *before any chunk is
+    written* unless ``overwrite=True`` — re-exporting over a live cube
+    would silently re-key every spec hash derived from it, so clobbering
+    must be explicit (``--force`` on the CLI surface).
     """
     from repro.api.spec import SourceSpec, build_source
 
@@ -138,6 +224,11 @@ def export_cube(
 
     geom: CubeGeometry = source.geometry
     out = Path(out_dir)
+    if not overwrite and (out / MANIFEST_NAME).exists():
+        raise FileExistsError(
+            f"{out} already holds a cube ({MANIFEST_NAME} exists) — "
+            "exporting over it would replace its data identity; pass "
+            "overwrite=True (--force) to clobber, or export elsewhere")
     out.mkdir(parents=True, exist_ok=True)
 
     chunks = []
@@ -212,40 +303,75 @@ class FileCubeSource:
     """
 
     def __init__(self, path: str | Path, verify_reads: bool = False,
-                 read_hook: Callable | None = None):
+                 read_hook: Callable | None = None,
+                 version: int | None = None):
         self.path = Path(path)
         self.verify_reads = bool(verify_reads)
         self.read_hook = read_hook
-        self.manifest = read_manifest(self.path)
+        self.manifest = read_manifest(self.path, version=version)
         m = self.manifest
+        self.version = int(m.get("version", 1))
         self.geometry = CubeGeometry(
             m["num_slices"], m["lines_per_slice"], m["points_per_line"])
+        # The BASE observation count (the original export's). Appended
+        # slices carry extra observation *layers* on top — per-slice totals
+        # come from slice_observations().
         self.num_observations = m["num_observations"]
         self.content_sha256 = _manifest_content_sha(m)
-        # Per-slice chunk index, ordered by line_start — and validated to
-        # tile every slice exactly: a manifest with a gap (hand-edited,
-        # partially synced) would otherwise make load_window silently
-        # return uninitialized buffer rows for the uncovered lines.
+        # Per-slice chunk index, ordered by (obs_start, line_start) — and
+        # validated so load_window can never silently return uninitialized
+        # buffer regions: every observation layer must tile the slice's
+        # lines exactly, and the layers themselves must be contiguous in
+        # observations ([0, base), [base, e1), [e1, e2), ...).
         self._chunks: dict[int, list[dict]] = {}
         for c in m["chunks"]:
             self._chunks.setdefault(c["slice"], []).append(c)
-        for lst in self._chunks.values():
-            lst.sort(key=lambda c: c["line_start"])
+        self._slice_obs: dict[int, int] = {}
         for s in range(self.geometry.num_slices):
-            line = 0
-            for c in self._chunks.get(s, ()):
-                if c["line_start"] != line or c["line_end"] <= c["line_start"]:
-                    break
-                line = c["line_end"]
-            if line != self.geometry.lines_per_slice:
+            lst = self._chunks.get(s, ())
+            layers: dict[tuple[int, int], list[dict]] = {}
+            for c in lst:
+                layers.setdefault(chunk_obs_range(c, self.num_observations),
+                                  []).append(c)
+            obs_end = 0
+            for (o0, o1), layer in sorted(layers.items()):
+                if o0 != obs_end or o1 <= o0:
+                    raise ValueError(
+                        f"cube manifest at {self.path} slice {s}: "
+                        f"observation layer [{o0}, {o1}) does not extend "
+                        f"the covered range [0, {obs_end})")
+                layer.sort(key=lambda c: c["line_start"])
+                line = 0
+                for c in layer:
+                    if c["line_start"] != line or c["line_end"] <= c["line_start"]:
+                        break
+                    line = c["line_end"]
+                if line != self.geometry.lines_per_slice:
+                    raise ValueError(
+                        f"cube manifest at {self.path} does not cover slice "
+                        f"{s} (obs [{o0}, {o1})): chunks tile lines "
+                        f"[0, {line}) of [0, {self.geometry.lines_per_slice})")
+                obs_end = o1
+            if obs_end == 0:
                 raise ValueError(
-                    f"cube manifest at {self.path} does not cover slice {s}: "
-                    f"chunks tile lines [0, {line}) of "
-                    f"[0, {self.geometry.lines_per_slice})")
+                    f"cube manifest at {self.path} has no chunks for "
+                    f"slice {s}")
+            self._slice_obs[s] = obs_end
+            lst = sorted(
+                lst, key=lambda c: (
+                    chunk_obs_range(c, self.num_observations)[0],
+                    c["line_start"]))
+            self._chunks[s] = lst
         self._mmaps: OrderedDict[str, np.ndarray] = OrderedDict()
         # Speculative re-dispatch (core.executor) can read two windows of
         # one source from two threads; the LRU mutations must not race.
         self._mmap_lock = threading.Lock()
+
+    def slice_observations(self, slice_i: int) -> int:
+        """Total observations for one slice — the base export's count plus
+        every appended layer's (appends touch a subset of slices, so the
+        per-slice totals may differ)."""
+        return self._slice_obs[slice_i]
 
     def enable_read_verification(self, read_hook: Callable | None = None):
         """Arm verified (full-load + sha256 + one re-read) window reads; see
@@ -264,8 +390,9 @@ class FileCubeSource:
                 self._mmaps.move_to_end(name)
                 return self._mmaps[name]
         arr = np.load(self.path / name, mmap_mode="r")
+        o0, o1 = chunk_obs_range(entry, self.num_observations)
         expect = (entry["line_end"] - entry["line_start"],
-                  self.geometry.points_per_line, self.num_observations)
+                  self.geometry.points_per_line, o1 - o0)
         if arr.shape != expect or arr.dtype != np.float32:
             raise ValueError(
                 f"cube chunk {name}: shape {arr.shape} dtype {arr.dtype} "
@@ -300,26 +427,46 @@ class FileCubeSource:
                     f"manifest {entry['sha256']}")
 
     def load_window(self, w: Window) -> np.ndarray:
+        if w.slice_i not in self._slice_obs:
+            raise ValueError(f"window {w} outside cube {self.geometry}")
+        return self.load_window_obs(w, 0, self._slice_obs[w.slice_i])
+
+    def load_window_obs(self, w: Window, obs_start: int,
+                        obs_end: int) -> np.ndarray:
+        """One window restricted to the observation range ``[obs_start,
+        obs_end)`` — ``load_window`` is the full range. The restricted form
+        is the streaming delta read: an incremental update touches only the
+        chunks of the appended layers, O(new data) bytes, never the base
+        cube (streaming/incremental.py)."""
         geom = self.geometry
         if not (0 <= w.slice_i < geom.num_slices
                 and 0 <= w.line_start < w.line_end <= geom.lines_per_slice):
             raise ValueError(f"window {w} outside cube {geom}")
-        out = np.empty(
-            (w.num_lines, geom.points_per_line, self.num_observations),
-            dtype=np.float32)
+        slice_obs = self._slice_obs[w.slice_i]
+        if not 0 <= obs_start < obs_end <= slice_obs:
+            raise ValueError(
+                f"observation range [{obs_start}, {obs_end}) outside the "
+                f"slice's [0, {slice_obs})")
+        width = obs_end - obs_start
+        out = np.empty((w.num_lines, geom.points_per_line, width),
+                       dtype=np.float32)
         for entry in self._chunks.get(w.slice_i, ()):
-            if entry["line_end"] <= w.line_start:
+            o0, o1 = chunk_obs_range(entry, self.num_observations)
+            if o1 <= obs_start or o0 >= obs_end:
                 continue
-            if entry["line_start"] >= w.line_end:
-                break
+            if entry["line_end"] <= w.line_start or entry["line_start"] >= w.line_end:
+                continue
             lo = max(w.line_start, entry["line_start"])
             hi = min(w.line_end, entry["line_end"])
+            co0 = max(o0, obs_start)
+            co1 = min(o1, obs_end)
             src = (self._read_chunk_verified(entry) if self.verify_reads
                    else self._mmap(entry))
-            out[lo - w.line_start : hi - w.line_start] = src[
-                lo - entry["line_start"] : hi - entry["line_start"]]
-        return out.reshape(w.num_lines * geom.points_per_line,
-                           self.num_observations)
+            out[lo - w.line_start : hi - w.line_start, :,
+                co0 - obs_start : co1 - obs_start] = src[
+                lo - entry["line_start"] : hi - entry["line_start"], :,
+                co0 - o0 : co1 - o0]
+        return out.reshape(w.num_lines * geom.points_per_line, width)
 
     def verify(self) -> None:
         """Re-hash every chunk against the manifest; raises on the first
@@ -329,4 +476,5 @@ class FileCubeSource:
             self._read_chunk_verified(c)
 
     def nominal_bytes(self) -> int:
-        return (self.geometry.total_points * self.num_observations * 4)
+        return sum(self.geometry.points_per_slice * obs * 4
+                   for obs in self._slice_obs.values())

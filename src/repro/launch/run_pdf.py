@@ -11,9 +11,18 @@ index against the shared filesystem. Watermark files are per-slice and
 stamped with the spec's content hash, so ``--resume`` refuses to mix
 windows persisted by a *different* computation (DESIGN.md §API).
 
+``--watch`` (kind='file' sources) keeps the process alive after the first
+run, polling the cube's manifest version every ``stream.poll_interval_s``
+seconds: when an append lands, the session re-opens the cube at the new
+version and applies the update incrementally — unchanged slices are adopted
+in the result cache and served as hits, appended slices merge forward or
+recompute per ``stream.update_mode`` (DESIGN.md §16). ``--stream-max-updates
+N`` exits after N applied appends (how the CI smoke job bounds the loop).
+
   PYTHONPATH=src python -m repro.launch.run_pdf --slices 0 1 2 3 --shards 2
   PYTHONPATH=src python -m repro.launch.run_pdf --method grouping_ml --serial
   PYTHONPATH=src python -m repro.launch.run_pdf --spec run.json --resume
+  PYTHONPATH=src python -m repro.launch.run_pdf --source-path cube/ --watch
 """
 
 from __future__ import annotations
@@ -42,8 +51,14 @@ BASE_SPEC = PipelineSpec(
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     add_spec_args(ap)
+    ap.add_argument("--watch", action="store_true", help=(
+        "after the first run, poll the file cube's manifest version and "
+        "apply appends incrementally as they land (stream.* knobs govern "
+        "polling and update mode)"))
     args = ap.parse_args()
     spec = spec_from_args(args, base=BASE_SPEC)
+    if args.watch and spec.source.kind != "file":
+        ap.error("--watch requires a file source (--source-path)")
 
     session = PDFSession(spec)
     # the session's memoized hash: one manifest read for kind='file', and
@@ -58,6 +73,43 @@ def main():
     for a in assign_slices(slices, spec.execution.shards):
         print(f"[assign] shard {a.shard}: slices {list(a.slices)}")
 
+    _run_once(session, spec)
+    if args.watch:
+        _watch(session, spec)
+
+
+def _watch(session: PDFSession, spec: PipelineSpec) -> None:
+    """Poll the manifest version; on a bump, re-open the cube and run the
+    session again — adoption + merge/strict updates make the re-run cost
+    O(appended data) for cached/persisted slices."""
+    from repro.data.file_source import manifest_version
+
+    last_v = manifest_version(spec.source.path)
+    applied = 0
+    limit = spec.stream.max_updates
+    print(f"[watch] cube at version {last_v}; polling every "
+          f"{spec.stream.poll_interval_s}s"
+          + (f" (max {limit} update(s))" if limit else ""))
+    try:
+        while limit is None or applied < limit:
+            time.sleep(spec.stream.poll_interval_s)
+            try:
+                v = manifest_version(spec.source.path)
+            except (OSError, ValueError):
+                continue  # manifest mid-replace: next poll sees it whole
+            if v == last_v:
+                continue
+            print(f"[watch] manifest version {last_v} -> {v}: updating")
+            session.refresh_source()
+            print(f"[spec] hash={session.spec_hash} (version {v})")
+            _run_once(session, spec)
+            last_v = v
+            applied += 1
+    except KeyboardInterrupt:
+        print(f"[watch] stopped after {applied} update(s)")
+
+
+def _run_once(session: PDFSession, spec: PipelineSpec) -> None:
     window_durations: list[float] = []
 
     def on_window(ws):
@@ -92,6 +144,10 @@ def main():
     if spec.execution.cache_dir:
         print(f"[cache] hits={rep.cache_hits} misses={rep.cache_misses} "
               f"dir={spec.execution.cache_dir}")
+    if rep.cache_adopted or rep.slices_merged:
+        print(f"[stream] adopted={rep.cache_adopted} "
+              f"merged={rep.slices_merged} "
+              f"mode={spec.stream.update_mode}")
     if (rep.retries or rep.speculations or rep.quarantined_units
             or rep.shards_lost or spec.execution.fault_plan):
         print(f"[faults] retries={rep.retries} "

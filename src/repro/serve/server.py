@@ -71,6 +71,18 @@ from repro.runtime.monitor import StepMonitor, StragglerPolicy, percentiles
 _SHUTDOWN = object()
 
 
+@dataclass
+class _Invalidate:
+    """Control item for ``PDFServer.invalidate``: processed on the serving
+    thread (never mid-batch), so it can rewire the session and prune the
+    hot-window state without racing a launch."""
+
+    version: int | None
+    done: threading.Event
+    result: dict
+    error: BaseException | None = None
+
+
 class ServerOverloadedError(RuntimeError):
     """Raised by ``submit`` when the queue gauge is at
     ``serve.max_queue_depth``: load shedding — the caller should back off
@@ -299,6 +311,73 @@ class PDFServer:
         """Submit + wait."""
         return self.submit(q).result(timeout)
 
+    # -- streaming invalidation (DESIGN.md §16) --------------------------------
+
+    def invalidate(self, version: int | None = None,
+                   timeout: float | None = None) -> dict:
+        """Pick up an append to the served file cube without a restart.
+
+        Computes the chunk-diff from the version this server opened to
+        ``version`` (default: the cube's current manifest), re-opens the
+        source at the new version (re-hashing the spec), adopts cached
+        results for slices the diff proves untouched, and drops the
+        hot-window LRU / pending slice assemblies / known-stored marks for
+        exactly the changed slices — untouched slices keep serving from
+        memory bitwise-identically (their bytes are unchanged; that is what
+        the fingerprint check certifies).
+
+        Applied on the serving thread between batches: queries submitted
+        before the call are answered from pre-append state, queries after
+        see the new version. Returns ``{"old_version", "new_version",
+        "changed_slices", "adopted"}``. Requires a ``kind='file'`` source."""
+        self.raise_if_failed()
+        inv = _Invalidate(version, threading.Event(), {})
+        if self._thread is None or self._closed:
+            # not serving: no batch to race — apply inline (lets a server be
+            # invalidated before start(), e.g. warm-up flows)
+            self._apply_invalidate(inv)
+        else:
+            self._queue.put(inv)
+            if not inv.done.wait(timeout):
+                raise TimeoutError("invalidate not applied within timeout")
+        if inv.error is not None:
+            raise inv.error
+        return inv.result
+
+    def _apply_invalidate(self, inv: _Invalidate) -> None:
+        try:
+            src = self.session._file_source()
+            if src is None:
+                raise ValueError(
+                    "invalidate() requires a kind='file' source (appends "
+                    "land as manifest versions of an exported cube)")
+            from repro.data.file_source import chunk_diff
+
+            old_version = src.version
+            diff = chunk_diff(self.spec.source.path, old_version, inv.version)
+            changed = set(diff["changed_slices"])
+            adopted0 = self.session.cache_adopted
+            self.session.refresh_source()
+            if self.session.cache is not None:
+                self.session._adopt_unchanged(
+                    [s for s in range(self._geom.num_slices)
+                     if s not in changed])
+            for key in [k for k in self._lru if k[0] in changed]:
+                del self._lru[key]
+            for s in changed:
+                self._parts.pop(s, None)
+                self._stored_slices.discard(s)
+            inv.result.update(
+                old_version=old_version,
+                new_version=diff["new_version"],
+                changed_slices=sorted(changed),
+                adopted=self.session.cache_adopted - adopted0,
+            )
+        except BaseException as e:  # repro: allow[ERR]: parked — invalidate() re-raises it on the calling thread
+            inv.error = e
+        finally:
+            inv.done.set()
+
     def _resolve_span(self, q) -> _Pending:
         """Validate a query and map it to its within-slice point span plus
         the aligned windows covering it."""
@@ -341,7 +420,11 @@ class PDFServer:
                 item = self._queue.get()
                 if item is _SHUTDOWN:
                     break
+                if isinstance(item, _Invalidate):
+                    self._apply_invalidate(item)
+                    continue
                 batch = [item]
+                invs: list[_Invalidate] = []
                 stop = False
                 while True:  # free drain: whatever is already pending
                     try:
@@ -351,6 +434,11 @@ class PDFServer:
                     if nxt is _SHUTDOWN:
                         stop = True
                         break
+                    if isinstance(nxt, _Invalidate):
+                        # applied after this batch: queries submitted before
+                        # the invalidate are answered from pre-append state
+                        invs.append(nxt)
+                        continue
                     batch.append(nxt)
                 # The coalescing wait only pays off when a launch is coming:
                 # a batch fully covered by the hot-window LRU / known-stored
@@ -370,10 +458,15 @@ class PDFServer:
                         if nxt is _SHUTDOWN:
                             stop = True
                             break
+                        if isinstance(nxt, _Invalidate):
+                            invs.append(nxt)
+                            continue
                         batch.append(nxt)
                 with self._stats_lock:
                     self._depth -= len(batch)
                 self._serve_batch(batch)
+                for inv in invs:
+                    self._apply_invalidate(inv)
                 if stop:
                     break
         except BaseException as e:  # noqa: BLE001 — fail loudly (see below)
@@ -402,7 +495,13 @@ class PDFServer:
                 item = self._queue.get_nowait()
             except queue.Empty:
                 return
-            if item is not _SHUTDOWN and not item.future.done():
+            if item is _SHUTDOWN:
+                continue
+            if isinstance(item, _Invalidate):
+                item.error = exc
+                item.done.set()
+                continue
+            if not item.future.done():
                 item.future.set_exception(exc)
 
     def _bump(self, key: str, n: int = 1) -> None:
@@ -641,7 +740,9 @@ class PDFServer:
             avg_error=float(outs["error"].mean()),
             stats=[], slice_i=s, spec_hash=self.session.spec_hash,
         )
-        cache.store(result)
+        # deps-stamped like the session's stores, so invalidate() can adopt
+        # this entry across a later append when the slice's chunks survive
+        cache.store(result, deps=self.session._slice_deps(s))
         self._stored_slices.add(s)
         self._bump("slices_stored")
         del self._parts[s]

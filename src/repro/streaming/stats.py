@@ -1,0 +1,126 @@
+"""Per-window sufficient-statistic sidecars: the merge path's persistence.
+
+``StatsRecorder`` is the ``StagedExecutor.stats_recorder`` hook: for every
+full (non-sampled) window it snapshots the staged values *before* the fit
+donates the device buffer and writes one sidecar next to the window's
+persisted ``.npz``:
+
+    out_dir/slice{N}_stats_{line:05d}.npz
+        spec_hash, line_start, line_end, n, num_bins,
+        mean, s2, s3, s4, vmin, vmax      # float64 SuffStats per point
+        freq                              # int64 Eq.-5 counts per point
+
+Statistics are computed from the raw float32 values in float64 on the host
+(``suffstats_from_values``) — NOT inverted from the finalized float32
+moments — so the old side of a later merge carries no finalization
+round-trip error. The histogram counts are the pipeline's own
+``histogram_scatter`` over the window's (vmin, vmax) edges, stored as exact
+integers so ``merge_counts`` stays bitwise.
+
+Writes are tmp + atomic rename (the repo-wide discipline): a crashed write
+leaves no half-sidecar, and a missing/stale sidecar only costs the merge
+path a full-recompute fallback for that window — never correctness.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import tempfile
+import zipfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import pdf_error as pe
+from repro.streaming.moments import SuffStats, suffstats_from_values
+
+_STAT_FIELDS = ("mean", "s2", "s3", "s4", "vmin", "vmax")
+
+
+def stats_path(out_dir: str | Path, slice_i: int, line_start: int) -> Path:
+    return Path(out_dir) / f"slice{slice_i}_stats_{line_start:05d}.npz"
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_hist(num_bins: int):
+    return jax.jit(functools.partial(pe.histogram_scatter, num_bins=num_bins))
+
+
+class StatsRecorder:
+    """Callable hook ``(window, values, moments) -> None`` writing one
+    sidecar per window. Runs on the executor's compute thread; the write is
+    synchronous but tiny (a few arrays of the window's point count)."""
+
+    def __init__(self, out_dir: str | Path, num_bins: int,
+                 spec_hash: str | None = None):
+        self.out_dir = Path(out_dir)
+        self.num_bins = int(num_bins)
+        self.spec_hash = spec_hash
+        self.windows_recorded = 0
+
+    def __call__(self, w, values, moments) -> None:
+        freq = _jitted_hist(self.num_bins)(values, moments.vmin, moments.vmax)
+        # host copies before _select_and_fit donates the staged buffer
+        host = np.asarray(values)
+        freq = np.asarray(jax.block_until_ready(freq))
+        s = suffstats_from_values(host)
+        write_stats(self.out_dir, w.slice_i, w.line_start, w.line_end,
+                    s, np.rint(freq).astype(np.int64), self.num_bins,
+                    self.spec_hash)
+        self.windows_recorded += 1
+
+
+def write_stats(out_dir: str | Path, slice_i: int, line_start: int,
+                line_end: int, s: SuffStats, freq: np.ndarray,
+                num_bins: int, spec_hash: str | None) -> None:
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    f = stats_path(out, slice_i, line_start)
+    fd, tmp = tempfile.mkstemp(dir=out, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(
+                fh,
+                spec_hash=spec_hash or "",
+                line_start=line_start, line_end=line_end,
+                n=float(s.n), num_bins=num_bins, freq=freq,
+                **{name: np.asarray(getattr(s, name), np.float64)
+                   for name in _STAT_FIELDS},
+            )
+        os.replace(tmp, f)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def load_stats(out_dir: str | Path, slice_i: int, line_start: int,
+               spec_hash=None) -> dict | None:
+    """One window's sidecar as ``{"stats": SuffStats, "freq": int64 array,
+    "num_bins": int, "line_start"/"line_end": int}`` — or None when the
+    sidecar is missing, unreadable, or (when ``spec_hash`` is given) was
+    written under a different spec. ``spec_hash`` may be one hash or a
+    collection of acceptable hashes (the spec's manifest-version lineage —
+    see ``incremental.merge_slice``). None always means "fall back to a
+    full recompute of this window"."""
+    f = stats_path(out_dir, slice_i, line_start)
+    accept = ({spec_hash} if isinstance(spec_hash, str)
+              else set(spec_hash or ()))
+    try:
+        with np.load(f) as z:
+            if accept and str(z["spec_hash"]) not in accept | {""}:
+                return None
+            return {
+                "stats": SuffStats(float(z["n"]),
+                                   *(z[name] for name in _STAT_FIELDS)),
+                "freq": np.asarray(z["freq"], np.int64),
+                "num_bins": int(z["num_bins"]),
+                "line_start": int(z["line_start"]),
+                "line_end": int(z["line_end"]),
+            }
+    except (OSError, ValueError, KeyError, EOFError, zipfile.BadZipFile):
+        return None

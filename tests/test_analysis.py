@@ -243,6 +243,10 @@ MUTATIONS: dict[str, dict[str, object]] = {
         "window_cache_entries": 0, "request_deadline_s": 1.0,
         "max_queue_depth": 4, "retry_transient": 3,
     },
+    "stream": {
+        "update_mode": "strict", "persist_stats": True, "incremental": False,
+        "poll_interval_s": 7.5, "max_updates": 2,
+    },
 }
 
 # Fields that cannot be mutated in isolation on a valid default spec:
@@ -323,4 +327,4 @@ def test_hash_pin():
     """The default spec's hash — BENCH ``__specs__`` rows and on-disk cache
     entries key on it; an unintended change here silently invalidates every
     existing cache. Bump deliberately, with a SPEC_VERSION bump."""
-    assert PipelineSpec().content_hash() == "cb207f5072e44101"
+    assert PipelineSpec().content_hash() == "ec8162bb86328a20"

@@ -228,3 +228,60 @@ def test_prefetched_file_run_matches_serial(cube):
     r_ser = PDFSession(serial).run_all([1])[1]
     for f in RESULT_FIELDS:
         np.testing.assert_array_equal(getattr(r_pre, f), getattr(r_ser, f))
+
+
+# -- overwrite guard / versioned manifests (streaming, DESIGN.md §16) ----------
+
+
+def test_export_refuses_to_clobber_live_cube(tmp_path):
+    """Re-exporting over an existing cube would silently re-key every spec
+    hash derived from it: refused unless overwrite=True, and the refusal
+    happens before ANY chunk is written — the old cube survives untouched."""
+    d = tmp_path / "cube"
+    export_cube(SIM_SOURCE, d, lines_per_chunk=4)
+    before_manifest = (d / "manifest.json").read_bytes()
+    before_files = sorted(p.name for p in d.iterdir())
+
+    other = dataclasses.replace(SIM_SOURCE, seed=99)
+    with pytest.raises(FileExistsError, match="overwrite=True"):
+        export_cube(other, d, lines_per_chunk=4)
+    # nothing changed: same file set, manifest byte-identical
+    assert sorted(p.name for p in d.iterdir()) == before_files
+    assert (d / "manifest.json").read_bytes() == before_manifest
+
+    # explicit overwrite replaces the cube (and re-keys its sha)
+    old_sha = manifest_sha(d)
+    export_cube(other, d, lines_per_chunk=4, overwrite=True)
+    assert manifest_sha(d) != old_sha
+
+
+def test_export_into_manifestless_dir_is_allowed(tmp_path):
+    """A directory without a manifest (a crashed export's leftovers, or
+    just a plain dir) is not a cube — no guard, export proceeds."""
+    d = tmp_path / "cube"
+    d.mkdir()
+    (d / "stray.txt").write_text("not a cube")
+    spec = export_cube(SIM_SOURCE, d, lines_per_chunk=4)
+    assert build_source(spec).geometry.num_slices == 4
+
+
+def test_versioned_manifest_reads(tmp_path):
+    from repro.data.file_source import manifest_version
+    from repro.streaming import append_realizations
+
+    d = tmp_path / "cube"
+    export_cube(SIM_SOURCE, d, lines_per_chunk=4)
+    assert manifest_version(d) == 1
+    sha1 = manifest_sha(d)
+    block = np.zeros((SIM_SOURCE.lines_per_slice, SIM_SOURCE.points_per_line,
+                      3), np.float32)
+    assert append_realizations(d, {0: block}) == 2
+    assert manifest_version(d) == 2
+    # version pinning: the archived manifest is still addressable, and its
+    # sha is exactly what the live manifest hashed to before the append
+    assert manifest_sha(d, version=1) == sha1
+    assert manifest_sha(d) != sha1
+    assert read_manifest(d, version=1).get("version", 1) == 1
+    assert read_manifest(d, version=2)["version"] == 2
+    with pytest.raises(ValueError, match="no version 7"):
+        read_manifest(d, version=7)

@@ -374,6 +374,7 @@ def test_concurrent_store_lookup_under_eviction_pressure(tmp_path):
     expected = {i: fabricated(i) for i in range(8)}
     errors = []
     hits = [0]
+    writers_done = threading.Event()
 
     def writer(offset):
         try:
@@ -384,26 +385,160 @@ def test_concurrent_store_lookup_under_eviction_pressure(tmp_path):
             errors.append(e)
 
     def reader():
+        # keep polling until the writers finish (a fixed iteration count
+        # can burn through every lookup before the first store lands and
+        # see nothing but misses), with a floor so readers overlap each
+        # other even if the writers are already done
         try:
             with warnings.catch_warnings():
                 warnings.simplefilter("ignore")
-                for round_ in range(40):
+                round_ = 0
+                while round_ < 40 or not writers_done.is_set():
                     got = cache.lookup("lruhash", round_ % 8)
                     if got is not None:
                         hits[0] += 1
                         assert_bitwise_equal(expected[got.slice_i], got)
+                    round_ += 1
         except BaseException as e:  # noqa: BLE001
             errors.append(e)
 
-    threads = [threading.Thread(target=writer, args=(0,)),
-               threading.Thread(target=writer, args=(1,)),
-               threading.Thread(target=reader),
+    writers = [threading.Thread(target=writer, args=(0,)),
+               threading.Thread(target=writer, args=(1,))]
+    readers = [threading.Thread(target=reader),
                threading.Thread(target=reader)]
-    for t in threads:
+    for t in writers + readers:
         t.start()
-    for t in threads:
+    for t in writers:
+        t.join()
+    writers_done.set()
+    for t in readers:
         t.join()
     assert not errors, errors[0]
     assert hits[0] > 0  # the readers did exercise the hit path
+    # a last store's eviction pass skipped on sweep-lock contention can
+    # leave the dir briefly over cap; one quiesced store re-trims exactly
+    cache.store(expected[0])
     assert cache.size_bytes() <= cache.max_bytes
     assert cache.evictions > 0
+
+
+# -- chunk-dependency fingerprints / adoption (streaming appends) --------------
+
+
+DEPS = ("sha-a", "sha-b", "sha-c")
+
+
+def test_store_records_deps_and_deps_roundtrip(tmp_path):
+    cache = ResultCache(tmp_path / "cache")
+    cache.store(fabricated(0), deps=DEPS)
+    cache.store(fabricated(1))  # no deps: predates tracking / non-file
+    assert cache.deps("lruhash", 0) == DEPS
+    assert cache.deps("lruhash", 1) is None
+    assert cache.deps("lruhash", 9) is None  # missing entry
+    # deps never leak into the served SliceResult
+    got = cache.lookup("lruhash", 0)
+    assert got is not None
+    assert_bitwise_equal(fabricated(0), got)
+
+
+def test_adopt_rekeys_matching_fingerprint_bitwise(tmp_path):
+    cache = ResultCache(tmp_path / "cache")
+    cache.store(fabricated(2, spec_hash="oldhash"), deps=DEPS)
+    assert cache.adopt("oldhash", "newhash", 2, DEPS)
+    assert cache.adoptions == 1
+    got = cache.lookup("newhash", 2)
+    assert got is not None and got.spec_hash == "newhash"
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(fabricated(2), f), getattr(got, f), err_msg=f)
+    # the adopted entry carries the deps forward, and the old entry
+    # survives (adoption copies — other consumers may still hold old_hash)
+    assert cache.deps("newhash", 2) == DEPS
+    assert cache.lookup("oldhash", 2) is not None
+    # idempotent: target already exists
+    assert cache.adopt("oldhash", "newhash", 2, DEPS)
+    assert cache.adoptions == 1
+
+
+def test_adopt_refuses_unsound_rekeys(tmp_path):
+    cache = ResultCache(tmp_path / "cache")
+    cache.store(fabricated(3, spec_hash="oldhash"), deps=DEPS)
+    cache.store(fabricated(4, spec_hash="oldhash"))  # no deps recorded
+    # changed fingerprint: the slice's chunks were touched by the append
+    assert not cache.adopt("oldhash", "newhash", 3, ("sha-a", "sha-CHANGED"))
+    # no recorded deps: nothing proves the bytes are unchanged
+    assert not cache.adopt("oldhash", "newhash", 4, DEPS)
+    # empty expected fingerprint can prove nothing
+    assert not cache.adopt("oldhash", "newhash", 3, ())
+    # a plain missing source entry is a silent no (not a warning)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert not cache.adopt("ghosthash", "newhash", 3, DEPS)
+    assert cache.adoptions == 0
+    assert cache.lookup("newhash", 3) is None
+
+
+# -- cross-process eviction coordination (two handles, one dir) ----------------
+
+
+def test_foreign_sweep_lock_skips_eviction_pass(tmp_path):
+    """Two processes sharing one cache_dir: while one holds the root
+    ``.sweep.lock`` (a live eviction pass), the other's store skips its own
+    sweep — counted as a lock miss, never a hang or a double-trim."""
+    one = entry_size(tmp_path)
+    a = ResultCache(tmp_path / "cache", max_bytes=2 * one + one // 2)
+    b = ResultCache(tmp_path / "cache", max_bytes=2 * one + one // 2)
+    now = _time.time()
+    for i in (0, 1):
+        a.store(fabricated(i))
+        set_mtime(a, i, now - 100 + i)
+
+    # handle b "is mid-sweep": a fresh root lock that a must not break
+    sweep = tmp_path / "cache" / ".sweep.lock"
+    sweep.write_text(str(os.getpid()))
+    a.store(fabricated(2))  # over cap, but the sweep is foreign-held
+    assert a.lock_misses == 1
+    assert a.evictions == 0
+    assert a.lookup("lruhash", 0) is not None  # nothing was trimmed
+
+    sweep.unlink()  # the other process finished
+    a.store(fabricated(3))  # now the pass runs and trims to the cap
+    assert a.evictions > 0
+    assert a.size_bytes() <= a.max_bytes
+    assert b.lookup("lruhash", 3) is not None  # both handles stay coherent
+
+
+def test_eviction_skips_entry_dir_locked_by_concurrent_store(tmp_path):
+    """A per-entry ``.lock`` held by another process's in-flight store makes
+    the evictor skip that entry this pass (lock miss), trimming others."""
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=one + one // 2)
+    now = _time.time()
+    cache.store(fabricated(0, spec_hash="hash_a"))
+    os.utime(cache.path("hash_a", 0), (now - 100, now - 100))  # oldest
+    # another process is mid-store into hash_a's dir: fresh .lock
+    lock = tmp_path / "cache" / "hash_a" / ".lock"
+    lock.write_text(str(os.getpid()))
+    cache.store(fabricated(1, spec_hash="hash_b"))
+    # hash_a was due for eviction but locked: skipped, counted, kept
+    assert cache.lookup("hash_a", 0) is not None
+    assert cache.lock_misses >= 1
+    lock.unlink()
+    cache.store(fabricated(2, spec_hash="hash_c"))
+    assert cache.lookup("hash_a", 0) is None  # trimmed on the next pass
+    assert cache.size_bytes() <= cache.max_bytes
+
+
+def test_stale_sweep_lock_is_broken(tmp_path):
+    """A ``.sweep.lock`` older than LOCK_STALE_SECONDS belongs to a dead
+    process: the next eviction pass breaks it instead of skipping forever."""
+    one = entry_size(tmp_path)
+    cache = ResultCache(tmp_path / "cache", max_bytes=one + one // 2)
+    cache.store(fabricated(0))
+    sweep = tmp_path / "cache" / ".sweep.lock"
+    sweep.write_text("12345")
+    old = _time.time() - 3600
+    os.utime(sweep, (old, old))
+    cache.store(fabricated(1))  # breaks the dead lock, sweeps normally
+    assert cache.evictions > 0
+    assert cache.size_bytes() <= cache.max_bytes

@@ -1,0 +1,500 @@
+"""Streaming ingestion (DESIGN.md §16): append-able cubes, merge-able
+moments, chunk-granular incremental recompute.
+
+The tier-1 acceptance invariant lives here: after an append, an
+incremental run recomputes ONLY the slices whose chunks changed — every
+untouched slice is adopted in the result cache and served bitwise without
+building a single executor. ``update_mode="strict"`` recomputes changed
+slices bitwise-identical to a from-scratch run on the appended cube; the
+default ``"merge"`` keeps histograms bitwise-exact and moments within the
+pinned ``MERGE_ULP_BUDGET``, recording that tolerance in the watermark.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ComputeSpec,
+    ExecSpec,
+    PDFSession,
+    PipelineSpec,
+    ResultCache,
+    SourceSpec,
+    StreamSpec,
+)
+from repro.core import regions
+from repro.core.executor import RESULT_FIELDS
+from repro.data.file_source import (
+    FileCubeSource,
+    chunk_diff,
+    export_cube,
+    manifest_version,
+    read_manifest,
+    slice_chunk_shas,
+)
+from repro.streaming import (
+    MERGE_ULP_BUDGET,
+    append_realizations,
+    empty_suffstats,
+    merge_counts,
+    merge_counts_jnp,
+    merge_suffstats,
+    moments_from_suffstats,
+    suffstats_from_moments,
+    suffstats_from_values,
+    ulp_diff,
+)
+from repro.streaming.stats import load_stats
+
+SIM = SourceSpec(num_slices=3, lines_per_slice=4, points_per_line=6,
+                 observations=48)
+
+
+def make_cube(tmp_path, name="cube"):
+    return export_cube(SIM, tmp_path / name, lines_per_chunk=2)
+
+
+def make_spec(file_src, tmp_path, tag="", **stream_kw):
+    stream_kw.setdefault("persist_stats", True)
+    return PipelineSpec(
+        source=file_src,
+        compute=ComputeSpec(window_lines=2, num_bins=16),
+        execution=ExecSpec(cache_dir=str(tmp_path / f"cache{tag}"),
+                           out_dir=str(tmp_path / f"out{tag}")),
+        stream=StreamSpec(**stream_kw),
+    )
+
+
+def in_range_append(cube_path, slice_i, k=5):
+    """Per-point data strictly inside each point's existing [vmin, vmax]
+    (the midpoint, tiled k deep) — an append that cannot move the Eq.-5
+    edges, so the merge path's edge precondition holds by construction."""
+    src = FileCubeSource(cube_path)
+    g = src.geometry
+    w = regions.Window(slice_i, 0, g.lines_per_slice)
+    vals = src.load_window(w)  # (points_per_slice, n_obs)
+    mid = (vals.min(axis=1) + vals.max(axis=1)) / 2.0
+    block = np.repeat(mid[:, None], k, axis=1).astype(np.float32)
+    return block.reshape(g.lines_per_slice, g.points_per_line, k)
+
+
+def assert_fields_equal(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    assert a.avg_error == b.avg_error
+
+
+# -- merge math (deterministic unit tests; property tests with hypothesis
+#    live in test_streaming_properties.py) ------------------------------------
+
+
+def rand_parts(shape=(7,), counts=(12, 5, 9), seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(3.0, scale, shape + (k,)).astype(np.float32)
+            for k in counts]
+
+
+def test_empty_is_merge_identity():
+    (a,) = rand_parts(counts=(8,))
+    s = suffstats_from_values(a)
+    for merged in (merge_suffstats(empty_suffstats(s.mean.shape), s),
+                   merge_suffstats(s, empty_suffstats(s.mean.shape))):
+        for f_m, f_s in zip(merged, s):
+            np.testing.assert_array_equal(f_m, f_s)
+
+
+def test_merge_matches_from_scratch_within_budget():
+    parts = rand_parts()
+    merged = suffstats_from_values(parts[0])
+    for p in parts[1:]:
+        merged = merge_suffstats(merged, suffstats_from_values(p))
+    direct = suffstats_from_values(np.concatenate(parts, axis=-1))
+    assert merged.n == direct.n
+    np.testing.assert_array_equal(merged.vmin, direct.vmin)  # min/max exact
+    np.testing.assert_array_equal(merged.vmax, direct.vmax)
+    m_m = moments_from_suffstats(merged)
+    m_d = moments_from_suffstats(direct)
+    for name in ("mean", "var", "skew", "kurt"):
+        d = ulp_diff(getattr(m_m, name), getattr(m_d, name)).max()
+        assert d <= MERGE_ULP_BUDGET, f"{name}: {d} ulps"
+
+
+def test_merge_associativity_and_permutation():
+    a, b, c = (suffstats_from_values(p) for p in rand_parts(seed=3))
+    left = merge_suffstats(merge_suffstats(a, b), c)
+    right = merge_suffstats(a, merge_suffstats(b, c))
+    swapped = merge_suffstats(c, merge_suffstats(b, a))
+    base = moments_from_suffstats(left)
+    for other in (right, swapped):
+        mo = moments_from_suffstats(other)
+        for name in ("mean", "var", "skew", "kurt"):
+            d = ulp_diff(getattr(base, name), getattr(mo, name)).max()
+            assert d <= MERGE_ULP_BUDGET, f"{name}: {d} ulps"
+
+
+def test_degenerate_constant_partition_merges_finite():
+    const = np.full((4, 10), 2.5, np.float32)
+    more = np.full((4, 6), 2.5, np.float32)
+    merged = merge_suffstats(suffstats_from_values(const),
+                             suffstats_from_values(more))
+    m = moments_from_suffstats(merged)
+    for f in m:
+        assert np.isfinite(np.asarray(f)).all()
+    np.testing.assert_allclose(np.asarray(m.mean), 2.5)
+    np.testing.assert_allclose(np.asarray(m.var), 0.0)
+
+
+def test_suffstats_from_moments_roundtrip():
+    (a,) = rand_parts(counts=(40,), seed=7)
+    from repro.core.distributions import moments_from_values
+
+    m = moments_from_values(a)
+    s = suffstats_from_moments(m, a.shape[-1])
+    back = moments_from_suffstats(s)
+    for name in ("mean", "var", "skew", "kurt", "vmin", "vmax"):
+        d = ulp_diff(getattr(back, name), np.asarray(getattr(m, name))).max()
+        assert d <= MERGE_ULP_BUDGET, f"{name}: {d} ulps"
+
+
+def test_histogram_merge_is_exact_integer_addition():
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 1000, (6, 16)).astype(np.float32)
+    b = rng.integers(0, 1000, (6, 16)).astype(np.float32)
+    np.testing.assert_array_equal(merge_counts(a, b), a + b)
+    np.testing.assert_array_equal(np.asarray(merge_counts_jnp(a, b)), a + b)
+    with pytest.raises(ValueError, match="integral"):
+        merge_counts(a + 0.5, b)
+
+
+def test_split_histogram_bitwise_equals_one_pass():
+    """Eq.-5 counts over FIXED edges: binning two partitions separately and
+    adding is bitwise-equal to binning the concatenation — the exactness
+    the merge path's bitwise-histogram contract rests on."""
+    import jax.numpy as jnp
+
+    from repro.core import pdf_error as pe
+
+    rng = np.random.default_rng(11)
+    parts = [rng.uniform(0.0, 10.0, (5, k)).astype(np.float32)
+             for k in (30, 17, 4)]
+    allv = np.concatenate(parts, axis=-1)
+    vmin = jnp.asarray(allv.min(axis=1))
+    vmax = jnp.asarray(allv.max(axis=1))
+
+    def counts(v):
+        return np.rint(np.asarray(
+            pe.histogram_scatter(jnp.asarray(v), vmin, vmax, 16)
+        )).astype(np.int64)
+
+    summed = counts(parts[0])
+    for p in parts[1:]:
+        summed = merge_counts(summed, counts(p))
+    np.testing.assert_array_equal(summed, counts(allv))
+
+
+def test_fit_backends_carry_merge_callables():
+    from repro.core.fitting import get_fit_backend
+    from repro.streaming import moments as sm
+
+    ref = get_fit_backend("reference")
+    assert ref.merge_stats is sm.merge_suffstats
+    assert ref.merge_hist is sm.merge_counts
+    for name in ("kernels", "fused"):
+        b = get_fit_backend(name)
+        assert b.merge_stats is sm.merge_suffstats_jnp
+        assert b.merge_hist is sm.merge_counts_jnp
+
+
+# -- append-able cube format ---------------------------------------------------
+
+
+def test_append_bumps_version_and_old_version_still_opens(tmp_path):
+    src_spec = make_cube(tmp_path)
+    cube = src_spec.path
+    before = FileCubeSource(cube)
+    w = regions.Window(1, 0, 2)
+    old_window = before.load_window(w)
+
+    v2 = append_realizations(cube, {1: in_range_append(cube, 1, k=5)})
+    assert v2 == 2
+    assert manifest_version(cube) == 2
+
+    now = FileCubeSource(cube)
+    assert now.version == 2
+    assert now.slice_observations(1) == SIM.observations + 5
+    assert now.slice_observations(0) == SIM.observations
+    # appended observations are readable, and exactly the appended bytes
+    appended = now.load_window_obs(w, SIM.observations, SIM.observations + 5)
+    expected = in_range_append(cube, 1, k=5)  # deterministic midpoints
+    np.testing.assert_array_equal(
+        appended, expected[0:2].reshape(-1, 5))
+
+    # the archived version opens and reads bit-identically to before
+    old = FileCubeSource(cube, version=1)
+    assert old.version == 1
+    assert old.slice_observations(1) == SIM.observations
+    np.testing.assert_array_equal(old.load_window(w), old_window)
+
+
+def test_chunk_diff_reports_exactly_the_appended_slices(tmp_path):
+    cube = make_cube(tmp_path).path
+    m1 = read_manifest(cube)
+    append_realizations(cube, {2: in_range_append(cube, 2)})
+    diff = chunk_diff(cube, 1)
+    assert diff["changed_slices"] == [2]
+    assert all(c["slice"] == 2 for c in diff["new_chunks"])
+    # untouched slices keep their chunk fingerprint bit-for-bit
+    m2 = read_manifest(cube)
+    for s in (0, 1):
+        assert slice_chunk_shas(m1, s) == slice_chunk_shas(m2, s)
+    assert slice_chunk_shas(m1, 2) != slice_chunk_shas(m2, 2)
+
+
+def test_append_validates_inputs(tmp_path):
+    cube = make_cube(tmp_path).path
+    with pytest.raises(ValueError, match="empty"):
+        append_realizations(cube, {})
+    with pytest.raises(ValueError, match="outside"):
+        append_realizations(cube, {99: in_range_append(cube, 0)})
+    with pytest.raises(ValueError, match="shape"):
+        append_realizations(cube, {0: np.zeros((2, 2, 3), np.float32)})
+    assert manifest_version(cube) == 1  # failed appends commit nothing
+
+
+def test_repeated_appends_stack_versions(tmp_path):
+    cube = make_cube(tmp_path).path
+    append_realizations(cube, {0: in_range_append(cube, 0, k=3)})
+    append_realizations(cube, {0: in_range_append(cube, 0, k=2)})
+    assert manifest_version(cube) == 3
+    src = FileCubeSource(cube)
+    assert src.slice_observations(0) == SIM.observations + 5
+    # every archived version remains openable
+    for v in (1, 2, 3):
+        assert FileCubeSource(cube, version=v).version == v
+    diff = chunk_diff(cube, 1, 3)
+    assert diff["changed_slices"] == [0]
+
+
+# -- the tier-1 e2e incremental invariant --------------------------------------
+
+
+def test_incremental_run_recomputes_only_changed_slices(tmp_path):
+    """The PR's acceptance invariant, merge mode: after an append to one
+    slice, a second run adopts every untouched slice (served bitwise from
+    the cache), merges the appended slice from its stats sidecars, and
+    never builds an executor. Merged histograms are bitwise-equal to a
+    from-scratch run on the appended cube; merged moments are within the
+    pinned MERGE_ULP_BUDGET of it; the watermark records the tolerance."""
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path)
+
+    s1 = PDFSession(spec)
+    first = s1.run_all()
+    old_hash = s1.spec_hash
+    rep1 = s1.report()
+    assert rep1.cache_misses == 3 and rep1.cache_adopted == 0
+
+    append_realizations(cube, {1: in_range_append(cube, 1)})
+
+    s2 = PDFSession(spec)
+    assert s2.spec_hash != old_hash  # the manifest sha keys the hash
+    second = s2.run_all()
+    rep2 = s2.report()
+    # untouched slices 0/2 adopted then served as hits; slice 1 merged
+    assert rep2.cache_adopted == 2
+    assert rep2.cache_hits == 2
+    assert rep2.slices_merged == 1
+    assert rep2.cache_misses == 1  # slice 1 missed, then merged
+    # zero executors: no window was recomputed anywhere
+    assert not s2._executors
+    assert rep2.windows == 0
+    for s in (0, 2):
+        assert second[s].cached
+        assert_fields_equal(first[s], second[s])
+
+    # reference: a from-scratch run on the appended cube
+    fresh = PDFSession(make_spec(file_src, tmp_path, tag="_fresh"))
+    full = fresh.run_all()
+    merged, ref = second[1], full[1]
+    np.testing.assert_array_equal(merged.mean == merged.mean,
+                                  ref.mean == ref.mean)
+    for name in ("mean", "std", "skew", "kurt"):
+        d = ulp_diff(getattr(merged, name), getattr(ref, name)).max()
+        assert d <= MERGE_ULP_BUDGET, f"{name}: {d} ulps"
+    # merged sidecar histograms are bitwise-equal to the fresh run's
+    g = s2.geometry
+    for w in regions.iter_windows(g, 1, spec.compute.window_lines):
+        a = load_stats(spec.execution.out_dir, 1, w.line_start)
+        b = load_stats(fresh.spec.execution.out_dir, 1, w.line_start)
+        np.testing.assert_array_equal(a["freq"], b["freq"])
+        assert a["stats"].n == b["stats"].n == SIM.observations + 5
+
+    # merge-mode watermark records the tolerance + provenance
+    mark = json.loads(
+        (tmp_path / "out" / "slice1_watermark.json").read_text())
+    assert mark["spec_hash"] == s2.spec_hash
+    assert mark["merge_ulp_budget"] == MERGE_ULP_BUDGET
+    assert mark["merged_from"] == old_hash
+
+    # merged results are path-dependent: they must NEVER enter the cache
+    assert not ResultCache(spec.execution.cache_dir).path(
+        s2.spec_hash, 1).exists()
+
+
+def test_merge_survives_watermark_restamped_by_cache_hit(tmp_path):
+    """Appends landing on DIFFERENT slices across versions: when slice 2 is
+    adopted at v2, the cache-hit persist re-stamps its watermark at the v2
+    hash but leaves its stats sidecars with the v1 stamp (a hit carries no
+    SuffStats to rewrite them with). An append to slice 2 at v3 must still
+    merge — the sidecar is accepted under the spec's manifest-version
+    lineage, not just the watermark's own hash."""
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path)
+    PDFSession(spec).run_all()
+    append_realizations(cube, {1: in_range_append(cube, 1)})
+    PDFSession(spec).run_all()  # slice 2 adopted: watermark re-stamped at v2
+    append_realizations(cube, {2: in_range_append(cube, 2)})
+
+    s3 = PDFSession(spec)
+    third = s3.run_all([2])
+    rep = s3.report()
+    assert rep.slices_merged == 1 and rep.windows == 0
+    assert not s3._executors
+    # numerically the same merge contract as a one-version-back merge
+    fresh = PDFSession(make_spec(file_src, tmp_path, tag="_fresh"))
+    ref = fresh.run_all([2])[2]
+    for name in ("mean", "std", "skew", "kurt"):
+        d = ulp_diff(getattr(third[2], name), getattr(ref, name)).max()
+        assert d <= MERGE_ULP_BUDGET, f"{name}: {d} ulps"
+
+
+def test_strict_mode_recompute_is_bitwise(tmp_path):
+    """update_mode="strict": the changed slice goes back through the normal
+    executor — bitwise-identical to a from-scratch run on the appended
+    cube, and stored in the cache like any computed slice."""
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path, update_mode="strict")
+    PDFSession(spec).run_all()
+    append_realizations(cube, {1: in_range_append(cube, 1)})
+
+    s2 = PDFSession(spec)
+    second = s2.run_all()
+    rep2 = s2.report()
+    assert rep2.cache_adopted == 2 and rep2.slices_merged == 0
+    assert rep2.windows == 2  # exactly slice 1's windows recomputed
+
+    fresh = PDFSession(make_spec(file_src, tmp_path, tag="_fresh",
+                                 update_mode="strict"))
+    full = fresh.run_all()
+    assert_fields_equal(second[1], full[1])
+    assert second[1].spec_hash == full[1].spec_hash
+    # strict results are bitwise-reproducible, so they DO enter the cache
+    assert ResultCache(spec.execution.cache_dir).path(
+        s2.spec_hash, 1).exists()
+
+
+def test_out_of_range_append_falls_back_to_full_recompute(tmp_path):
+    """An append whose values move a point's (vmin, vmax) makes the old
+    Eq.-5 counts unusable: the merge refuses and the slice recomputes in
+    full — correctness never depends on the merge succeeding."""
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path)
+    PDFSession(spec).run_all()
+    rng = np.random.default_rng(9)
+    wild = rng.normal(100.0, 50.0,
+                      (SIM.lines_per_slice, SIM.points_per_line, 5))
+    append_realizations(cube, {1: wild.astype(np.float32)})
+
+    s2 = PDFSession(spec)
+    second = s2.run_all()
+    rep2 = s2.report()
+    assert rep2.cache_adopted == 2 and rep2.slices_merged == 0
+    assert rep2.windows == 2  # full recompute of the changed slice
+
+    fresh = PDFSession(make_spec(file_src, tmp_path, tag="_fresh"))
+    assert_fields_equal(second[1], fresh.run_all()[1])
+
+
+def test_incremental_disabled_skips_adoption(tmp_path):
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path, incremental=False,
+                     update_mode="strict")
+    PDFSession(spec).run_all()
+    append_realizations(cube, {1: in_range_append(cube, 1)})
+    s2 = PDFSession(spec)
+    s2.run_all()
+    rep = s2.report()
+    assert rep.cache_adopted == 0
+    assert rep.cache_misses == 3  # everything recomputes
+
+
+def test_refresh_source_follows_appends(tmp_path):
+    """session.refresh_source() (the --watch / serve-invalidate hook)
+    re-opens the cube at the new version and re-hashes the spec."""
+    file_src = make_cube(tmp_path)
+    cube = file_src.path
+    spec = make_spec(file_src, tmp_path)
+    s = PDFSession(spec)
+    h1 = s.spec_hash
+    s.run_all()
+    append_realizations(cube, {0: in_range_append(cube, 0)})
+    h2 = s.refresh_source()
+    assert h2 != h1 and s.spec_hash == h2
+    assert s._file_source().version == 2
+    assert not s._executors  # old executors pinned the old version
+    res = s.run_all()
+    rep = s.report()
+    assert rep.cache_adopted == 2 and rep.slices_merged == 1
+    assert res[0].spec_hash == h2
+
+
+# -- StreamSpec / spec versioning ----------------------------------------------
+
+
+def test_stream_spec_validates():
+    with pytest.raises(ValueError, match="update_mode"):
+        StreamSpec(update_mode="yolo")
+    with pytest.raises(ValueError, match="poll_interval_s"):
+        StreamSpec(poll_interval_s=0.0)
+    with pytest.raises(ValueError, match="max_updates"):
+        StreamSpec(max_updates=0)
+
+
+def test_stream_section_is_not_hashed():
+    base = PipelineSpec()
+    varied = dataclasses.replace(
+        base, stream=StreamSpec(update_mode="strict", persist_stats=True,
+                                incremental=False, poll_interval_s=9.0,
+                                max_updates=3))
+    assert varied.content_hash() == base.content_hash()
+
+
+def test_spec_roundtrip_carries_stream_section():
+    spec = PipelineSpec(stream=StreamSpec(update_mode="strict",
+                                          poll_interval_s=2.5))
+    back = PipelineSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.stream.update_mode == "strict"
+
+
+def test_previous_spec_version_loads_with_stream_defaults():
+    """Forward-compat shim: a SPEC_VERSION-1 JSON (pre-stream) loads with a
+    warning and the stream section at its defaults."""
+    from repro.api.spec import SPEC_VERSION
+
+    spec = PipelineSpec()
+    d = json.loads(spec.to_json())
+    d["version"] = SPEC_VERSION - 1
+    del d["stream"]
+    with pytest.warns(UserWarning, match="'stream' section takes its defaults"):
+        back = PipelineSpec.from_json(json.dumps(d))
+    assert back.stream == StreamSpec()
+    assert back.content_hash() == spec.content_hash()

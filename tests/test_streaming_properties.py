@@ -1,0 +1,140 @@
+"""Property tests for the streaming merge math (streaming/moments.py).
+
+All comparisons are same-precision (float64 merge tree vs float64 merge
+tree, or float64 merge vs float64 from-scratch): comparing a merge against
+the *pipeline's* float32 single-pass path mixes in the pipeline's own
+cancellation noise, which is unbounded on adversarial ill-conditioned
+inputs — that cross-precision regime is covered by the e2e test on real
+cube data (test_streaming.py), not by adversarial property search.
+
+The tolerance is the PINNED ``MERGE_ULP_BUDGET`` constant — never a value
+recomputed from an observed run.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional 'test' extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.streaming import (
+    MERGE_ULP_BUDGET,
+    empty_suffstats,
+    merge_counts,
+    merge_suffstats,
+    moments_from_suffstats,
+    suffstats_from_values,
+    ulp_diff,
+)
+
+# Partitions of well-conditioned float32 observations: bounded magnitude
+# and a floor on the partition size keep the *reference* side (a single
+# float64 pass) meaningful — the budget bounds merge-tree rounding, not
+# catastrophic cancellation both sides would share.
+values = st.floats(-100.0, 100.0, allow_nan=False, width=32)
+
+
+def partition(min_size=1, max_size=24):
+    return st.lists(values, min_size=min_size, max_size=max_size)
+
+
+def to_arr(part):
+    return np.asarray(part, np.float32).reshape(1, -1)
+
+
+def assert_moments_close(a, b):
+    ma, mb = moments_from_suffstats(a), moments_from_suffstats(b)
+    for name in ("mean", "var", "skew", "kurt", "vmin", "vmax"):
+        va = np.asarray(getattr(ma, name))
+        vb = np.asarray(getattr(mb, name))
+        # ulp distance degenerates across zero (every float between -x and
+        # +x counts), so near-cancelled moments get an absolute floor of
+        # one f32 epsilon — noise below representable granularity at unit
+        # scale is "equal" for a float32 pipeline.
+        ok = (ulp_diff(va, vb) <= MERGE_ULP_BUDGET) | (np.abs(va - vb) <= 2.0**-23)
+        assert ok.all(), f"{name}: {ulp_diff(va, vb).max()} ulps over budget"
+
+
+@settings(max_examples=200, deadline=None, derandomize=True)
+@given(partition(), partition(), partition())
+def test_merge_is_associative(p1, p2, p3):
+    a, b, c = (suffstats_from_values(to_arr(p)) for p in (p1, p2, p3))
+    left = merge_suffstats(merge_suffstats(a, b), c)
+    right = merge_suffstats(a, merge_suffstats(b, c))
+    assert left.n == right.n
+    np.testing.assert_array_equal(left.vmin, right.vmin)  # min/max exact
+    np.testing.assert_array_equal(left.vmax, right.vmax)
+    assert_moments_close(left, right)
+
+
+@settings(max_examples=200, deadline=None, derandomize=True)
+@given(st.lists(partition(), min_size=2, max_size=5), st.randoms())
+def test_merge_is_permutation_invariant(parts, rnd):
+    stats = [suffstats_from_values(to_arr(p)) for p in parts]
+    inorder = stats[0]
+    for s in stats[1:]:
+        inorder = merge_suffstats(inorder, s)
+    shuffled = list(stats)
+    rnd.shuffle(shuffled)
+    other = shuffled[0]
+    for s in shuffled[1:]:
+        other = merge_suffstats(other, s)
+    assert inorder.n == other.n
+    assert_moments_close(inorder, other)
+
+
+@settings(max_examples=200, deadline=None, derandomize=True)
+@given(st.lists(partition(), min_size=1, max_size=4))
+def test_merge_tree_matches_from_scratch(parts):
+    merged = suffstats_from_values(to_arr(parts[0]))
+    for p in parts[1:]:
+        merged = merge_suffstats(merged, suffstats_from_values(to_arr(p)))
+    direct = suffstats_from_values(
+        np.concatenate([to_arr(p) for p in parts], axis=-1))
+    assert merged.n == direct.n
+    np.testing.assert_array_equal(merged.vmin, direct.vmin)
+    np.testing.assert_array_equal(merged.vmax, direct.vmax)
+    assert_moments_close(merged, direct)
+
+
+@settings(max_examples=100, deadline=None, derandomize=True)
+@given(partition())
+def test_empty_partition_is_identity(p):
+    s = suffstats_from_values(to_arr(p))
+    e = empty_suffstats(s.mean.shape)
+    for left, right in ((merge_suffstats(e, s), s),
+                        (merge_suffstats(s, e), s)):
+        assert left.n == right.n
+        for f_l, f_r in zip(left[1:], right[1:]):
+            np.testing.assert_array_equal(f_l, f_r)
+
+
+@settings(max_examples=100, deadline=None, derandomize=True)
+@given(values, partition(min_size=2), partition(min_size=2))
+def test_degenerate_constant_partitions_stay_finite(c, p1, p2):
+    const1 = np.full((1, len(p1)), np.float32(c))
+    const2 = np.full((1, len(p2)), np.float32(c))
+    merged = merge_suffstats(suffstats_from_values(const1),
+                             suffstats_from_values(const2))
+    m = moments_from_suffstats(merged)
+    for f in m:
+        assert np.isfinite(np.asarray(f)).all()
+    np.testing.assert_array_equal(np.asarray(m.vmin), np.float32(c))
+    np.testing.assert_array_equal(np.asarray(m.vmax), np.float32(c))
+
+
+bins = st.integers(1, 16)
+
+
+@settings(max_examples=200, deadline=None, derandomize=True)
+@given(bins, st.data())
+def test_histogram_merge_exact_and_order_free(num_bins, data):
+    """Per-partition integer bin counts (same fixed edges) merge exactly —
+    elementwise int64 sums — in any order and association."""
+    count_arr = st.lists(st.integers(0, 2**23), min_size=num_bins,
+                         max_size=num_bins)
+    parts = [np.asarray(data.draw(count_arr), np.int64) for _ in range(3)]
+    fwd = merge_counts(merge_counts(parts[0], parts[1]), parts[2])
+    rev = merge_counts(parts[2], merge_counts(parts[1], parts[0]))
+    np.testing.assert_array_equal(fwd, sum(parts))
+    np.testing.assert_array_equal(rev, sum(parts))
