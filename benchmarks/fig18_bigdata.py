@@ -10,6 +10,15 @@ grows 10x while ML's advantage persists."""
 
 from __future__ import annotations
 
+import os
+import re
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
 from repro.core import distributions as d
 from benchmarks.common import Row, run_method, small_sim, train_type_tree
 
@@ -47,4 +56,60 @@ def run(quick: bool = True):
             "representative rows only, so grouping survives Set3 — an "
             "intentional substrate improvement, see EXPERIMENTS.md)")
     )
+    rows.extend(weak_scaling_rows())
+    return rows
+
+
+def weak_scaling_rows() -> list[Row]:
+    """``cluster/weak_scaling_{N}proc``: N real ``run_pdf`` worker processes
+    (one ``jax.distributed`` seat each, 1 CPU device each) over N slices —
+    fixed work per process, wall clock per whole launch. The paper's
+    weak-scaling shape (Fig. 13 at cluster granularity). Tracked, NOT gated:
+    interpreter startup dominates at this reduced scale, so the row's value
+    is trend visibility — a topology regression (workers serializing on a
+    peer's shard, the marker protocol blocking the exit path) shows up as a
+    wall-time jump against the per-process baseline."""
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"),
+               JAX_PLATFORMS="cpu", JAX_NUM_CPU_DEVICES="1",
+               XLA_FLAGS="--xla_force_host_platform_device_count=1")
+    rows: list[Row] = []
+    base_wall = None
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = Path(tmp) / "compile-cache"  # shared: measure run, not XLA
+        for nprocs in (1, 2, 4):
+            with socket.socket() as s:
+                s.bind(("127.0.0.1", 0))
+                coord = f"127.0.0.1:{s.getsockname()[1]}"
+            flags = [
+                "--num-slices", str(nprocs), "--lines", "6", "--ppl", "10",
+                "--obs", "80", "--method", "grouping", "--window-lines", "3",
+                "--num-bins", "20", "--slices",
+                *[str(i) for i in range(nprocs)],
+                "--out-dir", str(Path(tmp) / f"out{nprocs}"),
+                "--compile-cache-dir", str(cache),
+                "--num-processes", str(nprocs), "--coordinator", coord,
+            ]
+            t0 = time.perf_counter()
+            procs = [subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.run_pdf", *flags,
+                 "--process-id", str(i)],
+                env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                text=True) for i in range(nprocs)]
+            outs = [p.communicate()[0] for p in procs]
+            wall = time.perf_counter() - t0
+            name = f"cluster/weak_scaling_{nprocs}proc"
+            if any(p.returncode != 0 for p in procs):
+                rows.append(Row(name, 0.0,
+                                "SKIPPED: worker failed (platform cannot "
+                                "run a jax.distributed coordinator)"))
+                continue
+            if base_wall is None:
+                base_wall = wall
+            eff = base_wall / wall if wall > 0 else 0.0
+            m = re.search(r"hash=([0-9a-f]{16})", outs[0])
+            rows.append(Row(
+                name, wall * 1e6,
+                f"efficiency={eff:.2f} (1.0 = perfect weak scaling)",
+                spec_hash=m.group(1) if m else ""))
     return rows

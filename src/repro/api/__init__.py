@@ -21,6 +21,7 @@ from repro.api.spec import (
     ExecSpec,
     MethodSpec,
     PipelineSpec,
+    PlacementSpec,
     ServeSpec,
     SourceSpec,
     StreamSpec,
@@ -37,6 +38,7 @@ __all__ = [
     "MethodSpec",
     "PDFSession",
     "PipelineSpec",
+    "PlacementSpec",
     "ResultCache",
     "ServeSpec",
     "SessionReport",

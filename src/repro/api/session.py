@@ -66,6 +66,17 @@ class SessionReport:
     speculations: int = 0
     quarantined_units: int = 0
     shards_lost: tuple[int, ...] = ()
+    # Cold-start visibility (DESIGN.md §17): process-wide XLA activity
+    # since the session was constructed (jax.monitoring deltas, via
+    # runtime.cluster.compile_counters — concurrent sessions in one process
+    # share the counters). ``compiles`` fires on persistent-cache hits too
+    # (XLA still enters its compile path), so the "zero new traces"
+    # cold-start assertion is ``compile_cache_misses == 0`` with
+    # ``ExecSpec.compile_cache_dir`` enabled.
+    traces: int = 0
+    compiles: int = 0
+    compile_cache_hits: int = 0
+    compile_cache_misses: int = 0
     shard_reports: dict[int, list[ExecutorReport]] = field(default_factory=dict)
     # Per-stage latency percentiles over every completed unit (seconds):
     # {"load"|"compute"|"persist": {"p50": ..., "p99": ...}} — from the
@@ -118,6 +129,17 @@ class PDFSession:
         # repeat that (and a manifest swapped mid-run must not split the
         # session across two hashes).
         self._spec_hash = spec.content_hash()
+        # Cold-start elimination (DESIGN.md §17): the persistent XLA
+        # compilation cache, keyed under <compile_cache_dir>/<spec_hash> so
+        # a re-launched identical spec serves every executable from disk.
+        # Enabled before any executor compiles; the counter baseline makes
+        # report() deltas session-scoped.
+        from repro.runtime import cluster as _cluster
+
+        if spec.execution.compile_cache_dir:
+            _cluster.enable_compilation_cache(
+                spec.execution.compile_cache_dir, self._spec_hash)
+        self._compile_baseline = _cluster.compile_counters()
         self.cache = (ResultCache(spec.execution.cache_dir,
                                   max_bytes=spec.execution.cache_max_bytes,
                                   injector=self.injector)
@@ -184,6 +206,15 @@ class PDFSession:
             source = self.source
             if self.injector is not None:
                 source = self.injector.wrap_source(source, shard=shard)
+            sharding = None
+            if self.spec.execution.placement.shard_devices is not None:
+                from repro.runtime import cluster
+
+                # the per-shard device placement seam: stage this shard's
+                # windows onto its pinned local device (bitwise-invariant —
+                # same executable, same inputs, different queue)
+                sharding = cluster.device_placement(
+                    self.spec.execution.placement, shard)
             recorder = None
             if (self.spec.stream.persist_stats
                     and self.spec.execution.out_dir is not None):
@@ -197,6 +228,7 @@ class PDFSession:
                 source,
                 tree=self.tree,
                 out_dir=self.spec.execution.out_dir,
+                sharding=sharding,
                 exec_config=self.spec.exec_config(),
                 spec_hash=self.spec_hash,
                 injector=self.injector,
@@ -286,7 +318,13 @@ class PDFSession:
                 except ShardLostError:
                     # The batch form of a transient failure: the shard is
                     # gone, its unfinished slices get re-dealt below over
-                    # whoever survives (runtime/elastic.plan_redeal).
+                    # whoever survives (runtime/elastic.plan_redeal). In
+                    # pinned single-shard mode (a cluster worker) there is
+                    # nobody else in this process — the death propagates so
+                    # the cross-process protocol (runtime/cluster) can
+                    # publish the lost marker and let survivors redeal.
+                    if exe.shard is not None:
+                        raise
                     lost.append(a.shard)
                     pending.extend(a.slices[i:])
                     dead = True
@@ -305,6 +343,29 @@ class PDFSession:
                 for s in plan.slices_for(h):
                     yield self._run_one(
                         self.executor(h), h, s, redeal_resume, on_window)
+
+    def run_local(
+        self,
+        slices,
+        shard: int | None = None,
+        resume: bool | None = None,
+        on_window: Callable | None = None,
+    ) -> Iterator[SliceResult]:
+        """Run an explicit slice list on ONE shard's executor, bypassing the
+        round-robin deal — the redeal seam ``runtime.cluster`` uses: a
+        survivor (or join-only worker) takes its ``plan_redeal`` share here,
+        where ``run(slices=...)`` would re-deal the list over all shards and
+        skip the ones not pinned to this process. ``resume`` defaults to
+        True when an out_dir exists (windows a dead shard persisted are
+        skipped; recomputed windows are bitwise-identical)."""
+        if shard is None:
+            shard = self.spec.execution.shard or 0
+        if resume is None:
+            resume = bool(self.spec.execution.resume
+                          or self.spec.execution.out_dir is not None)
+        for s in slices:
+            yield self._run_one(self.executor(shard), shard, s, resume,
+                                on_window)
 
     def _run_one(self, ex: StagedExecutor, shard: int, s: int,
                  resume: bool, on_window: Callable | None) -> SliceResult:
@@ -451,7 +512,8 @@ class PDFSession:
 
         geom, s = self.geometry, result.slice_i
         persist = PersistStage(out_dir, async_writes=False,
-                               spec_hash=self.spec_hash)
+                               spec_hash=self.spec_hash,
+                               total_lines=geom.lines_per_slice)
         mark = 0
         if resume:
             info = persist.watermark_info(s)
@@ -509,10 +571,17 @@ class PDFSession:
                 retries += r.retries
                 speculations += r.speculations
                 quarantined += r.quarantined
+        from repro.runtime import cluster as _cluster
+
+        compile_delta = _cluster.counters_delta(self._compile_baseline)
         return SessionReport(
             spec_hash=self.spec_hash,
             slices_done=self._slices_done,
             windows=windows,
+            traces=compile_delta["traces"],
+            compiles=compile_delta["compiles"],
+            compile_cache_hits=compile_delta["persistent_cache_hits"],
+            compile_cache_misses=compile_delta["persistent_cache_misses"],
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
             cache_adopted=self.cache_adopted,

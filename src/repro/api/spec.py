@@ -53,7 +53,11 @@ from repro.core.executor import (
 # incremental recompute). Staging-only, so version-2 specs upgrade in place:
 # ``from_dict`` loads them with ``stream`` defaults and a warning (the
 # forward-compat shim), not an error.
-SPEC_VERSION = 3
+# Version 4: the ``execution.placement`` section (PlacementSpec —
+# multi-process cluster execution) and ``execution.compile_cache_dir``
+# (persistent XLA compilation cache). Staging-only again, so version-2/3
+# specs upgrade in place through the same shim.
+SPEC_VERSION = 4
 
 MODES = ("faithful", "fused")
 SOURCE_KINDS = ("simulation", "external", "file")
@@ -331,6 +335,69 @@ class ComputeSpec:
 
 
 @dataclass(frozen=True)
+class PlacementSpec:
+    """Multi-process placement (``runtime.cluster``, DESIGN.md §17): how
+    many worker processes form the mesh, where the ``jax.distributed``
+    coordinator lives, which process this is, and (optionally) which local
+    device each shard's executor stages onto. Staging-only like the rest of
+    ``ExecSpec`` — slices are whole-slice partitions computed independently
+    per process (the paper's per-node assignment), so any placement produces
+    bitwise-identical results to the single-process run.
+
+    ``process_id >= num_processes`` marks a *join-only* worker: it takes no
+    initial assignment and no seat in the ``jax.distributed`` world (whose
+    size is fixed at init), but participates in the marker/redeal protocol —
+    the grow half of elastic execution (shrink is shard death + redeal)."""
+
+    num_processes: int = field(default=1, metadata=_meta(
+        "worker processes in the cluster run (1 = single-process)", hashed=False,
+        type_=int))
+    process_id: int | None = field(default=None, metadata=_meta(
+        "this process's id (0-based; >= num_processes joins as extra "
+        "capacity for redeal only)", hashed=False, type_=int))
+    coordinator: str = field(default="127.0.0.1:12723", metadata=_meta(
+        "host:port of the jax.distributed coordinator (process 0)", hashed=False,
+        type_=str))
+    distributed: bool = field(default=True, metadata=_meta(
+        "initialize jax.distributed across the processes (off = marker "
+        "protocol only, no coordination service)", hashed=False, type_=bool))
+    shard_devices: tuple[int, ...] | None = field(default=None, metadata=_meta(
+        "local device index per shard (round-robin when shorter; default: "
+        "the backend's default device)", hashed=False, type_=int, nargs="+"))
+    redeal: bool = field(default=True, metadata=_meta(
+        "survivors re-deal a dead process's unfinished slices "
+        "(runtime.elastic.plan_redeal over the done/lost markers)", hashed=False,
+        type_=bool))
+    peer_timeout_s: float = field(default=120.0, metadata=_meta(
+        "how long a finished worker waits for peers' done/lost markers "
+        "before treating a silent peer as lost", hashed=False, type_=float))
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError(
+                f"placement.num_processes must be >= 1, got {self.num_processes}")
+        if self.process_id is not None and self.process_id < 0:
+            raise ValueError(
+                f"placement.process_id must be >= 0, got {self.process_id}")
+        host, sep, port = self.coordinator.rpartition(":")
+        if not (host and sep and port.isdigit()):
+            raise ValueError(
+                f"placement.coordinator must be 'host:port', "
+                f"got {self.coordinator!r}")
+        if self.shard_devices is not None:
+            sd = tuple(self.shard_devices)
+            object.__setattr__(self, "shard_devices", sd)
+            if not sd or any((not isinstance(d, int)) or d < 0 for d in sd):
+                raise ValueError(
+                    f"placement.shard_devices must be non-empty non-negative "
+                    f"ints, got {sd}")
+        if not self.peer_timeout_s > 0:
+            raise ValueError(
+                f"placement.peer_timeout_s must be > 0, "
+                f"got {self.peer_timeout_s}")
+
+
+@dataclass(frozen=True)
 class ExecSpec:
     """Execution strategy: slice assignment, staging, persistence, resume.
     Excluded from ``content_hash`` — none of these change per-point results
@@ -381,6 +448,17 @@ class ExecSpec:
     fault_plan: str | None = field(default=None, metadata=_meta(
         "JSON FaultPlan file for deterministic fault injection (chaos "
         "testing; runtime.faults)", hashed=False, type_=str, flag="--fault-plan"))
+    # Cluster execution + cold-start elimination (DESIGN.md §17). Both
+    # staging-only: placement deals whole slices to independent processes
+    # (bitwise by the per-slice independence contract) and the compilation
+    # cache only skips re-compiling executables that would be identical.
+    compile_cache_dir: str | None = field(default=None, metadata=_meta(
+        "persistent XLA compilation cache root: executables cached under "
+        "<dir>/<spec_hash>, so a re-launched identical spec never "
+        "re-compiles (runtime.cluster)", hashed=False, type_=str,
+        flag="--compile-cache-dir"))
+    placement: PlacementSpec = field(default=PlacementSpec(), metadata=_meta(
+        "multi-process placement (see execution.placement)", hashed=False))
 
     def __post_init__(self):
         if self.cache_max_bytes is not None and self.cache_max_bytes <= 0:
@@ -417,6 +495,11 @@ class ExecSpec:
             raise ValueError(
                 f"execution.straggler_grace_s must be >= 0, "
                 f"got {self.straggler_grace_s}")
+        if self.placement.num_processes > 1 and self.out_dir is None:
+            raise ValueError(
+                "execution.placement.num_processes > 1 requires "
+                "execution.out_dir: processes share results and the "
+                "done/lost marker protocol through it")
 
 
 @dataclass(frozen=True)
@@ -537,6 +620,7 @@ _GROUPS: tuple[tuple[str, type, str], ...] = (
     ("method.tree", TreeSpec, "tree-"),
     ("compute", ComputeSpec, ""),
     ("execution", ExecSpec, ""),
+    ("execution.placement", PlacementSpec, ""),
     ("serve", ServeSpec, ""),
     ("stream", StreamSpec, ""),
 )
@@ -590,16 +674,19 @@ class PipelineSpec:
             if name in d:
                 parts[name] = _sub_from_dict(sub_cls, d.pop(name), name)
         version = d.pop("version", SPEC_VERSION)
-        if version == SPEC_VERSION - 1:
-            # Forward-compat shim: version 3 only ADDED the staging-only
-            # ``stream`` section, so a version-2 spec is a valid version-3
-            # spec with stream defaults. Note the upgrade DOES change the
-            # spec's content_hash (the version feeds the hash payload) —
-            # persisted watermarks from the old build won't resume against
-            # it, which is exactly the resume-mismatch detection working.
+        if version in (2, 3):
+            # Forward-compat shim: versions 3 and 4 only ADDED staging-only
+            # surface (v3: the ``stream`` section; v4: ``execution.placement``
+            # + ``execution.compile_cache_dir``), so an older spec is a valid
+            # version-4 spec with the new knobs defaulted. Note the upgrade
+            # DOES change the spec's content_hash (the version feeds the hash
+            # payload) — persisted watermarks from the old build won't resume
+            # against it, which is exactly the resume-mismatch detection
+            # working.
             warnings.warn(
                 f"upgrading spec from version {version} to {SPEC_VERSION}: "
-                "the new 'stream' section takes its defaults", stacklevel=2)
+                "the sections/fields added since take their defaults",
+                stacklevel=2)
             version = SPEC_VERSION
         if d:
             raise ValueError(f"unknown spec keys: {sorted(d)}")
@@ -676,6 +763,8 @@ def _sub_from_dict(cls, d: dict, path: str):
         v = d.pop(f.name)
         if f.name == "tree":
             v = _sub_from_dict(TreeSpec, v, f"{path}.tree")
+        elif f.name == "placement":
+            v = _sub_from_dict(PlacementSpec, v, f"{path}.placement")
         elif isinstance(v, list):
             v = tuple(v)
         kwargs[f.name] = v

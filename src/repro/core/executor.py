@@ -516,10 +516,15 @@ class PersistStage:
     def __init__(self, out_dir: str | Path | None, async_writes: bool = True,
                  monitor: StepMonitor | None = None,
                  spec_hash: str | None = None,
-                 injector=None):
+                 injector=None,
+                 total_lines: int | None = None):
         self.out_dir = Path(out_dir) if out_dir else None
         self.monitor = monitor
         self.spec_hash = spec_hash  # stamped into every .npz + watermark
+        # Lines per slice, when the caller knows it: lets the watermark
+        # carry an explicit ``complete`` stamp (the cluster redeal scan's
+        # recovery line) instead of readers re-deriving it from geometry.
+        self.total_lines = total_lines
         self.injector = injector  # faults.FaultInjector (on_persist hook)
         self.seconds = 0.0
         self.writes = 0
@@ -598,8 +603,11 @@ class PersistStage:
             self.out_dir / f"slice{slice_i}_window_{w.line_start:05d}.npz",
             line_start=w.line_start, line_end=w.line_end, **extra, **arrays,
         )
+        mark: dict = {"next_line": int(w.line_end), **extra}
+        if self.total_lines is not None:
+            mark["complete"] = int(w.line_end) >= self.total_lines
         (self.out_dir / f"slice{slice_i}_watermark.json").write_text(
-            json.dumps({"next_line": int(w.line_end), **extra})
+            json.dumps(mark)
         )
 
     # -- lifecycle ------------------------------------------------------------
@@ -1139,6 +1147,7 @@ class StagedExecutor:
             monitor=self.monitors["persist"],
             spec_hash=self.spec_hash,
             injector=self.injector,
+            total_lines=geom.lines_per_slice,
         )
 
         outs = {

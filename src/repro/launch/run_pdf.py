@@ -60,6 +60,17 @@ def main():
     if args.watch and spec.source.kind != "file":
         ap.error("--watch requires a file source (--source-path)")
 
+    from repro.runtime import cluster
+
+    spec = cluster.apply_placement(spec)
+    pl = spec.execution.placement
+    if cluster.init_distributed(pl):
+        print(f"[cluster] jax.distributed process {pl.process_id}/"
+              f"{pl.num_processes} coordinator={pl.coordinator}")
+    elif pl.process_id is not None and pl.process_id >= pl.num_processes:
+        print(f"[cluster] join-only worker {pl.process_id} "
+              f"(world of {pl.num_processes}) — redeal pickup only")
+
     session = PDFSession(spec)
     # the session's memoized hash: one manifest read for kind='file', and
     # the banner can never disagree with the hash keying the run/cache
@@ -115,8 +126,18 @@ def _run_once(session: PDFSession, spec: PipelineSpec) -> None:
     def on_window(ws):
         window_durations.append(ws.load_seconds + ws.compute_seconds)
 
+    pl = spec.execution.placement
+    cluster_mode = pl.num_processes > 1 or (
+        pl.process_id is not None and pl.process_id >= pl.num_processes)
+    if cluster_mode:
+        from repro.runtime import cluster
+
+        results = cluster.run_worker(session, on_window=on_window, log=print)
+    else:
+        results = session.run(on_window=on_window)
+
     t0 = time.perf_counter()
-    for r in session.run(on_window=on_window):
+    for r in results:
         if r.cached:
             print(f"[slice {r.slice_i}] E={r.avg_error:.4f} served from "
                   f"result cache (spec {r.spec_hash})")
@@ -154,6 +175,16 @@ def _run_once(session: PDFSession, spec: PipelineSpec) -> None:
               f"speculations={rep.speculations} "
               f"quarantined={rep.quarantined_units} "
               f"shards_lost={len(rep.shards_lost)}")
+    # cold-start visibility: with --compile-cache-dir, "new_compilations"
+    # counts persistent-cache misses (executables built fresh) — a warm
+    # relaunch of an identical spec reports new_compilations=0; without the
+    # cache it counts backend compiles outright
+    new_compilations = (rep.compile_cache_misses
+                        if spec.execution.compile_cache_dir else rep.compiles)
+    print(f"[compile] traces={rep.traces} compiled={rep.compiles} "
+          f"cache_hits={rep.compile_cache_hits} "
+          f"cache_misses={rep.compile_cache_misses} "
+          f"new_compilations={new_compilations}")
     if window_durations:
         med = sorted(window_durations)[len(window_durations) // 2]
         print(f"[total] wall={wall:.3f}s windows={rep.windows} "

@@ -82,14 +82,19 @@ def plan_redeal(
     pending_slices: Sequence[int],
     healthy_shards: Sequence[int],
     lost_shards: Sequence[int] = (),
+    joined: Sequence[int] = (),
 ) -> RedealPlan:
     """Re-deal a dead shard's unfinished slices over the healthy shards.
 
     Round-robin in the given slice order, mirroring ``assign_slices`` — the
-    re-deal stays balanced to within one slice. Raises when no healthy
-    shard remains: with every worker dead there is no degraded mode, the
-    run must fail loudly."""
-    healthy = tuple(dict.fromkeys(healthy_shards))
+    re-deal stays balanced to within one slice. ``joined`` adds shards that
+    were NOT part of the original deal (grown capacity: an idle shard of a
+    widened mesh, or a cluster join-only worker) — they take redealt slices
+    exactly like survivors, which is the grow half of elastic execution.
+    Raises when no shard (healthy or joined) remains: with every worker
+    dead and nobody joining there is no degraded mode, the run must fail
+    loudly."""
+    healthy = tuple(dict.fromkeys([*healthy_shards, *joined]))
     if not healthy:
         raise ValueError(
             f"cannot re-deal slices {tuple(pending_slices)}: no healthy "

@@ -101,6 +101,22 @@ def is_transient(exc: BaseException) -> bool:
     return False
 
 
+def shard_lost_from(exc: BaseException) -> ShardLostError | None:
+    """The ``ShardLostError`` in ``exc``'s ``__cause__`` chain, or None.
+
+    Cluster workers (``runtime.cluster.run_worker``) classify a failed run
+    with this: shard death — possibly wrapped by a prefetch/persist layer —
+    publishes a ``lost`` marker and hands recovery to the survivors, while
+    any other exception is a real crash that must propagate."""
+    seen: set[int] = set()
+    while exc is not None and id(exc) not in seen:
+        seen.add(id(exc))
+        if isinstance(exc, ShardLostError):
+            return exc
+        exc = exc.__cause__
+    return None
+
+
 # -- the plan ------------------------------------------------------------------
 
 

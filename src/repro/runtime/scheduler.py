@@ -100,6 +100,7 @@ class SliceScheduler:
         shard: int | None = None,
         resume: bool = False,
         on_window: Callable | None = None,
+        joined: Sequence[int] = (),
     ) -> Mapping[int, object]:
         """Execute the assignment; returns {slice -> SliceResult} merged
         over the shards that ran.
@@ -115,6 +116,9 @@ class SliceScheduler:
         ``elastic.plan_redeal`` and run there (with ``resume=True``, so
         windows the dead shard already persisted are skipped). One level
         only — a shard dying during its re-dealt work propagates.
+        ``joined`` names shards outside the original deal that may take
+        redealt slices (grown capacity — executors for them come from the
+        same factory).
         """
         results: dict[int, object] = {}
         self.last_reports = {}
@@ -139,7 +143,7 @@ class SliceScheduler:
                 pending.extend(s for s in a.slices if s not in results)
         if lost:
             self.lost_shards = tuple(lost)
-            plan = elastic.plan_redeal(pending, healthy, lost)
+            plan = elastic.plan_redeal(pending, healthy, lost, joined=joined)
             self.last_redeal = plan
             for h in plan.healthy_shards:
                 redealt = plan.slices_for(h)

@@ -236,7 +236,12 @@ MUTATIONS: dict[str, dict[str, object]] = {
         "cache_max_bytes": {"cache_max_bytes": 100, "cache_dir": "/tmp/c"},
         "max_retries": 3, "retry_backoff_s": 0.1, "speculate": False,
         "straggler_grace_s": 2.0, "degraded_mode": False,
-        "fault_plan": "plan.json",
+        "fault_plan": "plan.json", "compile_cache_dir": "/tmp/cc",
+    },
+    "execution.placement": {
+        "num_processes": 2, "process_id": 0,
+        "coordinator": "127.0.0.1:23456", "distributed": False,
+        "shard_devices": (0,), "redeal": False, "peer_timeout_s": 5.0,
     },
     "serve": {
         "tick_seconds": 0.002, "max_batch_windows": 16, "coalesce": False,
@@ -260,6 +265,14 @@ def _apply(spec: PipelineSpec, path: str, **mut) -> PipelineSpec:
     if path == "method.tree":
         return replace(spec, method=replace(
             spec.method, tree=replace(spec.method.tree, **mut)))
+    if path == "execution.placement":
+        pl = replace(spec.execution.placement, **mut)
+        # num_processes > 1 is only valid with a shared out_dir (markers
+        # and results live there); out_dir is un-hashed too, so supplying
+        # one keeps the mutation's hash behavior attributable to ``mut``.
+        out_dir = spec.execution.out_dir if pl.num_processes == 1 else "/tmp/x"
+        return replace(spec, execution=replace(
+            spec.execution, placement=pl, out_dir=out_dir))
     return replace(spec, **{path: replace(getattr(spec, path), **mut)})
 
 
@@ -274,6 +287,8 @@ def _iter_spec_fields():
         for fld in fields(cls):
             if path == "method" and fld.name == "tree":
                 continue  # covered field-by-field via the method.tree group
+            if path == "execution" and fld.name == "placement":
+                continue  # covered via the execution.placement group
             yield path, fld
 
 
@@ -327,4 +342,4 @@ def test_hash_pin():
     """The default spec's hash — BENCH ``__specs__`` rows and on-disk cache
     entries key on it; an unintended change here silently invalidates every
     existing cache. Bump deliberately, with a SPEC_VERSION bump."""
-    assert PipelineSpec().content_hash() == "ec8162bb86328a20"
+    assert PipelineSpec().content_hash() == "64aa94238649ed57"

@@ -165,7 +165,7 @@ def test_json_roundtrip_hypothesis():
             ),
         )
 
-    @settings(max_examples=200, deadline=None)
+    @settings(max_examples=200)
     @given(specs())
     def inner(spec):
         back = PipelineSpec.from_json(spec.to_json())

@@ -283,6 +283,89 @@ def test_all_shards_lost_is_fatal():
         PDFSession(spec, fault_injector=inj).run_all([0])
 
 
+def test_plan_redeal_joined_grows_capacity():
+    """The grow half of elastic execution: ``joined`` shards take redealt
+    slices round-robin alongside survivors, and when every original shard
+    died a joiner alone keeps the run alive."""
+    plan = elastic.plan_redeal([4, 7, 9], healthy_shards=[0],
+                               lost_shards=[1], joined=[5])
+    assert plan.healthy_shards == (0, 5)
+    assert plan.slices_for(0) == (4, 9)
+    assert plan.slices_for(5) == (7,)
+    solo = elastic.plan_redeal([1, 2], healthy_shards=[],
+                               lost_shards=[0], joined=[9])
+    assert solo.slices_for(9) == (1, 2)
+    # duplicate join of an already-healthy shard is a no-op, not a double seat
+    dup = elastic.plan_redeal([1, 2], healthy_shards=[0, 2],
+                              lost_shards=[1], joined=[0])
+    assert dup.healthy_shards == (0, 2)
+
+
+def _cluster_spec(out_dir, pid, num_processes=2, peer_timeout_s=30.0):
+    from repro.api.spec import PlacementSpec
+    from repro.runtime import cluster
+
+    return cluster.apply_placement(make_spec(execution=ExecSpec(
+        out_dir=str(out_dir), **FAST_RETRY,
+        placement=PlacementSpec(
+            num_processes=num_processes, process_id=pid, distributed=False,
+            peer_timeout_s=peer_timeout_s),
+    )))
+
+
+def test_cluster_redeal_survivor_completes_bitwise(clean, tmp_path):
+    """The cross-process redeal protocol (runtime.cluster) driven
+    in-process: worker 1's shard dies on its first window load and
+    publishes a ``lost`` marker; worker 0 finishes its own deal, sees the
+    marker, re-deals the dead shard's unfinished slices onto itself and
+    completes them bitwise-identical, with ``shards_lost`` stamped in the
+    report."""
+    from repro.runtime import cluster
+
+    out = tmp_path / "out"
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("shard_death", shard=1, after_units=0),
+    )))
+    s1 = PDFSession(_cluster_spec(out, pid=1), fault_injector=inj)
+    died = list(cluster.run_worker(s1))
+    assert died == []  # nothing completed before the death
+    assert cluster.marker_path(out, 1, "lost").exists()
+    assert inj.events["shard_death"] >= 1
+
+    s0 = PDFSession(_cluster_spec(out, pid=0))
+    results = {r.slice_i: r for r in cluster.run_worker(s0)}
+    # shard 0's own deal (0, 2) plus the dead shard's (1,)
+    assert set(results) == {0, 1, 2}
+    for s in (0, 1, 2):
+        assert not results[s].degraded
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    assert s0.shards_lost == (1,)
+    assert s0.report().shards_lost == (1,)
+    assert cluster.marker_path(out, 0, "done").exists()
+
+
+def test_cluster_joiner_completes_when_all_originals_die(clean, tmp_path):
+    """A join-only worker (process_id >= num_processes) enters at the
+    redeal step: with every original seat dead or silent past the peer
+    timeout, ``plan_redeal(joined=...)`` hands it the whole pending set and
+    it completes the run alone, bitwise-identical."""
+    from repro.runtime import cluster
+
+    out = tmp_path / "out"
+    inj = FaultInjector(FaultPlan(rules=(
+        FaultRule("shard_death", shard=0, after_units=0),
+    )))
+    s0 = PDFSession(_cluster_spec(out, pid=0), fault_injector=inj)
+    assert list(cluster.run_worker(s0)) == []
+    # shard 1 never starts — the joiner's peer timeout declares it lost
+    joiner = PDFSession(_cluster_spec(out, pid=2, peer_timeout_s=0.3))
+    results = {r.slice_i: r for r in cluster.run_worker(joiner)}
+    assert set(results) == {0, 1, 2}
+    for s in (0, 1, 2):
+        assert_bitwise(results[s], clean[s], f"slice{s}/")
+    assert joiner.shards_lost == (0, 1)
+
+
 # -- corrupt chunk bytes / verified reads --------------------------------------
 
 

@@ -486,15 +486,34 @@ def test_spec_roundtrip_carries_stream_section():
 
 
 def test_previous_spec_version_loads_with_stream_defaults():
-    """Forward-compat shim: a SPEC_VERSION-1 JSON (pre-stream) loads with a
-    warning and the stream section at its defaults."""
-    from repro.api.spec import SPEC_VERSION
+    """Forward-compat shim: a version-2 JSON (pre-stream, pre-placement)
+    loads with a warning and the missing sections at their defaults."""
+    from repro.api.spec import PlacementSpec
 
     spec = PipelineSpec()
     d = json.loads(spec.to_json())
-    d["version"] = SPEC_VERSION - 1
+    d["version"] = 2
     del d["stream"]
-    with pytest.warns(UserWarning, match="'stream' section takes its defaults"):
+    del d["execution"]["placement"]
+    del d["execution"]["compile_cache_dir"]
+    with pytest.warns(UserWarning, match="upgrading spec from version 2"):
         back = PipelineSpec.from_json(json.dumps(d))
     assert back.stream == StreamSpec()
+    assert back.execution.placement == PlacementSpec()
+    assert back.content_hash() == spec.content_hash()
+
+
+def test_version_3_spec_loads_with_placement_defaults():
+    """A version-3 JSON (has stream, pre-placement) upgrades in place."""
+    from repro.api.spec import PlacementSpec
+
+    spec = PipelineSpec()
+    d = json.loads(spec.to_json())
+    d["version"] = 3
+    del d["execution"]["placement"]
+    del d["execution"]["compile_cache_dir"]
+    with pytest.warns(UserWarning, match="upgrading spec from version 3"):
+        back = PipelineSpec.from_json(json.dumps(d))
+    assert back.execution.placement == PlacementSpec()
+    assert back.execution.compile_cache_dir is None
     assert back.content_hash() == spec.content_hash()

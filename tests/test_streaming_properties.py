@@ -9,6 +9,10 @@ cube data (test_streaming.py), not by adversarial property search.
 
 The tolerance is the PINNED ``MERGE_ULP_BUDGET`` constant — never a value
 recomputed from an observed run.
+
+Derandomization and per-example deadlines come from the hypothesis
+profiles registered in conftest.py ("ci" is the default; set
+HYPOTHESIS_PROFILE=dev for randomized local exploration).
 """
 
 import numpy as np
@@ -55,7 +59,7 @@ def assert_moments_close(a, b):
         assert ok.all(), f"{name}: {ulp_diff(va, vb).max()} ulps over budget"
 
 
-@settings(max_examples=200, deadline=None, derandomize=True)
+@settings(max_examples=200)
 @given(partition(), partition(), partition())
 def test_merge_is_associative(p1, p2, p3):
     a, b, c = (suffstats_from_values(to_arr(p)) for p in (p1, p2, p3))
@@ -67,7 +71,7 @@ def test_merge_is_associative(p1, p2, p3):
     assert_moments_close(left, right)
 
 
-@settings(max_examples=200, deadline=None, derandomize=True)
+@settings(max_examples=200)
 @given(st.lists(partition(), min_size=2, max_size=5), st.randoms())
 def test_merge_is_permutation_invariant(parts, rnd):
     stats = [suffstats_from_values(to_arr(p)) for p in parts]
@@ -83,7 +87,7 @@ def test_merge_is_permutation_invariant(parts, rnd):
     assert_moments_close(inorder, other)
 
 
-@settings(max_examples=200, deadline=None, derandomize=True)
+@settings(max_examples=200)
 @given(st.lists(partition(), min_size=1, max_size=4))
 def test_merge_tree_matches_from_scratch(parts):
     merged = suffstats_from_values(to_arr(parts[0]))
@@ -97,7 +101,7 @@ def test_merge_tree_matches_from_scratch(parts):
     assert_moments_close(merged, direct)
 
 
-@settings(max_examples=100, deadline=None, derandomize=True)
+@settings(max_examples=100)
 @given(partition())
 def test_empty_partition_is_identity(p):
     s = suffstats_from_values(to_arr(p))
@@ -109,7 +113,7 @@ def test_empty_partition_is_identity(p):
             np.testing.assert_array_equal(f_l, f_r)
 
 
-@settings(max_examples=100, deadline=None, derandomize=True)
+@settings(max_examples=100)
 @given(values, partition(min_size=2), partition(min_size=2))
 def test_degenerate_constant_partitions_stay_finite(c, p1, p2):
     const1 = np.full((1, len(p1)), np.float32(c))
@@ -126,7 +130,7 @@ def test_degenerate_constant_partitions_stay_finite(c, p1, p2):
 bins = st.integers(1, 16)
 
 
-@settings(max_examples=200, deadline=None, derandomize=True)
+@settings(max_examples=200)
 @given(bins, st.data())
 def test_histogram_merge_exact_and_order_free(num_bins, data):
     """Per-partition integer bin counts (same fixed edges) merge exactly —
